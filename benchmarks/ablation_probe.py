@@ -1,0 +1,71 @@
+"""Ablation beyond the paper: probe sample count N and probe-model
+choice (§3.2.3 'Why N=3?' — the paper asserts, we measure).
+
+sigma generalises to (|{a_1..a_N}|-1)/(N-1); the router maps
+sigma=0 -> single, sigma=1 -> full, else arena_lite. Larger N buys a
+finer difficulty signal at linear probe cost; a stronger probe model
+shifts the sigma=0 mass up (more consensus) but costs more per probe.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import ARENA3, csv_line, write_json
+from repro.configs.acar import ACARConfig
+from repro.core.backends import paper_backends
+from repro.core.orchestrator import ACAROrchestrator
+from repro.data.tasks import paper_suite
+
+OUT = Path("experiments/bench/ablation_probe.json")
+
+
+def run(seed: int = 0, verbose: bool = True,
+        n_values=(1, 2, 3, 5, 7),
+        probes=("gemini-2.0-flash", "gpt-4o")) -> dict:
+    tasks = paper_suite(seed=seed)
+    backs = paper_backends()
+    out = {"by_n": {}, "by_probe": {}}
+    for n in n_values:
+        acfg = ACARConfig(seed=seed, n_probe_samples=n)
+        orch = ACAROrchestrator(acfg, backs["gemini-2.0-flash"],
+                                {m: backs[m] for m in ARENA3},
+                                run_id=f"ablate_n{n}")
+        outs = orch.run_suite(tasks)
+        acc = float(np.mean([o.correct for o in outs]))
+        cost = float(sum(o.trace.cost for o in outs))
+        full = np.mean([o.trace.mode == "full_arena" for o in outs])
+        out["by_n"][str(n)] = {"accuracy": acc, "cost": cost,
+                               "full_arena_rate": float(full)}
+    for probe in probes:
+        acfg = ACARConfig(seed=seed)
+        orch = ACAROrchestrator(acfg, backs[probe],
+                                {m: backs[m] for m in ARENA3},
+                                run_id=f"ablate_probe_{probe}")
+        outs = orch.run_suite(tasks)
+        out["by_probe"][probe] = {
+            "accuracy": float(np.mean([o.correct for o in outs])),
+            "cost": float(sum(o.trace.cost for o in outs)),
+        }
+    write_json(OUT, out)
+    if verbose:
+        for n, r in out["by_n"].items():
+            print(f"  N={n}: acc {r['accuracy']:.3f} "
+                  f"cost ${r['cost']:.2f} "
+                  f"full-arena {r['full_arena_rate']:.2f}")
+        for p, r in out["by_probe"].items():
+            print(f"  probe={p}: acc {r['accuracy']:.3f} "
+                  f"cost ${r['cost']:.2f}")
+    return out
+
+
+def main() -> str:
+    t = run(verbose=False)
+    accs = {n: r["accuracy"] for n, r in t["by_n"].items()}
+    best = max(accs, key=accs.get)
+    return csv_line("ablation_probe", 0.0, f"best_N={best}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Calibration report: every paper target vs the simulator's output.
+
+Used while fitting the SyntheticBackend profile + task-suite difficulty
+constants; re-run after any constant change:
+
+    PYTHONPATH=src:. python -m benchmarks.calibrate
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_all_configs
+from repro.data.tasks import PAPER_MIX
+
+TARGETS = {
+    "acc/single_model": 0.454,
+    "acc/arena_2": 0.544,
+    "acc/acar_u": 0.556,
+    "acc/arena_3": 0.636,
+    "acc/acar_uj": 0.524,
+    "sigma0/overall": 0.329,
+    "sigma05/overall": 0.213,
+    "sigma1/overall": 0.458,
+    "sigma0/supergpqa": 0.42,
+    "full_arena/matharena": 0.93,
+    "full_arena/livecodebench": 0.96,
+    "acar_u/supergpqa": 0.605,
+    "acar_u/livecodebench": 0.515,
+    "acar_u/reasoning_gym": 0.46,
+    "acar_u/matharena": 0.267,
+    "retrieval_delta": -0.034,
+}
+
+
+def report(seed: int = 0) -> dict:
+    runs = run_all_configs(seed=seed)
+    out = {}
+    for name in ("single_model", "arena_2", "acar_u", "arena_3",
+                 "acar_uj"):
+        out[f"acc/{name}"] = runs[name].accuracy
+    u = runs["acar_u"].outcomes
+    sig = np.array([o.trace.sigma for o in u])
+    out["sigma0/overall"] = float((sig == 0.0).mean())
+    out["sigma05/overall"] = float((sig == 0.5).mean())
+    out["sigma1/overall"] = float((sig == 1.0).mean())
+    for bench in PAPER_MIX:
+        sel = [o for o in u if o.trace.benchmark == bench]
+        s = np.array([o.trace.sigma for o in sel])
+        out[f"sigma0/{bench}"] = float((s == 0.0).mean())
+        out[f"full_arena/{bench}"] = float((s == 1.0).mean())
+        out[f"acar_u/{bench}"] = float(
+            np.mean([o.correct for o in sel]))
+    out["retrieval_delta"] = runs["acar_uj"].accuracy \
+        - runs["acar_u"].accuracy
+    out["cost/single"] = runs["single_model"].cost
+    out["cost/arena_2"] = runs["arena_2"].cost
+    out["cost/acar_u"] = runs["acar_u"].cost
+    out["cost/arena_3"] = runs["arena_3"].cost
+    return out
+
+
+def main():
+    got = report()
+    print(f"{'metric':26s} {'got':>8s} {'target':>8s} {'diff':>8s}")
+    for k, t in TARGETS.items():
+        g = got.get(k, float("nan"))
+        print(f"{k:26s} {g:8.3f} {t:8.3f} {g - t:+8.3f}")
+    print("\nextra:")
+    for k in sorted(got):
+        if k not in TARGETS:
+            print(f"  {k:24s} {got[k]:8.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Shared benchmark runner.
+
+Runs the paper's five configurations (Single-Model / Arena-2 / Arena-3 /
+ACAR-U / ACAR-UJ) over the 1,510-task synthetic suite through the real
+orchestrator + TEAMLLM substrate, writing immutable runs.jsonl artifacts
+(paper Appendix B layout) and caching summarised outcomes so every
+table/figure benchmark reads the same runs.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.acar import ACAR_U, ACAR_UJ, ACARConfig
+from repro.core.backends import paper_backends
+from repro.core.orchestrator import ACAROrchestrator, TaskOutcome, \
+    run_fixed_mode
+from repro.core.retrieval import Experience, ExperienceStore
+from repro.data.tasks import PAPER_MIX, Task, paper_suite
+from repro.teamllm.artifacts import ArtifactStore
+
+ART_DIR = Path("experiments/artifacts")
+PROBE = "gemini-2.0-flash"
+ARENA2 = ["claude-sonnet-4", "gpt-4o"]
+ARENA3 = ["claude-sonnet-4", "gpt-4o", "gemini-2.0-flash"]
+
+# paper's experience store: 837 entries, built from held-out history
+STORE_SIZE = 837
+
+
+@dataclass
+class ConfigRun:
+    name: str
+    outcomes: List[TaskOutcome]
+    wall_s: float
+
+    @property
+    def accuracy(self) -> float:
+        return float(np.mean([o.correct for o in self.outcomes]))
+
+    @property
+    def cost(self) -> float:
+        return float(sum(o.trace.cost for o in self.outcomes))
+
+    def accuracy_by_benchmark(self) -> Dict[str, float]:
+        by: Dict[str, List[bool]] = {}
+        for o in self.outcomes:
+            by.setdefault(o.trace.benchmark, []).append(o.correct)
+        return {k: float(np.mean(v)) for k, v in by.items()}
+
+
+def experience_store(seed: int = 1) -> ExperienceStore:
+    """837-entry store built from a held-out pseudo-history (different
+    task seed -> weakly related texts, the paper's low-similarity
+    regime)."""
+    store = ExperienceStore()
+    hist = paper_suite(seed=seed)
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(len(hist), size=STORE_SIZE, replace=False)
+    for i in idx:
+        t = hist[i]
+        store.add(Experience(t.text, t.gold, bool(rng.random() < 0.6),
+                             t.benchmark))
+    return store
+
+
+def run_all_configs(tasks: Optional[Sequence[Task]] = None,
+                    seed: int = 0,
+                    art_dir: Path = ART_DIR) -> Dict[str, ConfigRun]:
+    tasks = list(tasks if tasks is not None else paper_suite(seed=seed))
+    backs = paper_backends()
+    art_dir.mkdir(parents=True, exist_ok=True)
+    runs: Dict[str, ConfigRun] = {}
+
+    def timed(name, fn):
+        t0 = time.perf_counter()
+        out = fn()
+        runs[name] = ConfigRun(name, out, time.perf_counter() - t0)
+
+    def store_for(name):
+        p = art_dir / name / "runs.jsonl"
+        if p.exists():
+            p.unlink()
+        return ArtifactStore(p)
+
+    timed("single_model", lambda: run_fixed_mode(
+        tasks, backs, ["claude-sonnet-4"], store=store_for("single"),
+        seed=seed, run_id="single"))
+    timed("arena_2", lambda: run_fixed_mode(
+        tasks, backs, ARENA2, store=store_for("arena2"), seed=seed,
+        run_id="arena2"))
+    timed("arena_3", lambda: run_fixed_mode(
+        tasks, backs, ARENA3, store=store_for("arena3"), seed=seed,
+        run_id="arena3"))
+
+    acfg_u = ACARConfig(seed=seed)
+    orch_u = ACAROrchestrator(
+        acfg_u, backs[PROBE],
+        {m: backs[m] for m in ARENA3},
+        store=store_for("phase22_acar_u"), run_id="acar_u")
+    timed("acar_u", lambda: orch_u.run_suite(tasks))
+
+    acfg_uj = ACARConfig(seed=seed, retrieval_enabled=True,
+                         retrieval_threshold=0.0)
+    orch_uj = ACAROrchestrator(
+        acfg_uj, backs[PROBE],
+        {m: backs[m] for m in ARENA3},
+        store=store_for("phase22_acar_uj"),
+        experience=experience_store(), run_id="acar_uj")
+    timed("acar_uj", lambda: orch_uj.run_suite(tasks))
+    return runs
+
+
+_CACHE: Dict[int, Dict[str, ConfigRun]] = {}
+
+
+def cached_runs(seed: int = 0) -> Dict[str, ConfigRun]:
+    if seed not in _CACHE:
+        _CACHE[seed] = run_all_configs(seed=seed)
+    return _CACHE[seed]
+
+
+def csv_line(name: str, us_per_call: float, derived) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def write_json(path: Path, obj) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(obj, indent=1, default=float))

@@ -1,0 +1,154 @@
+"""Paper Figures 1, 5, 6, 7, 8, 9 — regenerated from the decision
+traces of the cached runs (all data, no plotting backend needed; each
+figure's numbers are written to experiments/bench/)."""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import (
+    cached_runs, csv_line, experience_store, write_json)
+from repro.core.sigma import MODE_NAMES
+from repro.data.tasks import PAPER_MIX, paper_suite
+
+BENCH_DIR = Path("experiments/bench")
+
+PAPER_FIG1 = {"0.0": 0.329, "0.5": 0.213, "1.0": 0.458}
+PAPER_FIG5 = {"supergpqa_single": 0.42, "matharena_full": 0.93,
+              "livecodebench_full": 0.96}
+PAPER_FIG6_FULL_ARENA_AVOIDED = 0.542
+PAPER_FIG9_MEDIAN_SIM = 0.167
+
+
+# ----------------------------------------------------------------------
+def fig1_sigma_dist(seed: int = 0) -> dict:
+    """Fig. 1: distribution of sigma across 1,510 tasks (bimodal)."""
+    u = cached_runs(seed)["acar_u"]
+    sig = np.array([o.trace.sigma for o in u.outcomes])
+    out = {
+        "histogram": {s: float((sig == float(s)).mean())
+                      for s in ("0.0", "0.5", "1.0")},
+        "paper": PAPER_FIG1,
+        "bimodal": bool(
+            (sig == 0.0).mean() > (sig == 0.5).mean()
+            and (sig == 1.0).mean() > (sig == 0.5).mean()),
+    }
+    write_json(BENCH_DIR / "fig1_sigma_dist.json", out)
+    return out
+
+
+def fig5_escalation(seed: int = 0) -> dict:
+    """Fig. 5: escalation distribution by benchmark."""
+    u = cached_runs(seed)["acar_u"]
+    out: Dict[str, Dict[str, float]] = {}
+    for bench in PAPER_MIX:
+        sel = [o.trace.mode for o in u.outcomes
+               if o.trace.benchmark == bench]
+        out[bench] = {m: sel.count(m) / len(sel) for m in MODE_NAMES}
+    out["paper_anchors"] = PAPER_FIG5
+    write_json(BENCH_DIR / "fig5_escalation.json", out)
+    return out
+
+
+def fig6_cumulative(seed: int = 0) -> dict:
+    """Fig. 6: cumulative full-arena usage; ACAR avoids full
+    ensembling on the majority of tasks (paper: 54.2%)."""
+    u = cached_runs(seed)["acar_u"]
+    full = np.array([o.trace.mode == "full_arena" for o in u.outcomes])
+    cum = np.cumsum(full) / (np.arange(len(full)) + 1)
+    avoided = float(1.0 - full.mean())
+    out = {
+        "full_arena_rate": float(full.mean()),
+        "avoided_fraction": avoided,
+        "paper_avoided": PAPER_FIG6_FULL_ARENA_AVOIDED,
+        "cumulative_curve_every_100": [float(c) for c in cum[::100]],
+        "majority_avoided": avoided > 0.5,
+    }
+    write_json(BENCH_DIR / "fig6_cumulative.json", out)
+    return out
+
+
+def fig7_latency(seed: int = 0) -> dict:
+    """Fig. 7: latency distribution by configuration (calibrated
+    latency model; single < ACAR-U < full ensembling)."""
+    runs = cached_runs(seed)
+    out = {}
+    for name in ("single_model", "arena_2", "acar_u", "arena_3"):
+        lat = np.array([o.latency_ms for o in runs[name].outcomes])
+        out[name] = {
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p90_ms": float(np.percentile(lat, 90)),
+            "mean_ms": float(lat.mean()),
+        }
+    # "intermediate latency" (paper Fig. 7) is a statement about the
+    # distribution mass: single < ACAR-U < Arena-3 in the MEAN (ACAR's
+    # sigma=0 tasks skip the ensemble entirely; escalated tasks pay
+    # probe + ensemble, so the p50 sits near Arena-3's).
+    out["ordering_holds"] = (
+        out["single_model"]["mean_ms"] < out["acar_u"]["mean_ms"] <
+        out["arena_3"]["mean_ms"] + 1e-9)
+    write_json(BENCH_DIR / "fig7_latency.json", out)
+    return out
+
+
+def fig8_fig9_retrieval(seed: int = 0) -> dict:
+    """Figs. 8/9: hit rate by benchmark + similarity distribution.
+    High hit rates, low similarity (paper median 0.167)."""
+    store = experience_store()
+    tasks = paper_suite(seed=seed)
+    out: Dict[str, dict] = {"per_benchmark": {}}
+    sims_all: List[float] = []
+    for bench in PAPER_MIX:
+        qs = [t.text for t in tasks if t.benchmark == bench]
+        stats = store.similarity_stats(qs)
+        out["per_benchmark"][bench] = {
+            "hit_rate": stats["hit_rate"],
+            "median_similarity": stats["median_similarity"],
+        }
+        sims_all.extend(stats["similarities"])
+    sims = np.array(sims_all)
+    out["median_similarity"] = float(np.median(sims))
+    out["paper_median"] = PAPER_FIG9_MEDIAN_SIM
+    out["hist"] = {f"{lo:.1f}-{lo + 0.1:.1f}":
+                   float(((sims >= lo) & (sims < lo + 0.1)).mean())
+                   for lo in np.arange(0.0, 1.0, 0.1)}
+    out["low_similarity_regime"] = out["median_similarity"] < 0.3
+    write_json(BENCH_DIR / "fig9_similarity.json", out)
+    return out
+
+
+def run(seed: int = 0, verbose: bool = True) -> dict:
+    out = {
+        "fig1": fig1_sigma_dist(seed),
+        "fig5": fig5_escalation(seed),
+        "fig6": fig6_cumulative(seed),
+        "fig7": fig7_latency(seed),
+        "fig9": fig8_fig9_retrieval(seed),
+    }
+    if verbose:
+        print(f"  fig1 sigma hist: {out['fig1']['histogram']} "
+              f"(paper {PAPER_FIG1})")
+        print(f"  fig5 supergpqa: {out['fig5']['supergpqa']}")
+        print(f"  fig6 avoided: {out['fig6']['avoided_fraction']:.3f} "
+              f"(paper {PAPER_FIG6_FULL_ARENA_AVOIDED})")
+        print(f"  fig7 p50: single "
+              f"{out['fig7']['single_model']['p50_ms']:.0f}ms acar "
+              f"{out['fig7']['acar_u']['p50_ms']:.0f}ms arena3 "
+              f"{out['fig7']['arena_3']['p50_ms']:.0f}ms")
+        print(f"  fig9 median sim: "
+              f"{out['fig9']['median_similarity']:.3f} "
+              f"(paper {PAPER_FIG9_MEDIAN_SIM})")
+    return out
+
+
+def main() -> str:
+    out = run(verbose=False)
+    return csv_line(
+        "figures", 0.0,
+        f"avoided={out['fig6']['avoided_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Benchmark driver — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV (plus detailed per-benchmark
+sections) and writes JSON artifacts under experiments/bench/.
+"""
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        ablation_probe, attribution_bench, figures, kernels_micro,
+        roofline, table1_overall, table2_retrieval)
+    from benchmarks import serving_bench
+
+    sections = [
+        ("table1_overall (paper Table 1, Figs 2/3)", table1_overall),
+        ("table2_retrieval (paper Table 2, §6.1)", table2_retrieval),
+        ("figures (paper Figs 1/5/6/7/8/9)", figures),
+        ("attribution (paper §6.3)", attribution_bench),
+        ("roofline (deliverable g — reads experiments/dryrun)",
+         roofline),
+        ("kernels_micro", kernels_micro),
+        ("ablation_probe (beyond-paper: N and probe choice)",
+         ablation_probe),
+        ("serving_bench (batched ACAR engine over JAX zoo)",
+         serving_bench),
+    ]
+    csv_lines = []
+    for title, mod in sections:
+        print(f"\n== {title} ==")
+        try:
+            t0 = time.perf_counter()
+            mod.run(verbose=True)
+            csv_lines.append(mod.main())
+            print(f"  [{time.perf_counter() - t0:.1f}s]")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            csv_lines.append(f"{title.split()[0]},0.0,ERROR:{e}")
+
+    print("\n# name,us_per_call,derived")
+    for line in csv_lines:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Serving-path benchmark: the batched ACAR engine over real (tiny,
+arithmetic-trained) JAX zoo models — measures end-to-end routed-batch
+wall time and the ensemble calls saved by sigma routing."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from benchmarks.common import csv_line, write_json
+from repro.configs.acar import ACARConfig
+from repro.data.tasks import arithmetic_suite
+from repro.launch.serve import build_zoo, serve
+
+OUT = Path("experiments/bench/serving.json")
+
+
+def run(n_tasks: int = 32, train_steps: int = 500,
+        verbose: bool = True) -> dict:
+    archs = ["smollm-135m", "llama3-8b", "deepseek-7b",
+             "recurrentgemma-2b"]
+    zoo = build_zoo(archs, train_steps, seed=0, verbose=verbose)
+    acfg = ACARConfig(probe_model=archs[0],
+                      ensemble_models=tuple(archs[1:]),
+                      probe_temperature=0.7, seed=0)
+    tasks = arithmetic_suite(n_tasks, seed=99)
+    out = serve(tasks, zoo[0], zoo[1:], acfg, verbose=verbose)
+    write_json(OUT, out)
+    return out
+
+
+def main() -> str:
+    t = run(verbose=False)
+    us = t["wall_ms"] * 1e3 / 32
+    return csv_line("serving_bench", us,
+                    f"acc={t['accuracy']:.3f};"
+                    f"saved={t['ensemble_calls_saved']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Paper Table 1 + Figures 2/3: overall and per-benchmark accuracy and
+cost for the five configurations, regenerated from the substrate runs.
+
+Paper claims (1,510 tasks): Single 45.4% / Arena-2 54.4% / ACAR-U 55.6%
+/ Arena-3 63.6%; ACAR-U cheaper than Arena-2.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from benchmarks.common import cached_runs, csv_line, write_json
+
+PAPER_TABLE1 = {
+    "single_model": 0.454,
+    "arena_2": 0.544,
+    "acar_u": 0.556,
+    "arena_3": 0.636,
+}
+OUT = Path("experiments/bench/table1.json")
+
+
+def run(seed: int = 0, verbose: bool = True) -> dict:
+    runs = cached_runs(seed)
+    table = {}
+    for name in ("single_model", "arena_2", "acar_u", "arena_3"):
+        r = runs[name]
+        table[name] = {
+            "accuracy": r.accuracy,
+            "correct": int(r.accuracy * len(r.outcomes) + 0.5),
+            "total": len(r.outcomes),
+            "cost": r.cost,
+            "paper_accuracy": PAPER_TABLE1[name],
+            "delta_vs_paper": r.accuracy - PAPER_TABLE1[name],
+            "per_benchmark": r.accuracy_by_benchmark(),   # Fig. 3
+            "wall_s": r.wall_s,
+        }
+    # the paper's two ordering claims
+    table["claims"] = {
+        "acar_u_exceeds_arena2":
+            table["acar_u"]["accuracy"] > table["arena_2"]["accuracy"],
+        "arena3_is_ceiling":
+            table["arena_3"]["accuracy"]
+            >= max(table[n]["accuracy"]
+                   for n in ("single_model", "arena_2", "acar_u")),
+        "acar_u_cheaper_than_arena2":
+            table["acar_u"]["cost"] < table["arena_2"]["cost"],
+        "single_cheapest":
+            table["single_model"]["cost"]
+            < min(table["arena_2"]["cost"], table["acar_u"]["cost"]),
+    }
+    write_json(OUT, table)
+    if verbose:
+        for n in ("single_model", "arena_2", "acar_u", "arena_3"):
+            t = table[n]
+            print(f"  {n:13s} acc {t['accuracy']:.3f} "
+                  f"(paper {t['paper_accuracy']:.3f}) "
+                  f"cost ${t['cost']:.2f}")
+        print(f"  claims: {table['claims']}")
+    return table
+
+
+def main() -> str:
+    t = run(verbose=False)
+    us = t["acar_u"]["wall_s"] / t["acar_u"]["total"] * 1e6
+    return csv_line("table1_overall", us,
+                    f"acar_u_acc={t['acar_u']['accuracy']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

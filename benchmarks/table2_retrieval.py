@@ -1,0 +1,84 @@
+"""Paper Table 2 + §6.1: ACAR-UJ vs ACAR-U per benchmark (retrieval
+augmentation hurts), plus the similarity-threshold study backing the
+paper's ">0.7 required" recommendation."""
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import (
+    ARENA3, PROBE, cached_runs, csv_line, experience_store, write_json)
+from repro.configs.acar import ACARConfig
+from repro.core.backends import paper_backends
+from repro.core.orchestrator import ACAROrchestrator
+from repro.data.tasks import PAPER_MIX, paper_suite
+
+PAPER_TABLE2 = {           # ACAR-U vs ACAR-UJ accuracy (paper)
+    "overall": (0.556, 0.524),
+    "supergpqa": (0.605, 0.573),
+    "livecodebench": (0.515, 0.475),
+    "reasoning_gym": (0.460, 0.440),
+    "matharena": (0.267, 0.217),
+}
+OUT = Path("experiments/bench/table2.json")
+
+
+def threshold_study(seed: int = 0, thresholds=(0.0, 0.3, 0.5, 0.7)):
+    """Re-run ACAR-UJ at increasing similarity thresholds: the paper's
+    recommendation is that only aligned (>0.7) exemplars are safe."""
+    tasks = paper_suite(seed=seed)
+    backs = paper_backends()
+    store = experience_store()
+    out = {}
+    for th in thresholds:
+        acfg = ACARConfig(seed=seed, retrieval_enabled=True,
+                          retrieval_threshold=th)
+        orch = ACAROrchestrator(acfg, backs[PROBE],
+                                {m: backs[m] for m in ARENA3},
+                                experience=store,
+                                run_id=f"uj_th{th}")
+        outs = orch.run_suite(tasks)
+        out[str(th)] = float(np.mean([o.correct for o in outs]))
+    return out
+
+
+def run(seed: int = 0, verbose: bool = True) -> dict:
+    runs = cached_runs(seed)
+    u, uj = runs["acar_u"], runs["acar_uj"]
+    per_u = u.accuracy_by_benchmark()
+    per_uj = uj.accuracy_by_benchmark()
+    table = {"overall": {
+        "acar_u": u.accuracy, "acar_uj": uj.accuracy,
+        "delta": uj.accuracy - u.accuracy,
+        "paper_delta": PAPER_TABLE2["overall"][1]
+        - PAPER_TABLE2["overall"][0]}}
+    for bench in PAPER_MIX:
+        pu, puj = PAPER_TABLE2[bench]
+        table[bench] = {
+            "acar_u": per_u[bench], "acar_uj": per_uj[bench],
+            "delta": per_uj[bench] - per_u[bench],
+            "paper_delta": puj - pu,
+        }
+    table["retrieval_hurts_overall"] = table["overall"]["delta"] < 0
+    table["threshold_study"] = threshold_study(seed)
+    ths = table["threshold_study"]
+    table["aligned_threshold_recovers"] = ths["0.7"] >= ths["0.0"]
+    write_json(OUT, table)
+    if verbose:
+        for k in ("overall", *PAPER_MIX):
+            t = table[k]
+            print(f"  {k:14s} U {t['acar_u']:.3f} UJ {t['acar_uj']:.3f} "
+                  f"delta {t['delta']:+.3f} (paper {t['paper_delta']:+.3f})")
+        print(f"  threshold study: {ths}")
+    return table
+
+
+def main() -> str:
+    t = run(verbose=False)
+    return csv_line("table2_retrieval", 0.0,
+                    f"delta={t['overall']['delta']:+.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,22 @@
+"""End-to-end driver (the paper's kind: serving/orchestration).
+
+Trains a 4-model zoo of reduced architectures on char-level arithmetic,
+then serves a batch of tasks through the batched ACAR engine: (B x 3)
+probe decode -> EXTRACT -> on-device sigma/routing -> masked ensemble
+decodes -> vectorised judge — the TPU-native formulation of Alg. 1.
+
+    PYTHONPATH=src python examples/serve_acar.py [--tasks 32]
+        [--train-steps 300]
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks", type=int, default=32)
+    ap.add_argument("--train-steps", type=int, default=300)
+    args = ap.parse_args()
+    serve_main(["--tasks", str(args.tasks),
+                "--train-steps", str(args.train_steps)])

@@ -1,0 +1,4 @@
+from repro.checkpoint.io import (
+    load_metadata, restore_checkpoint, save_checkpoint)
+
+__all__ = ["load_metadata", "restore_checkpoint", "save_checkpoint"]

@@ -1,0 +1,106 @@
+"""Shard-aware npz pytree checkpointing.
+
+Flattens an arbitrary pytree to ``path/key/parts`` npz entries; restore
+takes a template tree (for structure + dtypes + shardings). On a mesh,
+arrays are gathered from their addressable shards before saving and
+re-placed with ``jax.device_put`` against the template sharding on
+restore, so a checkpoint written under one mesh layout restores under
+another.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> Dict[str, jax.Array]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_elem(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_elem(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(path: Union[str, Path], tree: PyTree,
+                    step: int = 0, metadata: Dict = None) -> Path:
+    """Atomically write ``tree`` (+ metadata json) to ``path``."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    # bf16 has no numpy dtype — store as uint16 view + dtype tag
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        a = np.asarray(jax.device_get(v))
+        if a.dtype == jnp.bfloat16:
+            dtypes[k] = "bfloat16"
+            a = a.view(np.uint16)
+        else:
+            dtypes[k] = str(a.dtype)
+        arrays[k] = a
+    meta = {"step": step, "dtypes": dtypes,
+            "user": metadata or {}}
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta), **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def load_metadata(path: Union[str, Path]) -> Dict:
+    with np.load(Path(path), allow_pickle=False) as z:
+        return json.loads(str(z["__meta__"]))
+
+
+def restore_checkpoint(path: Union[str, Path], template: PyTree
+                       ) -> PyTree:
+    """Restore into the structure/dtypes/shardings of ``template``."""
+    path = Path(path)
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        dtypes = meta["dtypes"]
+        flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf in flat_t:
+            key = _SEP.join(_path_elem(e) for e in p)
+            if key not in z:
+                raise KeyError(f"checkpoint {path} missing {key!r}")
+            a = z[key]
+            if dtypes.get(key) == "bfloat16":
+                a = a.view(jnp.bfloat16)
+            if a.shape != leaf.shape:
+                raise ValueError(
+                    f"{key}: checkpoint shape {a.shape} != template "
+                    f"{leaf.shape}")
+            arr = jnp.asarray(a, dtype=leaf.dtype)
+            sharding = getattr(leaf, "sharding", None)
+            if sharding is not None and hasattr(sharding, "mesh"):
+                arr = jax.device_put(arr, sharding)
+            leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,20 @@
+from repro.configs.base import (
+    EncoderConfig,
+    INPUT_SHAPES,
+    InputShape,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    RGLRUConfig,
+    SSMConfig,
+    TrainConfig,
+)
+from repro.configs.registry import ARCH_IDS, all_configs, get_config
+from repro.configs.acar import ACARConfig, ACAR_U, ACAR_UJ, ACAR_UJ_ALIGNED
+
+__all__ = [
+    "ACARConfig", "ACAR_U", "ACAR_UJ", "ACAR_UJ_ALIGNED", "ARCH_IDS",
+    "EncoderConfig", "INPUT_SHAPES", "InputShape", "MLAConfig", "MoEConfig",
+    "ModelConfig", "RGLRUConfig", "SSMConfig", "TrainConfig",
+    "all_configs", "get_config",
+]

@@ -1,0 +1,38 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+Full-size CONFIGs are exercised only via the dry-run (ShapeDtypeStruct,
+no allocation); REDUCED variants run on CPU in smoke tests and examples.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.base import ModelConfig
+
+_ARCH_MODULES = {
+    "granite-34b": "repro.configs.granite_34b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(
+            f"unknown arch {arch!r}; available: {', '.join(ARCH_IDS)}")
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def all_configs(reduced: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, reduced) for a in ARCH_IDS}

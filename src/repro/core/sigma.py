@@ -1,0 +1,57 @@
+"""Self-consistency variance (paper Def. 1).
+
+    sigma = (|{a_1, ..., a_N}| - 1) / (N - 1)   in {0, 0.5, 1} for N=3.
+
+Two implementations: a host-side one over canonical answer strings, and
+a vectorised jnp one over batches of answer ids — the serving runtime
+routes whole request batches on-device with the latter (DESIGN.md §1.1).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def sigma(answers: Sequence[str]) -> float:
+    """Host-side sigma over extracted canonical answers."""
+    n = len(answers)
+    if n < 2:
+        return 0.0
+    distinct = len(set(answers))
+    return (distinct - 1) / (n - 1)
+
+
+def sigma_batch(answer_ids: jax.Array) -> jax.Array:
+    """Vectorised sigma over answer ids.
+
+    answer_ids: (B, N) int32 — canonical answer ids per probe sample.
+    Returns (B,) float32 sigma values. Distinct-count is computed by
+    pairwise comparison (N is small — the paper uses N=3).
+    """
+    b, n = answer_ids.shape
+    # distinct count: sum over i of [a_i not equal to any earlier a_j]
+    eq = answer_ids[:, :, None] == answer_ids[:, None, :]   # (B,N,N)
+    earlier = jnp.tril(jnp.ones((n, n), bool), k=-1)        # j < i
+    dup = jnp.any(eq & earlier[None], axis=-1)              # (B,N)
+    distinct = n - jnp.sum(dup, axis=-1)                    # (B,)
+    return (distinct - 1).astype(jnp.float32) / (n - 1)
+
+
+def route_batch(sig: jax.Array) -> jax.Array:
+    """Map sigma values to mode ids: 0=single_agent, 1=arena_lite,
+    2=full_arena. sig: (B,) float32."""
+    return jnp.where(sig <= 0.0, 0, jnp.where(sig < 1.0, 1, 2)).astype(
+        jnp.int32)
+
+
+MODE_NAMES = ("single_agent", "arena_lite", "full_arena")
+
+
+def majority_vote_batch(answer_ids: jax.Array) -> jax.Array:
+    """Majority answer id per row (ties -> first sample), (B, N) int32."""
+    b, n = answer_ids.shape
+    eq = (answer_ids[:, :, None] == answer_ids[:, None, :]).sum(-1)
+    best = jnp.argmax(eq, axis=-1)                          # (B,)
+    return jnp.take_along_axis(answer_ids, best[:, None], axis=1)[:, 0]

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the serving hot-spots (decode attention, the
+# two recurrent scans, fused SwiGLU) + ops.py dispatch + ref.py oracles.
+# Selected at deployment via ModelConfig.use_pallas; validated on CPU in
+# interpret mode (tests/test_kernels.py).
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

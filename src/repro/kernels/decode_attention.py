@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: single-token GQA decode attention (flash-decode).
+
+The serving hot-spot: one query token per request attending over a long
+padded KV cache. TPU adaptation of GPU flash-decode: instead of one
+warp per row, the cache is tiled into (BLOCK_S, head_dim) VMEM blocks
+and the grid walks them sequentially per (batch, kv-head), carrying the
+online-softmax state (m, l, acc) in VMEM scratch. The q-group dim (G =
+H / KV) rides the sublane axis; head_dim (128 for every assigned arch)
+fills the lane axis, so the score/PV contractions are MXU-shaped.
+
+Grid: (B, KV, S // BLOCK_S) — the S axis must iterate innermost so the
+scratch carries across cache blocks of the same (b, kv).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, block_s: int,
+                        scale: float):
+    s_idx = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (G, Dk)
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (BLK, Dk)
+    v = v_ref[0, :, 0].astype(jnp.float32)             # (BLK, Dv)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, BLK)
+    positions = s_idx * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_s), 1)
+    valid = positions < len_ref[0]
+    s = jnp.where(valid, s, -jnp.inf)
+
+    m_prev = m_ref[...]                                # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                             # (G, BLK)
+    # masked-out columns produced exp(-inf - m) = 0 already, but guard
+    # the all-masked block case where m_new stays -inf:
+    p = jnp.where(jnp.isfinite(m_new), p, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), alpha, 0.0)
+
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array,
+                     v_cache: jax.Array, length: jax.Array,
+                     *, block_s: int = DEFAULT_BLOCK_S,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, H, Dk); k_cache/v_cache: (B, S, KV, Dk/Dv);
+    length: scalar int32 (valid cache prefix). Returns (B, H, Dv)."""
+    b, h, dk = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = h // kv
+    if s % block_s != 0:
+        block_s = s
+    n_s = s // block_s
+    scale = 1.0 / (dk ** 0.5)
+
+    qg = q.reshape(b, kv, g, dk)
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (1,))
+
+    out = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, block_s=block_s,
+                          scale=scale),
+        grid=(b, kv, n_s),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),     # length (prefetch-ish)
+            pl.BlockSpec((1, 1, g, dk), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, dk),
+                         lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1, block_s, 1, dv),
+                         lambda bi, ki, si: (bi, si, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv),
+                               lambda bi, ki, si: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),    # running max m
+            pltpu.VMEM((g, 1), jnp.float32),    # running sum l
+            pltpu.VMEM((g, dv), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(length, qg, k_cache, v_cache)
+    return out.reshape(b, h, dv)

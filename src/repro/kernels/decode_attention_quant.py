@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: flash-decode over an int8-quantised KV cache.
+
+Deployment kernel for the §Perf C2 optimisation: the cache stores int8
+codes + f32 per-vector scales; blocks stream through VMEM at half the
+HBM traffic of bf16. The scales fold into the attention math exactly as
+in the jnp path (models/attention.py::decode_attention_quant):
+
+    scores_s = (q . k_codes_s) * k_scale_s
+    out      = sum_s (p_s * v_scale_s) * v_codes_s
+
+Same grid/scratch structure as decode_attention.py; the int8->f32
+widen happens on the VPU after the VMEM load, so the MXU contraction
+runs on the widened block while HBM only ever sees int8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+
+
+def _decode_attn_quant_kernel(len_ref, q_ref, k_ref, ks_ref, v_ref,
+                              vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                              block_s: int, scale: float):
+    s_idx = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, Dk)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (BLK, Dk) int8
+    kscale = ks_ref[0, :, 0].astype(jnp.float32)         # (BLK,)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    vscale = vs_ref[0, :, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    s = s * kscale[None, :]                              # fold k scales
+    positions = s_idx * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_s), 1)
+    valid = positions < len_ref[0]
+    s = jnp.where(valid, s, -jnp.inf)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(jnp.isfinite(m_new), p, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), alpha, 0.0)
+
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    pv = p * vscale[None, :]                             # fold v scales
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        pv, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_quant(q: jax.Array, k_codes: jax.Array,
+                           k_scale: jax.Array, v_codes: jax.Array,
+                           v_scale: jax.Array, length: jax.Array,
+                           *, block_s: int = DEFAULT_BLOCK_S,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, Dk); k_codes/v_codes: (B, S, KV, D) int8;
+    k_scale/v_scale: (B, S, KV) f32; length: scalar int32."""
+    b, h, dk = q.shape
+    s, kv = k_codes.shape[1], k_codes.shape[2]
+    dv = v_codes.shape[-1]
+    g = h // kv
+    if s % block_s != 0:
+        block_s = s
+    n_s = s // block_s
+    scale = 1.0 / (dk ** 0.5)
+
+    qg = q.reshape(b, kv, g, dk)
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (1,))
+
+    out = pl.pallas_call(
+        functools.partial(_decode_attn_quant_kernel, block_s=block_s,
+                          scale=scale),
+        grid=(b, kv, n_s),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((1, 1, g, dk), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, dk),
+                         lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1, block_s, 1),
+                         lambda bi, ki, si: (bi, si, ki)),
+            pl.BlockSpec((1, block_s, 1, dv),
+                         lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1, block_s, 1),
+                         lambda bi, ki, si: (bi, si, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv),
+                               lambda bi, ki, si: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, qg, k_codes, k_scale, v_codes, v_scale)
+    return out.reshape(b, h, dv)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused SwiGLU MLP — silu(x Wg) * (x Wu) @ Wd.
+
+The three matmuls + gate fuse into one VMEM-resident pipeline: grid =
+(T // BLOCK_T, F // BLOCK_F) with the F axis innermost. For each token
+block the kernel walks hidden blocks, computing the gate/up projections
+on the MXU, the silu gate on the VPU, and accumulating the down
+projection into an f32 VMEM scratch — the (T, F) hidden activation is
+never materialised in HBM. Block sizes default to MXU-aligned 256/512.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_T = 256
+DEFAULT_BLOCK_F = 512
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref):
+    f_idx = pl.program_id(1)
+    n_f = pl.num_programs(1)
+
+    @pl.when(f_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                     # (BT, D)
+    g = jnp.dot(x, wg_ref[...],
+                preferred_element_type=jnp.float32)    # (BT, BF)
+    u = jnp.dot(x, wu_ref[...],
+                preferred_element_type=jnp.float32)
+    h = (g * jax.nn.sigmoid(g)) * u                    # silu gate, f32
+    acc_ref[...] += jnp.dot(h.astype(x.dtype), wd_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(f_idx == n_f - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_f", "interpret"))
+def fused_swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                 w_down: jax.Array, *,
+                 block_t: int = DEFAULT_BLOCK_T,
+                 block_f: int = DEFAULT_BLOCK_F,
+                 interpret: bool = False) -> jax.Array:
+    """x: (T, D); w_gate/w_up: (D, F); w_down: (F, D) -> (T, D)."""
+    t, d = x.shape
+    f = w_gate.shape[1]
+    if t % block_t != 0:
+        block_t = t
+    if f % block_f != 0:
+        block_f = f
+    grid = (t // block_t, f // block_f)
+
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda ti, fi: (ti, 0)),
+            pl.BlockSpec((d, block_f), lambda ti, fi: (0, fi)),
+            pl.BlockSpec((d, block_f), lambda ti, fi: (0, fi)),
+            pl.BlockSpec((block_f, d), lambda ti, fi: (fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, d), lambda ti, fi: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_t, d), jnp.float32)],
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)

@@ -1,0 +1,78 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+Each op picks the Pallas kernel on TPU, the interpret-mode kernel when
+``interpret=True`` (CPU validation), and the pure-jnp oracle otherwise.
+``ModelConfig.use_pallas`` routes the model code here for TPU
+deployment; the default CPU path stays pure JAX.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import decode_attention_quant as _daq
+from repro.kernels import fused_swiglu as _fs
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import ref
+from repro.kernels import selective_scan as _ss
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention(q, k_cache, v_cache, length, *,
+                     block_s: int = _da.DEFAULT_BLOCK_S,
+                     interpret: Optional[bool] = None):
+    if interpret is None and not _on_tpu():
+        return ref.decode_attention_ref(q, k_cache, v_cache, length)
+    return _da.decode_attention(q, k_cache, v_cache, length,
+                                block_s=block_s,
+                                interpret=bool(interpret))
+
+
+def decode_attention_quant(q, k_codes, k_scale, v_codes, v_scale,
+                           length, *,
+                           block_s: int = _daq.DEFAULT_BLOCK_S,
+                           interpret: Optional[bool] = None):
+    if interpret is None and not _on_tpu():
+        from repro.models.attention import (
+            decode_attention_quant as _jnp_quant)
+        kpos = jax.numpy.arange(k_codes.shape[1])
+        return _jnp_quant(q, k_codes, k_scale, v_codes, v_scale,
+                          kpos, length - 1)
+    return _daq.decode_attention_quant(
+        q, k_codes, k_scale, v_codes, v_scale, length,
+        block_s=block_s, interpret=bool(interpret))
+
+
+def selective_scan(x, dt, a_log, b_in, c_in, *,
+                   block_d: int = _ss.DEFAULT_BLOCK_D,
+                   chunk: int = _ss.DEFAULT_CHUNK,
+                   interpret: Optional[bool] = None):
+    if interpret is None and not _on_tpu():
+        return ref.selective_scan_ref(x, dt, a_log, b_in, c_in)
+    return _ss.selective_scan(x, dt, a_log, b_in, c_in,
+                              block_d=block_d, chunk=chunk,
+                              interpret=bool(interpret))
+
+
+def rglru_scan(a, u, *, block_w: int = _rg.DEFAULT_BLOCK_W,
+               chunk: int = _rg.DEFAULT_CHUNK,
+               interpret: Optional[bool] = None):
+    if interpret is None and not _on_tpu():
+        return ref.rglru_scan_ref(a, u)
+    return _rg.rglru_scan(a, u, block_w=block_w, chunk=chunk,
+                          interpret=bool(interpret))
+
+
+def fused_swiglu(x, w_gate, w_up, w_down, *,
+                 block_t: int = _fs.DEFAULT_BLOCK_T,
+                 block_f: int = _fs.DEFAULT_BLOCK_F,
+                 interpret: Optional[bool] = None):
+    if interpret is None and not _on_tpu():
+        return ref.fused_swiglu_ref(x, w_gate, w_up, w_down)
+    return _fs.fused_swiglu(x, w_gate, w_up, w_down, block_t=block_t,
+                            block_f=block_f, interpret=bool(interpret))

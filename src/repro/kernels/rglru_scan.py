@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: RG-LRU linear recurrence h_t = a_t * h_{t-1} + u_t.
+
+Same chunk-walk structure as the selective scan, but the state is a
+plain (BLOCK_W,) channel vector — RecurrentGemma's gated recurrence has
+no SSM state dimension. Grid = (B, W // BLOCK_W, S // CHUNK); the
+channel block rides the lane axis so each fori step is one VPU
+multiply-add over the block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_W = 512
+DEFAULT_CHUNK = 256
+
+
+def _rglru_kernel(a_ref, u_ref, y_ref, hout_ref, h_ref, *, chunk: int):
+    c_idx = pl.program_id(2)
+    n_c = pl.num_programs(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(t, h):
+        at = a_ref[0, t].astype(jnp.float32)
+        ut = u_ref[0, t].astype(jnp.float32)
+        h = at * h + ut
+        y_ref[0, t] = h.astype(y_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+    @pl.when(c_idx == n_c - 1)
+    def _emit_state():
+        hout_ref[0] = h_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_w", "chunk", "interpret"))
+def rglru_scan(a: jax.Array, u: jax.Array, *,
+               block_w: int = DEFAULT_BLOCK_W,
+               chunk: int = DEFAULT_CHUNK,
+               interpret: bool = False):
+    """a, u: (B, S, W). Returns (hs (B, S, W) f32, h_final (B, W) f32)."""
+    bsz, s, w = a.shape
+    if w % block_w != 0:
+        block_w = w
+    if s % chunk != 0:
+        chunk = s
+    grid = (bsz, w // block_w, s // chunk)
+
+    hs, h_final = pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_w),
+                         lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, chunk, block_w),
+                         lambda bi, wi, ci: (bi, ci, wi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_w),
+                         lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, block_w),
+                         lambda bi, wi, ci: (bi, wi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, w), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, w), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_w,), jnp.float32)],
+        interpret=interpret,
+    )(a, u)
+    return hs, h_final

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: Mamba-1 selective scan (chunked, channel-blocked).
+
+TPU adaptation of the CUDA selective-scan kernel (DESIGN.md §3): the
+warp-parallel recurrence becomes a channel-blocked chunk walk. Grid =
+(B, D // BLOCK_D, S // CHUNK); for each (batch, channel block) the
+kernel walks chunks sequentially, carrying the (BLOCK_D, N) state in
+VMEM scratch, and runs the recurrence inside the chunk with a
+``fori_loop`` whose body is pure VPU work on (BLOCK_D, N) tiles —
+decay-and-accumulate plus the C-projection reduce.
+
+All math f32 (matching the deployed jnp path); inputs may be bf16.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_D = 512
+DEFAULT_CHUNK = 256
+
+
+def _selective_scan_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref,
+                           y_ref, hout_ref, h_ref, *, chunk: int):
+    c_idx = pl.program_id(2)
+    n_c = pl.num_programs(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = -jnp.exp(alog_ref[...].astype(jnp.float32))     # (BD, N)
+
+    def step(t, h):
+        xt = x_ref[0, t].astype(jnp.float32)            # (BD,)
+        dtt = dt_ref[0, t].astype(jnp.float32)          # (BD,)
+        bt = b_ref[0, t].astype(jnp.float32)            # (N,)
+        ct = c_ref[0, t].astype(jnp.float32)            # (N,)
+        dta = jnp.exp(dtt[:, None] * a)                 # (BD, N)
+        u = (dtt * xt)[:, None] * bt[None, :]
+        h = dta * h + u
+        y_ref[0, t] = jnp.sum(h * ct[None, :],
+                              axis=-1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(c_idx == n_c - 1)
+    def _emit_state():
+        hout_ref[0] = h_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_d", "chunk", "interpret"))
+def selective_scan(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                   b_in: jax.Array, c_in: jax.Array, *,
+                   block_d: int = DEFAULT_BLOCK_D,
+                   chunk: int = DEFAULT_CHUNK,
+                   interpret: bool = False):
+    """x, dt: (B, S, D); a_log: (D, N); b_in, c_in: (B, S, N).
+
+    Returns (y (B, S, D), h_final (B, D, N) f32).
+    """
+    bsz, s, d = x.shape
+    n = a_log.shape[1]
+    if d % block_d != 0:
+        block_d = d
+    if s % chunk != 0:
+        chunk = s
+    grid = (bsz, d // block_d, s // chunk)
+
+    y, h_final = pl.pallas_call(
+        functools.partial(_selective_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d),
+                         lambda bi, di, ci: (bi, ci, di)),   # x
+            pl.BlockSpec((1, chunk, block_d),
+                         lambda bi, di, ci: (bi, ci, di)),   # dt
+            pl.BlockSpec((block_d, n),
+                         lambda bi, di, ci: (di, 0)),        # a_log
+            pl.BlockSpec((1, chunk, n),
+                         lambda bi, di, ci: (bi, ci, 0)),    # B
+            pl.BlockSpec((1, chunk, n),
+                         lambda bi, di, ci: (bi, ci, 0)),    # C
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d),
+                         lambda bi, di, ci: (bi, ci, di)),   # y
+            pl.BlockSpec((1, block_d, n),
+                         lambda bi, di, ci: (bi, di, 0)),    # h_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, d), x.dtype),
+            jax.ShapeDtypeStruct((bsz, d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log, b_in, c_in)
+    return y, h_final

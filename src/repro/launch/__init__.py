@@ -1,0 +1,14 @@
+# Launch layer: meshes, step builders, train/serve drivers, dry-run.
+# dryrun.py must be imported/run standalone (it sets XLA_FLAGS first).
+from repro.launch.mesh import (
+    make_production_mesh, make_smoke_mesh, mesh_chip_count, rules_for)
+from repro.launch.steps import (
+    build_lowering, cache_pspecs, input_specs, make_prefill_step,
+    make_serve_step, make_train_step)
+
+__all__ = [
+    "build_lowering", "cache_pspecs", "input_specs",
+    "make_prefill_step", "make_production_mesh", "make_serve_step",
+    "make_smoke_mesh", "make_train_step", "mesh_chip_count",
+    "rules_for",
+]

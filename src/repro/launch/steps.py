@@ -1,0 +1,309 @@
+"""Step builders + abstract input specs shared by train.py / serve.py /
+dryrun.py.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model
+input of a given (arch, input-shape) — weak-type-correct, shardable, no
+device allocation. ``make_train_step`` / ``make_serve_step`` /
+``make_prefill_step`` build the jittable step functions; the sharding
+helpers map every leaf (params, optimizer state, batch, KV/state cache)
+to a NamedSharding on the production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig, TrainConfig
+from repro.models import params as params_lib
+from repro.models import transformer as T
+from repro.models.frontends import audio_frame_shape, vision_patch_shape
+from repro.optim import AdamWState, softmax_cross_entropy, update
+from repro.sharding import mesh_axis_size
+
+PyTree = Any
+
+
+# ----------------------------------------------------------------------
+# step builders
+# ----------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    remat = cfg.remat == "layer"
+
+    def train_step(params: PyTree, opt_state: AdamWState,
+                   batch: Dict[str, jax.Array]):
+        moe_shards = mesh_axis_size("batch")
+
+        def loss_fn(p):
+            logits, aux = T.forward(
+                cfg, p, batch["tokens"],
+                batch.get("frontend_embeds"),
+                remat=remat, moe_shards=moe_shards)
+            loss, met = softmax_cross_entropy(
+                logits, batch["labels"], batch.get("loss_mask"))
+            total = loss
+            if cfg.moe is not None:
+                total = total + cfg.moe.router_aux_weight * aux
+            met = dict(met, aux_loss=aux)
+            return total, met
+
+        (total, met), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_state, om = update(params, grads, opt_state, tc)
+        return new_params, new_state, {**met, **om, "total_loss": total}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """(params, tokens[, frontend]) -> (last-pos logits, decode cache)."""
+
+    def prefill_step(params, tokens, frontend_embeds=None):
+        return T.prefill(cfg, params, tokens, frontend_embeds)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, cache, token, pos) -> (logits, cache)."""
+
+    def serve_step(params, cache, token, pos):
+        return T.decode_step(cfg, params, cache, token, pos)
+
+    return serve_step
+
+
+# ----------------------------------------------------------------------
+# abstract input specs (no allocation)
+# ----------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _frontend_sds(cfg: ModelConfig, batch: int):
+    if cfg.frontend == "audio":
+        return _sds(audio_frame_shape(cfg, batch), cfg.dtype)
+    if cfg.frontend == "vision":
+        return _sds(vision_patch_shape(cfg, batch), cfg.dtype)
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one step's model inputs.
+
+    train   -> {tokens, labels, loss_mask[, frontend_embeds]}
+    prefill -> {tokens[, frontend_embeds]}
+    decode  -> {cache, token, pos}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+            "loss_mask": _sds((b, s), jnp.float32),
+        }
+        fe = _frontend_sds(cfg, b)
+        if fe is not None:
+            out["frontend_embeds"] = fe
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((b, s), jnp.int32)}
+        fe = _frontend_sds(cfg, b)
+        if fe is not None:
+            out["frontend_embeds"] = fe
+        return out
+    assert shape.kind == "decode"
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, b, s))
+    return {
+        "cache": cache,
+        "token": _sds((b,), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------------
+# sharding specs
+# ----------------------------------------------------------------------
+def batch_pspec(rules: dict) -> P:
+    return P(rules["batch"])
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def train_input_pspecs(cfg: ModelConfig, specs: Dict[str, Any],
+                       rules: dict) -> Dict[str, P]:
+    ba = rules["batch"]
+    out = {}
+    for k, v in specs.items():
+        out[k] = P(ba, *([None] * (v.ndim - 1)))
+    return out
+
+
+def sanitize_pspec(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes whose size does not divide the dim — explicit
+    pjit in/out shardings require exact divisibility (unlike
+    with_sharding_constraint, which pads)."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for d, ax in zip(shape, dims):
+        if ax is not None and d % _axis_size(mesh, ax) != 0:
+            ax = None
+        out.append(ax)
+    return P(*out)
+
+
+def sanitize_tree(sds_tree: PyTree, pspec_tree: PyTree,
+                  mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda sds, spec: sanitize_pspec(sds.shape, spec, mesh),
+        sds_tree, pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_pspecs(cfg: ModelConfig, cache_sds: PyTree, mesh: Mesh,
+                 rules: dict) -> PyTree:
+    """PartitionSpec tree for a decode cache.
+
+    Attention KV caches shard by KV head when the head count divides the
+    model axis; MQA / small-KV caches shard along the *sequence* axis
+    instead (Pope-style MQA decode sharding). SSM / RG-LRU state shards
+    along the channel dim; MLA latent caches shard along sequence.
+    """
+    ba = rules["batch"]
+    model_n = mesh.shape.get("model", 1)
+
+    def spec_for(path, leaf):
+        keys = [getattr(p, "key", None) for p in path]
+        keys = [k for k in keys if k is not None]
+        name = keys[-1] if keys else ""
+        stacked = any(k in ("layers", "dec_layers", "cross")
+                      for k in keys)
+        off = 1 if stacked else 0
+        dims = [None] * leaf.ndim
+        if leaf.ndim > off:
+            dims[off] = ba
+        if name in ("k", "v", "k_scale", "v_scale"):
+            # (.., B, S, KV, hd) / scales (.., B, S, KV)
+            kv = leaf.shape[off + 2]
+            seq = leaf.shape[off + 1]
+            if kv % model_n == 0:
+                dims[off + 2] = "model"
+            elif seq % model_n == 0:
+                dims[off + 1] = "model"
+        elif name in ("c_kv", "k_rope"):
+            seq = leaf.shape[off + 1]
+            if seq % model_n == 0:
+                dims[off + 1] = "model"
+        elif name == "conv":
+            # (.., B, w-1, d_in)
+            if leaf.shape[off + 2] % model_n == 0:
+                dims[off + 2] = "model"
+        elif name == "h":
+            # ssm: (.., B, d_in, n); rglru: (.., B, w)
+            if leaf.shape[off + 1] % model_n == 0:
+                dims[off + 1] = "model"
+        return P(*dims)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_sds)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def opt_state_pspecs(param_specs: PyTree) -> AdamWState:
+    return AdamWState(step=P(), mu=param_specs, nu=param_specs)
+
+
+def to_shardings(mesh: Mesh, pspecs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ----------------------------------------------------------------------
+# full per-(arch, shape) lowering spec
+# ----------------------------------------------------------------------
+def abstract_opt_state(abs_params: PyTree) -> AdamWState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree.map(f32, abs_params),
+        nu=jax.tree.map(f32, abs_params),
+    )
+
+
+def build_lowering(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                   rules: dict, tc: Optional[TrainConfig] = None):
+    """Returns (jitted_fn, example_args) ready for ``.lower(*args)``.
+
+    All array arguments are ShapeDtypeStructs carrying NamedShardings —
+    nothing is allocated.
+    """
+    abs_params = params_lib.abstract_params(cfg)
+    pspecs = sanitize_tree(abs_params,
+                           params_lib.param_specs(cfg, rules), mesh)
+    p_shard = to_shardings(mesh, pspecs)
+    specs = input_specs(cfg, shape)
+
+    def with_sharding(sds, sharding):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=sharding)
+
+    abs_params = jax.tree.map(with_sharding, abs_params, p_shard)
+
+    if shape.kind == "train":
+        tc = tc or TrainConfig()
+        step = make_train_step(cfg, tc)
+        in_pspecs = sanitize_tree(
+            specs, train_input_pspecs(cfg, specs, rules), mesh)
+        in_shard = to_shardings(mesh, in_pspecs)
+        batch = jax.tree.map(with_sharding, specs, in_shard)
+        o_shard = opt_state_pspecs(pspecs)
+        opt_sds = abstract_opt_state(abs_params)
+        opt_sds = jax.tree.map(
+            with_sharding, opt_sds,
+            to_shardings(mesh, o_shard))
+        jitted = jax.jit(
+            step,
+            out_shardings=(p_shard, to_shardings(mesh, o_shard), None))
+        return jitted, (abs_params, opt_sds, batch)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        in_pspecs = sanitize_tree(
+            specs, train_input_pspecs(cfg, specs, rules), mesh)
+        in_shard = to_shardings(mesh, in_pspecs)
+        args = [abs_params,
+                with_sharding(specs["tokens"], in_shard["tokens"])]
+        if "frontend_embeds" in specs:
+            args.append(with_sharding(specs["frontend_embeds"],
+                                      in_shard["frontend_embeds"]))
+        jitted = jax.jit(step)
+        return jitted, tuple(args)
+
+    # decode
+    step = make_serve_step(cfg)
+    c_pspecs = sanitize_tree(
+        specs["cache"], cache_pspecs(cfg, specs["cache"], mesh, rules),
+        mesh)
+    c_shard = to_shardings(mesh, c_pspecs)
+    cache = jax.tree.map(with_sharding, specs["cache"], c_shard)
+    token = with_sharding(
+        specs["token"],
+        NamedSharding(mesh, sanitize_pspec(
+            specs["token"].shape, P(rules["batch"]), mesh)))
+    pos = with_sharding(specs["pos"], NamedSharding(mesh, P()))
+    jitted = jax.jit(step, out_shardings=(None, c_shard))
+    return jitted, (abs_params, cache, token, pos)

@@ -1,0 +1,119 @@
+"""Training driver.
+
+Real execution path (CPU examples / TPU deployment alike): build the
+config, init params + optimizer, jit the train step with sharded
+in/out specs under the active mesh, and run the data pipeline.
+
+CLI (reduced configs; full configs are exercised via dryrun.py):
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch smollm-135m --data arithmetic --steps 300 \
+        --batch 64 --seq 24 --ckpt /tmp/smollm.npz
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data import tokenizer as tok
+from repro.data.pipeline import arithmetic_batches, synthetic_lm_batches
+from repro.launch.steps import make_train_step
+from repro.models import params as params_lib
+from repro.models.frontends import synthetic_frames, synthetic_patches
+from repro.optim import init as opt_init
+
+
+def reduced_for_data(arch: str, data: str):
+    """Reduced config adapted to the selected dataset."""
+    cfg = get_config(arch, reduced=True)
+    if data == "arithmetic":
+        cfg = cfg.replace(vocab_size=tok.VOCAB_SIZE, dtype="float32",
+                          tie_embeddings=True)
+    else:
+        cfg = cfg.replace(dtype="float32")
+    return cfg
+
+
+def train(arch: str = "smollm-135m", data: str = "arithmetic",
+          steps: int = 300, batch: int = 64, seq: int = 24,
+          lr: float = 1e-3, seed: int = 0,
+          ckpt: Optional[str] = None, log_every: int = 50,
+          reduced: bool = True, verbose: bool = True):
+    cfg = reduced_for_data(arch, data) if reduced \
+        else get_config(arch)
+    tc = TrainConfig(learning_rate=lr, warmup_steps=min(50, steps // 4),
+                     total_steps=steps, seed=seed)
+    params = params_lib.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = opt_init(params)
+    step_fn = jax.jit(make_train_step(cfg, tc))
+
+    if data == "arithmetic":
+        it = arithmetic_batches(batch, seq, seed=seed)
+    else:
+        it = synthetic_lm_batches(batch, seq, cfg.vocab_size, seed=seed)
+
+    fe = None
+    if cfg.frontend == "audio":
+        fe = synthetic_frames(cfg, batch, seed)
+    elif cfg.frontend == "vision":
+        fe = synthetic_patches(cfg, batch, seed)
+
+    t0 = time.perf_counter()
+    metrics = {}
+    for i in range(steps):
+        b = next(it)
+        batch_dict = {
+            "tokens": jnp.asarray(b.tokens),
+            "labels": jnp.asarray(b.labels),
+            "loss_mask": jnp.asarray(b.loss_mask),
+        }
+        if fe is not None:
+            batch_dict["frontend_embeds"] = fe
+        params, opt_state, metrics = step_fn(params, opt_state,
+                                             batch_dict)
+        if verbose and (i % log_every == 0 or i == steps - 1):
+            print(f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"tok_acc {float(metrics['token_accuracy']):.3f}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}  "
+                  f"lr {float(metrics['lr']):.2e}")
+    wall = time.perf_counter() - t0
+    if verbose:
+        n_params = params_lib.count_params(params)
+        print(f"trained {arch} ({n_params / 1e6:.1f}M params) "
+              f"{steps} steps in {wall:.1f}s "
+              f"({steps / wall:.2f} steps/s)")
+    if ckpt:
+        save_checkpoint(ckpt, params, step=steps,
+                        metadata={"arch": arch, "data": data})
+        if verbose:
+            print(f"checkpoint -> {ckpt}")
+    return cfg, params, metrics
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-135m", choices=ARCH_IDS)
+    ap.add_argument("--data", default="arithmetic",
+                    choices=("arithmetic", "synthetic"))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seq", type=int, default=24)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+    train(arch=args.arch, data=args.data, steps=args.steps,
+          batch=args.batch, seq=args.seq, lr=args.lr, seed=args.seed,
+          ckpt=args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

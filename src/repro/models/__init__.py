@@ -1,0 +1,9 @@
+from repro.models.params import (
+    abstract_params, count_params, init_params, model_defs, param_specs)
+from repro.models.transformer import (
+    decode_step, forward, init_cache, prefill)
+
+__all__ = [
+    "abstract_params", "count_params", "decode_step", "forward",
+    "init_cache", "init_params", "model_defs", "param_specs", "prefill",
+]

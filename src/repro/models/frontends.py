@@ -1,0 +1,38 @@
+"""Modality frontends — STUBS per the assignment.
+
+The audio (mel-spectrogram + conv) and vision (ViT/SigLIP + projector)
+encoders are not implemented; ``input_specs()`` provides precomputed
+frame/patch embeddings of the right shape. These helpers generate
+deterministic synthetic embeddings for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def audio_frame_shape(cfg: ModelConfig, batch: int):
+    e = cfg.encoder
+    assert e is not None, "audio frontend requires an encoder config"
+    return (batch, e.num_frames, e.d_frontend)
+
+
+def vision_patch_shape(cfg: ModelConfig, batch: int):
+    assert cfg.num_patches > 0, "vision frontend requires num_patches"
+    return (batch, cfg.num_patches, cfg.d_model)
+
+
+def synthetic_frames(cfg: ModelConfig, batch: int, seed: int = 0):
+    """Deterministic stand-in for mel+conv output (B, F, d)."""
+    shape = audio_frame_shape(cfg, batch)
+    return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                             jnp.dtype(cfg.dtype)) * 0.02
+
+
+def synthetic_patches(cfg: ModelConfig, batch: int, seed: int = 0):
+    """Deterministic stand-in for ViT+projector output (B, P, d)."""
+    shape = vision_patch_shape(cfg, batch)
+    return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                             jnp.dtype(cfg.dtype)) * 0.02

@@ -1,0 +1,126 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, embeddings.
+
+All layers are pure functions over plain dict params so the same code path
+serves init, training, prefill and decode, and params remain a transparent
+pytree for sharding/checkpointing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,), float32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    half = x.shape[-1] // 2
+    inv = rope_freqs(x.shape[-1], theta)                   # (half,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., seq, half)
+    sin = jnp.sin(ang)[..., None, :]                       # (..., seq, 1, half)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------
+def swiglu_mlp(params: dict, x: jax.Array) -> jax.Array:
+    """Gated SwiGLU MLP: params {w_gate, w_up, w_down}; x (..., d)."""
+    gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    if x.ndim == 3:
+        gate = shard(gate, "batch", "seq", "ff")
+        up = shard(up, "batch", "seq", "ff")
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def gelu_mlp(params: dict, x: jax.Array) -> jax.Array:
+    """2-matmul GELU MLP (whisper): params {w_in, b_in, w_out, b_out}."""
+    h = jnp.einsum("...d,df->...f", x, params["w_in"]) + params["b_in"]
+    if x.ndim == 3:
+        h = shard(h, "batch", "seq", "ff")
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["w_out"]) + params["b_out"]
+
+
+def embed_tokens(embedding: jax.Array, tokens: jax.Array) -> jax.Array:
+    """embedding (V, d) [vocab-sharded]; tokens (B, S) int32."""
+    out = jnp.take(embedding, tokens, axis=0)
+    return shard(out, "batch", "seq", "embed")
+
+
+def lm_head(params: dict, x: jax.Array, tie_embeddings: bool) -> jax.Array:
+    w = params["embedding"] if tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...d,vd->...v", x, w) if tie_embeddings else \
+        jnp.einsum("...d,dv->...v", x, w)
+    if logits.ndim == 3:
+        logits = shard(logits, "batch", "seq", "vocab")
+    return logits
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array,
+                  bias: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv via shifted adds.
+
+    x: (B, S, C); w: (width, C). Cheap for the small widths (4) used by
+    mamba / RG-LRU, and trivially shardable over C.
+    """
+    width = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(width):
+        shift = width - 1 - k   # tap k sees x[t - shift]
+        xs = x if shift == 0 else jnp.pad(
+            x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xs.astype(jnp.float32) * w[k].astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def causal_conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+                       bias: Optional[jax.Array] = None):
+    """Single decode step. x_t: (B, C); conv_state: (B, width-1, C)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    new_state = window[:, 1:, :]
+    return out.astype(x_t.dtype), new_state

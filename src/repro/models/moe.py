@@ -1,0 +1,145 @@
+"""Mixture-of-experts FFN with capacity-based local dispatch.
+
+TPU adaptation (DESIGN.md §3): tokens are reshaped to
+(moe_shards, tokens_per_shard, d) with the leading dim mapped to the
+"data" mesh axis, so the cumsum/scatter dispatch is *per-data-shard
+local* under pjit (no cross-shard prefix sums). Expert FFN weights are
+tensor-sharded over the model axis ("tp" impl: zero all-to-all; the
+partial sums over d_ff reduce with the usual psum XLA inserts).
+
+An expert-parallel ("ep") variant — experts sharded over the model axis
+with shard_map + all-to-all — is provided for the perf study.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.sharding import shard
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def moe_capacity(mcfg: MoEConfig, tokens_per_shard: int) -> int:
+    cap = int(mcfg.top_k * tokens_per_shard / mcfg.num_experts
+              * mcfg.capacity_factor)
+    return max(_round_up(max(cap, 1), 8), 8)
+
+
+def router_topk(probs: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """probs: (..., E) -> (gates (..., k), idx (..., k)); gates renormed."""
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(axis=-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def load_balance_aux(probs: jax.Array, idx: jax.Array,
+                     num_experts: int) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * P_e (f over top-1 choice)."""
+    p_mean = probs.reshape(-1, num_experts).mean(axis=0)
+    top1 = idx[..., 0].reshape(-1)
+    f = jnp.bincount(top1, length=num_experts) / top1.shape[0]
+    return num_experts * jnp.sum(f * p_mean)
+
+
+def moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array,
+            moe_shards: int = 1) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y (B, S, d), aux_loss scalar)."""
+    mcfg = cfg.moe
+    assert mcfg is not None
+    b, s, d = x.shape
+    t = b * s
+    g = moe_shards if t % moe_shards == 0 else 1
+    tl = t // g
+    e, k = mcfg.num_experts, mcfg.top_k
+    cap = moe_capacity(mcfg, tl)
+
+    xs = x.reshape(g, tl, d)
+    xs = shard(xs, "batch", None, "embed")
+
+    logits = jnp.einsum("gtd,de->gte", xs, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = router_topk(probs, k)                   # (g,tl,k)
+    aux = load_balance_aux(probs, eidx, e)
+
+    # position of each (token, choice) within its expert, per shard
+    eflat = eidx.reshape(g, tl * k)
+    onehot = jax.nn.one_hot(eflat, e, dtype=jnp.int32)    # (g,tl*k,E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.take_along_axis(
+        pos_in_e, eflat[..., None], axis=-1)[..., 0]      # (g,tl*k)
+    keep = pos < cap
+    slot = jnp.where(keep, eflat * cap + pos, e * cap)    # overflow -> sink
+
+    xrep = jnp.broadcast_to(xs[:, :, None, :], (g, tl, k, d)).reshape(
+        g, tl * k, d)
+
+    def dispatch(slot_g, xrep_g):
+        buf = jnp.zeros((e * cap + 1, d), xs.dtype)
+        return buf.at[slot_g].add(xrep_g)
+
+    buf = jax.vmap(dispatch)(slot, xrep)[:, :e * cap]     # (g,E*cap,d)
+    ebuf = buf.reshape(g, e, cap, d)
+    ebuf = shard(ebuf, "batch", "experts", None, "embed")
+
+    # expert SwiGLU, d_ff sharded over model axis under the "tp" impl
+    gate_h = jnp.einsum("gecd,edf->gecf", ebuf, p["w_gate"])
+    up_h = jnp.einsum("gecd,edf->gecf", ebuf, p["w_up"])
+    gate_h = shard(gate_h, "batch", "experts", None, "expert_ff")
+    up_h = shard(up_h, "batch", "experts", None, "expert_ff")
+    h = jax.nn.silu(gate_h.astype(jnp.float32)).astype(x.dtype) * up_h
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])    # psum over ff
+
+    oflat = out.reshape(g, e * cap, d)
+    oflat = jnp.concatenate(
+        [oflat, jnp.zeros((g, 1, d), out.dtype)], axis=1)  # sink row
+
+    def combine(slot_g, oflat_g):
+        return oflat_g[slot_g]
+
+    yrep = jax.vmap(combine)(slot, oflat)                 # (g,tl*k,d)
+    w = (gates.reshape(g, tl * k) * keep).astype(x.dtype)
+    y = (yrep * w[..., None]).reshape(g, tl, k, d).sum(axis=2)
+    y = y.reshape(b, s, d)
+
+    if mcfg.num_shared_experts:
+        sg = jnp.einsum("bsd,df->bsf", x, p["shared_w_gate"])
+        su = jnp.einsum("bsd,df->bsf", x, p["shared_w_up"])
+        sh = jax.nn.silu(sg.astype(jnp.float32)).astype(x.dtype) * su
+        y = y + jnp.einsum("bsf,fd->bsd", sh, p["shared_w_down"])
+    return y, aux
+
+
+def moe_ffn_token(cfg: ModelConfig, p: dict, x: jax.Array
+                  ) -> jax.Array:
+    """Decode path: dense-gather MoE for a (B, d) single-token batch.
+
+    At decode the batch is tiny; gathering the top-k expert weights per
+    token is cheaper than capacity dispatch.
+    """
+    mcfg = cfg.moe
+    assert mcfg is not None
+    logits = jnp.einsum("bd,de->be", x, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = router_topk(probs, mcfg.top_k)          # (B,k)
+    wg = p["w_gate"][eidx]                                # (B,k,d,f)
+    wu = p["w_up"][eidx]
+    wd = p["w_down"][eidx]                                # (B,k,f,d)
+    gh = jnp.einsum("bd,bkdf->bkf", x, wg)
+    uh = jnp.einsum("bd,bkdf->bkf", x, wu)
+    h = jax.nn.silu(gh.astype(jnp.float32)).astype(x.dtype) * uh
+    out = jnp.einsum("bkf,bkfd->bkd", h, wd)
+    y = (out * gates[..., None].astype(x.dtype)).sum(axis=1)
+    if mcfg.num_shared_experts:
+        sg = jnp.einsum("bd,df->bf", x, p["shared_w_gate"])
+        su = jnp.einsum("bd,df->bf", x, p["shared_w_up"])
+        sh = jax.nn.silu(sg.astype(jnp.float32)).astype(x.dtype) * su
+        y = y + jnp.einsum("bf,fd->bd", sh, p["shared_w_down"])
+    return y

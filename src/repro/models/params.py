@@ -1,0 +1,299 @@
+"""Parameter definitions, initialisation, and partition specs.
+
+Each weight is declared once as a ``WeightDef`` (shape + logical axis
+names + init kind); ``init_params`` and ``param_specs`` both traverse the
+same def tree, so sharding specs can never drift from the param pytree.
+Scanned layer stacks get a leading "layers" axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.ssm import ssm_dims
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | a_log | lam
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _norm_def(d: int, with_bias: bool) -> Dict[str, WeightDef]:
+    out = {"scale": WeightDef((d,), ("embed",), "ones")}
+    if with_bias:
+        out["bias"] = WeightDef((d,), ("embed",), "zeros")
+    return out
+
+
+def _attn_defs(cfg: ModelConfig) -> Dict[str, WeightDef]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    return {
+        "wq": WeightDef((d, h * hd), ("embed", "heads")),
+        "wk": WeightDef((d, kv * hd), ("embed", "kv_heads")),
+        "wv": WeightDef((d, kv * hd), ("embed", "kv_heads")),
+        "wo": WeightDef((h * hd, d), ("heads", "embed")),
+    }
+
+
+def _mla_defs(cfg: ModelConfig) -> Dict[str, WeightDef]:
+    m = cfg.mla
+    assert m is not None
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": WeightDef((d, m.q_lora_rank), ("embed", None)),
+        "q_norm": WeightDef((m.q_lora_rank,), (None,), "ones"),
+        "wq_b": WeightDef((m.q_lora_rank, h * qk), (None, "heads")),
+        "wkv_a": WeightDef((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                           ("embed", None)),
+        "kv_norm": WeightDef((m.kv_lora_rank,), (None,), "ones"),
+        "wk_b": WeightDef((m.kv_lora_rank, h * m.qk_nope_head_dim),
+                          (None, "heads")),
+        "wv_b": WeightDef((m.kv_lora_rank, h * m.v_head_dim),
+                          (None, "heads")),
+        "wo": WeightDef((h * m.v_head_dim, d), ("heads", "embed")),
+    }
+
+
+def _mlp_defs(cfg: ModelConfig, d_ff: int) -> Dict[str, WeightDef]:
+    d = cfg.d_model
+    if cfg.family == "audio":
+        return {
+            "w_in": WeightDef((d, d_ff), ("embed", "ff")),
+            "b_in": WeightDef((d_ff,), ("ff",), "zeros"),
+            "w_out": WeightDef((d_ff, d), ("ff", "embed")),
+            "b_out": WeightDef((d,), ("embed",), "zeros"),
+        }
+    return {
+        "w_gate": WeightDef((d, d_ff), ("embed", "ff")),
+        "w_up": WeightDef((d, d_ff), ("embed", "ff")),
+        "w_down": WeightDef((d_ff, d), ("ff", "embed")),
+    }
+
+
+def _moe_defs(cfg: ModelConfig) -> Dict[str, WeightDef]:
+    m = cfg.moe
+    assert m is not None
+    d, e, f = cfg.d_model, m.num_experts, m.d_ff_expert
+    out = {
+        "router": WeightDef((d, e), ("embed", None)),
+        "w_gate": WeightDef((e, d, f), ("experts", "embed", "expert_ff")),
+        "w_up": WeightDef((e, d, f), ("experts", "embed", "expert_ff")),
+        "w_down": WeightDef((e, f, d), ("experts", "expert_ff", "embed")),
+    }
+    if m.num_shared_experts:
+        sf = m.num_shared_experts * m.d_ff_shared
+        out.update({
+            "shared_w_gate": WeightDef((d, sf), ("embed", "ff")),
+            "shared_w_up": WeightDef((d, sf), ("embed", "ff")),
+            "shared_w_down": WeightDef((sf, d), ("ff", "embed")),
+        })
+    return out
+
+
+def _ssm_defs(cfg: ModelConfig) -> Dict[str, WeightDef]:
+    s = cfg.ssm
+    assert s is not None
+    d = cfg.d_model
+    d_in, dt_rank, n = ssm_dims(cfg)
+    return {
+        "w_in_x": WeightDef((d, d_in), ("embed", "d_inner")),
+        "w_in_z": WeightDef((d, d_in), ("embed", "d_inner")),
+        "conv_w": WeightDef((s.conv_width, d_in), (None, "d_inner")),
+        "conv_b": WeightDef((d_in,), ("d_inner",), "zeros"),
+        "w_xproj": WeightDef((d_in, dt_rank + 2 * n), ("d_inner", None)),
+        "w_dt": WeightDef((dt_rank, d_in), (None, "d_inner")),
+        "b_dt": WeightDef((d_in,), ("d_inner",), "zeros"),
+        "a_log": WeightDef((d_in, n), ("d_inner", None), "a_log"),
+        "d_skip": WeightDef((d_in,), ("d_inner",), "ones"),
+        "w_out": WeightDef((d_in, d), ("d_inner", "embed")),
+    }
+
+
+def _rglru_defs(cfg: ModelConfig) -> Dict[str, WeightDef]:
+    r = cfg.rglru
+    assert r is not None
+    d = cfg.d_model
+    w = r.lru_width or d
+    return {
+        "w_x": WeightDef((d, w), ("embed", "d_inner")),
+        "w_g": WeightDef((d, w), ("embed", "d_inner")),
+        "conv_w": WeightDef((r.conv_width, w), (None, "d_inner")),
+        "conv_b": WeightDef((w,), ("d_inner",), "zeros"),
+        "w_a": WeightDef((w, w), ("d_inner", None)),
+        "b_a": WeightDef((w,), (None,), "zeros"),
+        "w_i": WeightDef((w, w), ("d_inner", None)),
+        "b_i": WeightDef((w,), (None,), "zeros"),
+        "lam": WeightDef((w,), (None,), "lam"),
+        "w_out": WeightDef((w, d), ("d_inner", "embed")),
+    }
+
+
+def layer_defs(cfg: ModelConfig, kind: str, layer_idx: int,
+               cross_attn: bool = False) -> dict:
+    """Def tree for one decoder layer of the given kind."""
+    d = cfg.d_model
+    bias = cfg.family == "audio"
+    if kind == "ssm":
+        return {"norm": _norm_def(d, bias), "ssm": _ssm_defs(cfg)}
+    out: dict = {}
+    if kind == "attn":
+        out["attn_norm"] = _norm_def(d, bias)
+        out["attn"] = _mla_defs(cfg) if cfg.attn_kind == "mla" \
+            else _attn_defs(cfg)
+        if cross_attn:
+            out["cross_norm"] = _norm_def(d, bias)
+            out["cross"] = _attn_defs(cfg)
+    elif kind == "rglru":
+        out["mix_norm"] = _norm_def(d, bias)
+        out["rglru"] = _rglru_defs(cfg)
+    out["mlp_norm"] = _norm_def(d, bias)
+    use_moe = (cfg.moe is not None and kind == "attn"
+               and layer_idx >= cfg.moe.first_moe_layer)
+    out["mlp"] = _moe_defs(cfg) if use_moe else _mlp_defs(cfg, cfg.d_ff)
+    return out
+
+
+def _stack_defs(defs: dict, n: int) -> dict:
+    """Prepend a (scanned) layers axis to every WeightDef in a tree."""
+    return jax.tree.map(
+        lambda wd: WeightDef((n,) + wd.shape, ("layers",) + wd.axes,
+                             wd.init, wd.scale),
+        defs, is_leaf=lambda x: isinstance(x, WeightDef))
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    """Full parameter def tree for an architecture."""
+    d, v = cfg.d_model, cfg.vocab_size
+    defs: dict = {
+        "embedding": WeightDef((v, d), ("vocab", "embed")),
+        "final_norm": _norm_def(d, cfg.family == "audio"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = WeightDef((d, v), ("embed", "vocab"))
+
+    kinds = cfg.layer_kinds
+    if cfg.family == "hybrid":
+        # non-uniform layer stack: per-layer subtrees (unrolled)
+        for i, kind in enumerate(kinds):
+            defs[f"layer_{i:02d}"] = layer_defs(cfg, kind, i)
+    elif cfg.family == "audio":
+        e = cfg.encoder
+        assert e is not None
+        enc_layer = {
+            "attn_norm": _norm_def(d, True),
+            "attn": _attn_defs(cfg),
+            "mlp_norm": _norm_def(d, True),
+            "mlp": _mlp_defs(cfg, cfg.d_ff),
+        }
+        defs["enc_layers"] = _stack_defs(enc_layer, e.num_layers)
+        defs["enc_final_norm"] = _norm_def(d, True)
+        defs["dec_layers"] = _stack_defs(
+            layer_defs(cfg, "attn", 0, cross_attn=True), cfg.num_layers)
+        defs["dec_pos"] = WeightDef((cfg.max_position, d),
+                                    (None, "embed"))
+    elif cfg.moe is not None and cfg.moe.first_moe_layer > 0:
+        # deepseek-v2: dense layer(s) first, uniform MoE stack after
+        k = cfg.moe.first_moe_layer
+        for i in range(k):
+            dense = {
+                "attn_norm": _norm_def(d, False),
+                "attn": _mla_defs(cfg) if cfg.attn_kind == "mla"
+                else _attn_defs(cfg),
+                "mlp_norm": _norm_def(d, False),
+                "mlp": _mlp_defs(cfg, cfg.d_ff),
+            }
+            defs[f"layer_{i:02d}"] = dense
+        defs["layers"] = _stack_defs(
+            layer_defs(cfg, "attn", k), cfg.num_layers - k)
+    else:
+        defs["layers"] = _stack_defs(
+            layer_defs(cfg, kinds[0], 0), cfg.num_layers)
+    return defs
+
+
+# ----------------------------------------------------------------------
+def _is_def(x) -> bool:
+    return isinstance(x, WeightDef)
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> dict:
+    """Materialise parameters (deterministic per tree path)."""
+    defs = model_defs(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(rng, len(leaves))
+
+    def make(wd: WeightDef, key):
+        if wd.init == "zeros":
+            return jnp.zeros(wd.shape, dtype)
+        if wd.init == "ones":
+            return jnp.ones(wd.shape, dtype)
+        if wd.init == "a_log":
+            # mamba S4D-real init: A = -(1..N) per channel
+            n = wd.shape[-1]
+            a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                 wd.shape)
+            return jnp.log(a)
+        if wd.init == "lam":
+            # RG-LRU: a in (0.9, 0.999) at init
+            u = jax.random.uniform(key, wd.shape, jnp.float32,
+                                   0.9 ** 2, 0.999 ** 2)
+            return jnp.log(jnp.exp(-jnp.log(u) / (2 * _RG_C)) - 1.0)
+        fan_in = wd.shape[-2] if len(wd.shape) >= 2 else wd.shape[-1]
+        scale = min(wd.scale, 1.0 / np.sqrt(fan_in))
+        return (jax.random.normal(key, wd.shape, jnp.float32)
+                * scale).astype(dtype)
+
+    params = [make(wd, k) for wd, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, params)
+
+
+_RG_C = 8.0
+
+
+def param_specs(cfg: ModelConfig, rules: dict) -> dict:
+    """PartitionSpec tree mirroring init_params exactly."""
+    defs = model_defs(cfg)
+
+    def to_spec(wd: WeightDef) -> P:
+        spec, used = [], set()
+        for ax in wd.axes:
+            mesh_axis = rules.get(ax) if ax is not None else None
+            if mesh_axis is None or mesh_axis in used:
+                spec.append(None)
+            else:
+                spec.append(mesh_axis)
+                used.add(mesh_axis)
+        return P(*spec)
+
+    return jax.tree.map(to_spec, defs, is_leaf=_is_def)
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct tree (no allocation) for dry-run lowering."""
+    defs = model_defs(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+
+    def to_sds(wd: WeightDef):
+        dt = jnp.float32 if wd.init in ("a_log", "lam") else dtype
+        return jax.ShapeDtypeStruct(wd.shape, dt)
+
+    return jax.tree.map(to_sds, defs, is_leaf=_is_def)
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

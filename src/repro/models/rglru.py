@@ -1,0 +1,98 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) with
+a_t = exp(-c * softplus(Lambda) * r_t), r_t/i_t sigmoid gates of the
+conv output. State is (B, width) per layer, so the whole sequence scan
+fits as a single log-depth ``lax.associative_scan`` (state dim 1 per
+channel) — no chunking needed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import causal_conv1d, causal_conv1d_step
+from repro.sharding import shard
+
+_C = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+def _gates(p: dict, xc: jax.Array):
+    """xc: (..., w) conv output -> (log_a, gated input) in f32."""
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xf,
+                                  p["w_a"].astype(jnp.float32))
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xf,
+                                  p["w_i"].astype(jnp.float32))
+                       + p["b_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) input normalisation, clipped for stability
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.square(a), 1e-12, 1.0))
+    return a, beta * i * xf
+
+
+def rglru_scan(p: dict, xc: jax.Array, h0=None):
+    """xc: (B, S, w). Returns y (B, S, w) f32, h_final (B, w) f32."""
+    bsz, s, w = xc.shape
+    a, u = _gates(p, xc)                                   # (B,S,w)
+    if h0 is not None:
+        # fold the carried state in as a virtual step before t=0
+        u = u.at[:, 0].add(a[:, 0] * h0)
+    def comb(left, right):
+        al, ul = left
+        ar, ur = right
+        return al * ar, ul * ar + ur
+    _, hs = jax.lax.associative_scan(comb, (a, u), axis=1)
+    return hs, hs[:, -1]
+
+
+def rglru_step(p: dict, x_t: jax.Array, h: jax.Array):
+    """x_t: (B, w) conv output; h: (B, w) f32 state."""
+    a, u = _gates(p, x_t)
+    h_new = a * h + u
+    return h_new, h_new
+
+
+def rglru_block(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Full-sequence Griffin recurrent block. x: (B, S, d_model)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    gb = jnp.einsum("bsd,dw->bsw", x, p["w_g"])
+    xb = shard(xb, "batch", "seq", "d_inner")
+    gb = shard(gb, "batch", "seq", "d_inner")
+    xc = causal_conv1d(xb, p["conv_w"], p["conv_b"])
+    if cfg.use_pallas:
+        # TPU deployment: RG-LRU chunk-walk Pallas kernel.
+        from repro.kernels import ops
+        a, u = _gates(p, xc)
+        y, _ = ops.rglru_scan(a, u, chunk=cfg.rglru.chunk)
+    else:
+        y, _ = rglru_scan(p, xc)
+    y = y * jax.nn.gelu(gb.astype(jnp.float32))
+    return jnp.einsum("bsw,wd->bsd", y.astype(x.dtype), p["w_out"])
+
+
+def rglru_prefill(cfg: ModelConfig, p: dict, x: jax.Array):
+    width = cfg.rglru.conv_width
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    gb = jnp.einsum("bsd,dw->bsw", x, p["w_g"])
+    xc = causal_conv1d(xb, p["conv_w"], p["conv_b"])
+    y, h = rglru_scan(p, xc)
+    y = y * jax.nn.gelu(gb.astype(jnp.float32))
+    out = jnp.einsum("bsw,wd->bsd", y.astype(x.dtype), p["w_out"])
+    return out, {"conv": xb[:, -(width - 1):, :], "h": h}
+
+
+def rglru_block_step(cfg: ModelConfig, p: dict, x_t: jax.Array,
+                     state: dict):
+    """One decode step. x_t: (B, d_model); state {conv, h}."""
+    xb = jnp.einsum("bd,dw->bw", x_t, p["w_x"])
+    gb = jnp.einsum("bd,dw->bw", x_t, p["w_g"])
+    xc, conv_state = causal_conv1d_step(xb, state["conv"], p["conv_w"],
+                                        p["conv_b"])
+    y, h = rglru_step(p, xc, state["h"])
+    y = y * jax.nn.gelu(gb.astype(jnp.float32))
+    out = jnp.einsum("bw,wd->bd", y.astype(x_t.dtype), p["w_out"])
+    return out, {"conv": conv_state, "h": h}

@@ -1,0 +1,42 @@
+"""Scan lowering flags for cost-exact dry-run compiles.
+
+XLA's HloCostAnalysis counts a ``while`` body ONCE regardless of trip
+count, so any ``lax.scan`` (layer stacks, flash KV-block loop, the SSM
+chunk loop) under-reports FLOPs/bytes in ``compiled.cost_analysis()``.
+The deployed program keeps the scans (bounded HLO, fast compiles); the
+dry-run additionally compiles small *unrolled* variants under
+``unrolled_costs()`` and extrapolates exact per-layer costs
+(launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+
+class _Flags(threading.local):
+    def __init__(self):
+        self.unroll = False
+
+
+_FLAGS = _Flags()
+
+
+def cost_unroll() -> bool:
+    """True while lowering for cost analysis — scans fully unroll."""
+    return _FLAGS.unroll
+
+
+@contextlib.contextmanager
+def unrolled_costs():
+    prev = _FLAGS.unroll
+    _FLAGS.unroll = True
+    try:
+        yield
+    finally:
+        _FLAGS.unroll = prev
+
+
+def scan_unroll_arg():
+    """Value for lax.scan(..., unroll=...) honoring the flag."""
+    return True if _FLAGS.unroll else 1

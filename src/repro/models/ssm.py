@@ -1,0 +1,156 @@
+"""Mamba-1 selective state-space block.
+
+TPU adaptation (DESIGN.md §3): the CUDA selective-scan kernel is
+re-derived as a *two-level* scan —
+  outer: sequential ``lax.scan`` over chunks (bounded memory),
+  inner: ``lax.associative_scan`` within a chunk (log-depth parallel
+         prefix, maps onto the VPU instead of warp shuffles).
+Only one chunk's (B, c, d_inner, N) decay/update tensors are live at a
+time; d_inner is sharded over the model axis.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import causal_conv1d, causal_conv1d_step
+from repro.sharding import shard
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    assert s is not None
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank, s.state_dim
+
+
+def selective_scan(x, dt, a_log, b_in, c_in, h0=None, chunk: int = 256):
+    """Chunked selective scan.
+
+    x, dt: (B, S, D); a_log: (D, N); b_in, c_in: (B, S, N).
+    h0: optional (B, D, N) initial state.
+    Returns y (B, S, D), h_final (B, D, N), all f32 math.
+    """
+    bsz, s, d = x.shape
+    n = a_log.shape[1]
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))               # (D,N), < 0
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(x.astype(jnp.float32)),
+          to_chunks(dt.astype(jnp.float32)),
+          to_chunks(b_in.astype(jnp.float32)),
+          to_chunks(c_in.astype(jnp.float32)))
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d, n), jnp.float32)
+
+    def comb(left, right):
+        al, ul = left
+        ar, ur = right
+        return al * ar, ul * ar + ur
+
+    def body(h, xc):
+        xb, dtb, bb, cb = xc                              # (B,c,D),(B,c,D),(B,c,N)
+        dta = jnp.exp(dtb[..., None] * a)                 # (B,c,D,N) decay
+        u = (dtb * xb)[..., None] * bb[:, :, None, :]     # (B,c,D,N)
+        a_s, u_s = jax.lax.associative_scan(comb, (dta, u), axis=1)
+        hs = a_s * h[:, None] + u_s                       # (B,c,D,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cb)
+        return hs[:, -1], y
+
+    from repro.models.scan_flags import scan_unroll_arg
+    h_final, ys = jax.lax.scan(body, h0, xs, unroll=scan_unroll_arg())
+    y = ys.swapaxes(0, 1).reshape(bsz, s, d)
+    return y, h_final
+
+
+def selective_scan_step(x_t, dt_t, a_log, b_t, c_t, h):
+    """One decode step. x_t, dt_t: (B, D); b_t, c_t: (B, N); h: (B, D, N)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dta = jnp.exp(dt_t.astype(jnp.float32)[..., None] * a)       # (B,D,N)
+    u = (dt_t * x_t).astype(jnp.float32)[..., None] * \
+        b_t.astype(jnp.float32)[:, None, :]
+    h_new = dta * h + u
+    y = jnp.einsum("bdn,bn->bd", h_new, c_t.astype(jnp.float32))
+    return y, h_new
+
+
+def _proj_inputs(cfg: ModelConfig, p: dict, xc):
+    """Shared dt/B/C projection from the conv output."""
+    d_in, dt_rank, n = ssm_dims(cfg)
+    xdb = jnp.einsum("...d,dr->...r", xc, p["w_xproj"])
+    dt_low = xdb[..., :dt_rank]
+    b_in = xdb[..., dt_rank:dt_rank + n]
+    c_in = xdb[..., dt_rank + n:]
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,rd->...d", dt_low, p["w_dt"]).astype(jnp.float32)
+        + p["b_dt"].astype(jnp.float32))
+    return dt, b_in, c_in
+
+
+def mamba_block(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Full-sequence mamba block. x: (B, S, d_model)."""
+    d_in, _, _ = ssm_dims(cfg)
+    xb = jnp.einsum("bsd,dk->bsk", x, p["w_in_x"])
+    z = jnp.einsum("bsd,dk->bsk", x, p["w_in_z"])
+    xb = shard(xb, "batch", "seq", "d_inner")
+    z = shard(z, "batch", "seq", "d_inner")
+    xc = causal_conv1d(xb, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dt, b_in, c_in = _proj_inputs(cfg, p, xc)
+    if cfg.use_pallas:
+        # TPU deployment: chunked selective-scan Pallas kernel
+        # (jnp-oracle fallback off-TPU keeps CPU paths exact).
+        from repro.kernels import ops
+        y, _ = ops.selective_scan(xc, dt, p["a_log"], b_in, c_in,
+                                  chunk=cfg.ssm.chunk)
+        y = y.astype(jnp.float32)
+    else:
+        y, _ = selective_scan(xc, dt, p["a_log"], b_in, c_in,
+                              chunk=cfg.ssm.chunk)
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y.astype(x.dtype)
+    return jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+
+
+def mamba_prefill(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Like mamba_block but also returns decode state {conv, h}."""
+    d_in, _, _ = ssm_dims(cfg)
+    width = cfg.ssm.conv_width
+    xb = jnp.einsum("bsd,dk->bsk", x, p["w_in_x"])
+    z = jnp.einsum("bsd,dk->bsk", x, p["w_in_z"])
+    xc = causal_conv1d(xb, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dt, b_in, c_in = _proj_inputs(cfg, p, xc)
+    y, h = selective_scan(xc, dt, p["a_log"], b_in, c_in,
+                          chunk=cfg.ssm.chunk)
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsk,kd->bsd", y.astype(x.dtype), p["w_out"])
+    conv_state = xb[:, -(width - 1):, :]                  # pre-activation taps
+    return out, {"conv": conv_state, "h": h}
+
+
+def mamba_step(cfg: ModelConfig, p: dict, x_t: jax.Array, state: dict):
+    """One decode step. x_t: (B, d_model); state {conv, h}."""
+    xb = jnp.einsum("bd,dk->bk", x_t, p["w_in_x"])
+    z = jnp.einsum("bd,dk->bk", x_t, p["w_in_z"])
+    xc, conv_state = causal_conv1d_step(xb, state["conv"], p["conv_w"],
+                                        p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x_t.dtype)
+    dt, b_t, c_t = _proj_inputs(cfg, p, xc)
+    y, h = selective_scan_step(xc, dt, p["a_log"], b_t, c_t, state["h"])
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bk,kd->bd", y.astype(x_t.dtype), p["w_out"])
+    return out, {"conv": conv_state, "h": h}

@@ -1,0 +1,29 @@
+"""Next-token cross-entropy with masking, numerically stable in fp32."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None
+                          ) -> Tuple[jax.Array, dict]:
+    """logits: (B, S, V); labels: (B, S) int32; mask: (B, S) {0,1}.
+
+    Returns (mean loss over unmasked positions, metrics dict).
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    total = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / total
+    acc = ((jnp.argmax(logits, -1) == labels) * mask).sum() / total
+    return loss, {"loss": loss, "token_accuracy": acc,
+                  "tokens": total}

@@ -1,0 +1,4 @@
+from repro.sampling.sampler import (
+    GenerateOutput, decode_text, generate, sample_token)
+
+__all__ = ["GenerateOutput", "decode_text", "generate", "sample_token"]

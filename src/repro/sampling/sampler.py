@@ -1,0 +1,80 @@
+"""Prefill + KV-cache decode sampling loop.
+
+``generate`` is a single jitted XLA program per (config, shape): prefill
+builds the cache sized for prompt+new tokens, then a ``lax.scan`` drives
+``decode_step`` for ``max_new_tokens`` steps. Temperature 0 is greedy;
+otherwise tokens come from a temperature-scaled categorical. Finished
+rows (EOS emitted) keep emitting ``pad_id`` without disturbing the
+cache, so the whole batch runs a fixed-length program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+class GenerateOutput(NamedTuple):
+    tokens: jax.Array        # (B, max_new) int32, pad_id after EOS
+    logprobs: jax.Array      # (B, max_new) float32 logprob of chosen tok
+    lengths: jax.Array       # (B,) int32 — emitted tokens incl. EOS
+
+
+def sample_token(logits: jax.Array, temperature: float,
+                 key: jax.Array) -> jax.Array:
+    """logits: (B, V) -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "max_new_tokens", "temperature", "eos_id",
+                     "pad_id"))
+def generate(cfg: ModelConfig, params: dict, prompt_tokens: jax.Array,
+             *, max_new_tokens: int, temperature: float = 0.0,
+             key: Optional[jax.Array] = None, eos_id: int = -1,
+             pad_id: int = 0,
+             frontend_embeds: Optional[jax.Array] = None
+             ) -> GenerateOutput:
+    """prompt_tokens: (B, S) int32 — fixed-length prompts."""
+    b, s = prompt_tokens.shape
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    total = s + max_new_tokens
+    logits0, cache = T.prefill(cfg, params, prompt_tokens,
+                               frontend_embeds, cache_len=total)
+
+    def body(carry, step_key):
+        cache, logits, pos, done = carry
+        tok = sample_token(logits, temperature, step_key)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        tok_logp = jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
+        emit = jnp.where(done, pad_id, tok)
+        new_done = done | (tok == eos_id)
+        next_logits, cache = T.decode_step(cfg, params, cache, emit, pos)
+        return ((cache, next_logits, pos + 1, new_done),
+                (emit, jnp.where(done, 0.0, tok_logp)))
+
+    keys = jax.random.split(key, max_new_tokens)
+    init = (cache, logits0, jnp.int32(s),
+            jnp.zeros((b,), bool))
+    (_, _, _, done), (toks, logps) = jax.lax.scan(body, init, keys)
+    toks = toks.T                      # (B, max_new)
+    logps = logps.T
+    lengths = (toks != pad_id).sum(axis=1).astype(jnp.int32)
+    return GenerateOutput(tokens=toks, logprobs=logps, lengths=lengths)
+
+
+def decode_text(tokens, detok) -> list:
+    """Apply a detokenizer callable row-wise (host-side helper)."""
+    import numpy as np
+    toks = np.asarray(tokens)
+    return [detok(row) for row in toks]

@@ -1,0 +1,9 @@
+from repro.serving.engine import (
+    BatchedACAREngine, BatchResult, ZooModel, intern_answers,
+    judge_batch)
+from repro.serving.jax_backend import JaxModelBackend
+
+__all__ = [
+    "BatchedACAREngine", "BatchResult", "JaxModelBackend", "ZooModel",
+    "intern_answers", "judge_batch",
+]

@@ -1,0 +1,19 @@
+from repro.sharding.partitioning import (
+    FULL_DP_RULES,
+    MULTI_POD_RULES,
+    NO_KV_SHARD_RULES,
+    RULE_SETS,
+    SINGLE_POD_RULES,
+    axis_rules,
+    mesh_axis_size,
+    named_sharding,
+    resolve,
+    rule_set,
+    shard,
+)
+
+__all__ = [
+    "FULL_DP_RULES", "MULTI_POD_RULES", "NO_KV_SHARD_RULES",
+    "RULE_SETS", "SINGLE_POD_RULES", "axis_rules", "mesh_axis_size",
+    "named_sharding", "resolve", "rule_set", "shard",
+]

@@ -1,0 +1,158 @@
+"""Logical-axis partitioning rules.
+
+Model code annotates activations with *logical* axis names via
+``shard(x, "batch", "seq", "heads", None)``. At launch time a rule set maps
+logical names to mesh axes; outside a rules context the helpers are no-ops,
+so smoke tests on one CPU device never touch device state.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, None, Tuple[str, ...]]
+
+# Default rules for the ("data", "model") production mesh. "pod" (multi-pod)
+# extends the data axis: batch shards over ("pod", "data").
+SINGLE_POD_RULES = {
+    "batch": "data",
+    "seq": None,
+    "seq_kv": "model",     # MQA decode: shard KV cache along sequence
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "experts": None,       # "tp" MoE: experts replicated, d_ff sharded
+    "expert_ff": "model",
+    "state": None,
+    "d_inner": "model",    # mamba/rglru channel dim
+    "layers": None,
+    "frames": None,
+    "kv_lora": None,
+}
+
+MULTI_POD_RULES = dict(SINGLE_POD_RULES, batch=("pod", "data"))
+
+# ----------------------------------------------------------------------
+# alternative rule sets (perf iterations, EXPERIMENTS.md §Perf)
+# ----------------------------------------------------------------------
+# Pure data parallelism: weights replicated, batch shards over BOTH mesh
+# axes. For small models (smollm) the model axis only buys redundant
+# compute + weight all-gathers; folding it into batch divides per-chip
+# FLOPs by the model-axis size.
+FULL_DP_RULES = dict(
+    SINGLE_POD_RULES,
+    batch=("data", "model"),
+    heads=None, kv_heads=None, ff=None, vocab=None, expert_ff=None,
+    d_inner=None, seq_kv=None,
+)
+
+# KV replicated across the model axis (for kv_heads < model-axis archs
+# where head sharding pads and seq sharding all-reduces every step).
+NO_KV_SHARD_RULES = dict(SINGLE_POD_RULES, kv_heads=None, seq_kv=None)
+
+# Expert parallelism: routed-expert weights and dispatch buffers shard
+# over the model axis along the EXPERT dim (E % 16 == 0 for both MoE
+# archs); per-expert d_ff stays whole, so the expert FFN contracts
+# locally — token dispatch/combine becomes the only cross-shard traffic
+# (vs the "tp" default, which psums the full (E, cap, d) buffer).
+EXPERT_PARALLEL_RULES = dict(
+    SINGLE_POD_RULES, experts="model", expert_ff=None)
+
+RULE_SETS = {
+    "default": SINGLE_POD_RULES,
+    "dp": FULL_DP_RULES,
+    "no-kv-shard": NO_KV_SHARD_RULES,
+    "ep": EXPERT_PARALLEL_RULES,
+}
+
+
+def rule_set(name: str, multi_pod: bool = False) -> dict:
+    rules = dict(RULE_SETS[name])
+    if multi_pod:
+        ba = rules["batch"]
+        ba = ba if isinstance(ba, tuple) else (ba,)
+        rules["batch"] = ("pod",) + ba
+    return rules
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[dict] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Optional[dict] = None):
+    """Activate logical->mesh axis mapping for model-code annotations."""
+    if rules is None:
+        rules = MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active() -> bool:
+    return _CTX.mesh is not None
+
+
+def resolve(*logical: Optional[str]) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules."""
+    assert _CTX.rules is not None
+    spec = []
+    used = set()
+    for name in logical:
+        if name is None:
+            spec.append(None)
+            continue
+        mesh_axis = _CTX.rules.get(name)
+        # an axis may appear only once in a spec; drop duplicates
+        if mesh_axis is None or mesh_axis in used:
+            spec.append(None)
+        else:
+            spec.append(mesh_axis)
+            used.add(mesh_axis)
+            if isinstance(mesh_axis, tuple):
+                used.update(mesh_axis)
+    return P(*spec)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op w/o rules)."""
+    if not active():
+        return x
+    assert x.ndim == len(logical), (x.shape, logical)
+    sh = NamedSharding(_CTX.mesh, resolve(*logical))
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def named_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
+    if not active():
+        return None
+    return NamedSharding(_CTX.mesh, resolve(*logical))
+
+
+def mesh_axis_size(logical: str) -> int:
+    """Size of the mesh axis a logical name maps to (1 outside a context)."""
+    if not active():
+        return 1
+    mesh_axis = _CTX.rules.get(logical)
+    if mesh_axis is None:
+        return 1
+    if isinstance(mesh_axis, tuple):
+        n = 1
+        for a in mesh_axis:
+            n *= _CTX.mesh.shape[a]
+        return n
+    return _CTX.mesh.shape[mesh_axis]

@@ -1,0 +1,14 @@
+from repro.teamllm.artifacts import ArtifactStore, ChainCorruption
+from repro.teamllm.fingerprint import (
+    EnvironmentFingerprint, capture_environment, render_prompt)
+from repro.teamllm.state_machine import (
+    IllegalTransition, RunState, RunStateMachine)
+from repro.teamllm.trace import (
+    ModelResponse, ProbeSample, TraceRecord, content_hash, stable_json)
+
+__all__ = [
+    "ArtifactStore", "ChainCorruption", "EnvironmentFingerprint",
+    "IllegalTransition", "ModelResponse", "ProbeSample", "RunState",
+    "RunStateMachine", "TraceRecord", "capture_environment",
+    "content_hash", "render_prompt", "stable_json",
+]

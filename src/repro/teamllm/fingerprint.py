@@ -1,0 +1,58 @@
+"""Deterministic-execution capture (paper §3.1 invariant 1).
+
+Every run records: random seed, prompt template hash, rubric version,
+model identifiers, and an environment fingerprint. Re-execution with
+identical inputs produces identical trace hashes.
+"""
+from __future__ import annotations
+
+import hashlib
+import platform
+import sys
+from dataclasses import asdict, dataclass
+from typing import Dict, Tuple
+
+RUBRIC_VERSION = "acar-rubric-1.0"
+PROMPT_TEMPLATE = (
+    "Task: {task}\n"
+    "Answer with the final result only.\n")
+PROMPT_TEMPLATE_RETRIEVAL = (
+    "Similar past example:\n{exemplar}\n\n"
+    "Task: {task}\n"
+    "Answer with the final result only.\n")
+
+
+def prompt_hash(template: str) -> str:
+    return hashlib.sha256(template.encode()).hexdigest()[:16]
+
+
+@dataclass(frozen=True)
+class EnvironmentFingerprint:
+    python: str
+    platform: str
+    jax_version: str
+    rubric_version: str
+    prompt_template_hash: str
+
+    def digest(self) -> str:
+        payload = "|".join(
+            f"{k}={v}" for k, v in sorted(asdict(self).items()))
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def capture_environment() -> EnvironmentFingerprint:
+    import jax
+    return EnvironmentFingerprint(
+        python=sys.version.split()[0],
+        platform=platform.platform(),
+        jax_version=jax.__version__,
+        rubric_version=RUBRIC_VERSION,
+        prompt_template_hash=prompt_hash(PROMPT_TEMPLATE),
+    )
+
+
+def render_prompt(task_text: str, exemplar: str = "") -> str:
+    if exemplar:
+        return PROMPT_TEMPLATE_RETRIEVAL.format(
+            exemplar=exemplar, task=task_text)
+    return PROMPT_TEMPLATE.format(task=task_text)

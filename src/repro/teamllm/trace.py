@@ -1,0 +1,74 @@
+"""Decision-trace schema (paper §3.1, Alg. 1 Phase 3).
+
+A TraceRecord is the per-task auditable artifact: task identity, probe
+samples, sigma, chosen mode, final answer, per-model responses, cost.
+Wall-clock time lives in a separate non-hashed side channel so that the
+hash chain is deterministic under re-execution (DESIGN.md §7.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+def stable_json(obj: Any) -> str:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def content_hash(obj: Any) -> str:
+    return hashlib.sha256(stable_json(obj).encode()).hexdigest()
+
+
+@dataclass(frozen=True)
+class ProbeSample:
+    response: str
+    answer: str               # EXTRACT(response)
+    cost: float
+
+
+@dataclass(frozen=True)
+class ModelResponse:
+    model: str
+    response: str
+    answer: str
+    cost: float
+    # judge-visible quality signal (self-rated confidence / verbosity /
+    # formatting heuristics -- what a black-box judge actually sees).
+    score: float = 0.0
+
+
+@dataclass(frozen=True)
+class TraceRecord:
+    run_id: str
+    task_id: str
+    benchmark: str
+    prompt_hash: str
+    seed: int
+    sigma: float              # in {0.0, 0.5, 1.0}
+    mode: str                 # single_agent | arena_lite | full_arena
+    probe_samples: Tuple[ProbeSample, ...]
+    responses: Tuple[ModelResponse, ...]
+    final_answer: str
+    correct: Optional[bool]
+    cost: float
+    retrieval: Optional[Dict[str, Any]] = None
+    logical_time: int = 0     # hashed (deterministic counter)
+    wall_time: float = 0.0    # NOT hashed
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["probe_samples"] = [dataclasses.asdict(p)
+                              for p in self.probe_samples]
+        d["responses"] = [dataclasses.asdict(r) for r in self.responses]
+        return d
+
+    def hashed_view(self) -> Dict[str, Any]:
+        d = self.to_dict()
+        d.pop("wall_time", None)
+        return d
+
+    def record_hash(self) -> str:
+        return content_hash(self.hashed_view())

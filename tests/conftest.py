@@ -1,0 +1,10 @@
+"""Ensure the repo root (for ``benchmarks``) is importable regardless
+of how pytest is invoked. NOTE: no XLA flags here — smoke tests must
+see one CPU device (the 512-device meshes are dryrun.py-only)."""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+for p in (str(ROOT), str(ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,100 @@
+"""EXTRACT canonicalisation + JudgeSelect / arena_verify."""
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core.extract import (
+    extract, extract_code, extract_math, extract_mcq, extract_reasoning)
+from repro.core.judge import arena_verify, judge_select
+from repro.teamllm.trace import ModelResponse
+
+
+def mr(model, answer, response=None):
+    return ModelResponse(model=model, response=response or answer,
+                         answer=answer, cost=0.0)
+
+
+# ----------------------------------------------------------------------
+# extract
+# ----------------------------------------------------------------------
+def test_extract_math_last_number():
+    assert extract_math("first 3 then answer: 42") == "42"
+    assert extract_math("x = -17.0") == "-17"
+    assert extract_math("2e3 apples") == "2000"
+
+
+def test_extract_math_no_number():
+    assert extract_math("I do not know") == "i do not know"
+
+
+@given(st.integers(-10**9, 10**9))
+def test_extract_math_roundtrip(n):
+    assert extract_math(f"the answer: {n}") == str(n)
+
+
+def test_extract_mcq():
+    assert extract_mcq("Answer: B") == "B"
+    assert extract_mcq("I choose (C) because...") == "C"
+    assert extract_mcq("Answer: option D is right") == "D"
+
+
+def test_extract_reasoning_normalises():
+    a = extract_reasoning("Answer:   THE   cat SAT")
+    assert a == "the cat sat"
+
+
+def test_extract_code_canonicalisation_knob():
+    r1 = "def f():  # variant 1\n    return 7"
+    r2 = "def f():   # variant 2\n    return  7"
+    # raw comparison (paper's setting): distinct
+    assert extract(r1, "code") != extract(r2, "code")
+    # canonicalised: identical
+    assert extract(r1, "code", canonicalize_code=True) == \
+        extract(r2, "code", canonicalize_code=True)
+
+
+def test_extract_dispatch():
+    assert extract("answer: 5", "math") == "5"
+    assert extract("Answer: A", "mcq") == "A"
+    assert extract("answer: yes", "unknown-kind") == "yes"
+
+
+# ----------------------------------------------------------------------
+# judge
+# ----------------------------------------------------------------------
+def test_judge_plurality():
+    rs = [mr("a", "x"), mr("b", "x"), mr("c", "y")]
+    assert judge_select(rs, "t1") == "x"
+
+
+def test_judge_tie_prefers_probe():
+    rs = [mr("a", "x"), mr("b", "y")]
+    assert judge_select(rs, "t1", probe_answer="y") == "y"
+
+
+def test_judge_tie_deterministic_coin():
+    rs = [mr("a", "x"), mr("b", "y"), mr("c", "z")]
+    first = judge_select(rs, "some-task")
+    for _ in range(5):
+        assert judge_select(rs, "some-task") == first
+    assert first in ("x", "y", "z")
+
+
+def test_judge_model_order_stable():
+    rs1 = [mr("a", "x"), mr("b", "y")]
+    rs2 = [mr("b", "y"), mr("a", "x")]
+    assert judge_select(rs1, "t") == judge_select(rs2, "t")
+
+
+def test_arena_verify_upholds_probe():
+    # members disagree with each other -> probe stands
+    rs = [mr("a", "p"), mr("b", "q")]
+    assert arena_verify("m", rs, "t") == "m"
+
+
+def test_arena_verify_unanimous_override():
+    rs = [mr("a", "q"), mr("b", "q")]
+    assert arena_verify("m", rs, "t") == "q"
+    # unanimous agreement WITH the probe keeps it
+    rs2 = [mr("a", "m"), mr("b", "m")]
+    assert arena_verify("m", rs2, "t") == "m"

@@ -1,0 +1,142 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (the kernels target TPU; interpret executes the body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.fused_swiglu import fused_swiglu
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.selective_scan import selective_scan
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def tol_for(dtype):
+    return TOL[jnp.bfloat16 if dtype == jnp.bfloat16 else jnp.float32]
+
+
+# ----------------------------------------------------------------------
+# decode attention
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,kv,dk,s,blk", [
+    (1, 4, 4, 64, 256, 128),      # MHA
+    (2, 8, 2, 128, 512, 128),     # GQA
+    (2, 8, 1, 128, 512, 256),     # MQA
+    (1, 16, 8, 64, 1024, 512),
+    (3, 6, 3, 32, 384, 384),      # non-divisible block -> full
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, h, kv, dk, s, blk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(b * s + h), 3)
+    q = jax.random.normal(ks[0], (b, h, dk), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, dk), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, dk), dtype)
+    length = jnp.int32(s - s // 4)
+    out = decode_attention(q, k, v, length, block_s=blk,
+                           interpret=True)
+    want = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), want.astype(jnp.float32),
+        atol=tol_for(dtype), rtol=tol_for(dtype))
+
+
+def test_decode_attention_respects_length():
+    """Entries past `length` must not affect the output."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (1, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    out1 = decode_attention(q, k, v, jnp.int32(100), block_s=128,
+                            interpret=True)
+    k2 = k.at[:, 100:].set(jax.random.normal(ks[3], (1, 156, 2, 64)))
+    out2 = decode_attention(q, k2, v, jnp.int32(100), block_s=128,
+                            interpret=True)
+    np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# selective scan
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,d,n,bd,ck", [
+    (1, 128, 64, 8, 64, 64),
+    (2, 256, 128, 16, 64, 128),
+    (2, 512, 256, 16, 256, 256),
+    (1, 96, 48, 4, 48, 96),       # non-divisible fallbacks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_selective_scan_sweep(b, s, d, n, bd, ck, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(s + d), 5)
+    x = (jax.random.normal(ks[0], (b, s, d)) * 0.5).astype(dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (b, s, d)))
+          * 0.1).astype(dtype)
+    a_log = jax.random.normal(ks[2], (d, n)) * 0.3
+    b_in = jax.random.normal(ks[3], (b, s, n)).astype(dtype)
+    c_in = jax.random.normal(ks[4], (b, s, n)).astype(dtype)
+    y, h = selective_scan(x, dt, a_log, b_in, c_in, block_d=bd,
+                          chunk=ck, interpret=True)
+    yr, hr = ref.selective_scan_ref(x, dt, a_log, b_in, c_in)
+    np.testing.assert_allclose(y.astype(jnp.float32),
+                               yr.astype(jnp.float32),
+                               atol=tol_for(dtype) * 5,
+                               rtol=tol_for(dtype) * 5)
+    np.testing.assert_allclose(h, hr, atol=1e-4, rtol=1e-3)
+
+
+# ----------------------------------------------------------------------
+# rglru scan
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,w,bw,ck", [
+    (1, 128, 128, 128, 128),
+    (2, 256, 256, 128, 128),
+    (2, 384, 96, 96, 192),
+])
+def test_rglru_scan_sweep(b, s, w, bw, ck):
+    ks = jax.random.split(jax.random.PRNGKey(s + w), 2)
+    a = jax.random.uniform(ks[0], (b, s, w), minval=0.7, maxval=0.999)
+    u = jax.random.normal(ks[1], (b, s, w)) * 0.1
+    hs, hf = rglru_scan(a, u, block_w=bw, chunk=ck, interpret=True)
+    hsr, hfr = ref.rglru_scan_ref(a, u)
+    np.testing.assert_allclose(hs, hsr, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(hf, hfr, atol=1e-5, rtol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# fused swiglu
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("t,d,f,bt,bf", [
+    (128, 64, 256, 64, 128),
+    (256, 128, 512, 128, 256),
+    (64, 96, 192, 64, 192),
+    (100, 64, 250, 100, 250),     # non-divisible fallbacks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_swiglu_sweep(t, d, f, bt, bf, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(t + f), 4)
+    x = (jax.random.normal(ks[0], (t, d)) * 0.5).astype(dtype)
+    wg = (jax.random.normal(ks[1], (d, f)) * 0.05).astype(dtype)
+    wu = (jax.random.normal(ks[2], (d, f)) * 0.05).astype(dtype)
+    wd = (jax.random.normal(ks[3], (f, d)) * 0.05).astype(dtype)
+    out = fused_swiglu(x, wg, wu, wd, block_t=bt, block_f=bf,
+                       interpret=True)
+    want = ref.fused_swiglu_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32),
+                               atol=tol_for(dtype),
+                               rtol=tol_for(dtype) * 10)
+
+
+# ----------------------------------------------------------------------
+# ops dispatch falls back to refs off-TPU
+# ----------------------------------------------------------------------
+def test_ops_dispatch_cpu_fallback():
+    assert jax.default_backend() != "tpu"
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 4, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+    out = ops.decode_attention(q, k, v, jnp.int32(64))
+    want = ref.decode_attention_ref(q, k, v, jnp.int32(64))
+    np.testing.assert_allclose(out, want, atol=1e-6)

@@ -1,0 +1,104 @@
+"""int8 KV-cache quantization (§Perf C2): math + end-to-end parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import params as params_lib
+from repro.models import transformer as T
+from repro.models.attention import (
+    decode_attention, decode_attention_quant, quantize_kv)
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64, 8, 128))
+    codes, scale = quantize_kv(x)
+    assert codes.dtype == jnp.int8
+    deq = codes.astype(jnp.float32) * scale[..., None]
+    err = jnp.max(jnp.abs(deq - x))
+    # per-vector symmetric quant: max error <= scale/2 <= max|x|/254
+    assert float(err) <= float(jnp.max(jnp.abs(x))) / 254.0 + 1e-6
+
+
+def test_quantize_zero_vector_safe():
+    codes, scale = quantize_kv(jnp.zeros((2, 3, 4)))
+    assert not np.isnan(np.asarray(scale)).any()
+    assert (np.asarray(codes) == 0).all()
+
+
+def test_quant_decode_attention_close_to_exact():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 8, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+    pos = jnp.int32(100)
+    kpos = jnp.arange(128)
+    exact = decode_attention(q, k, v, kpos, pos)
+    kq, kscale = quantize_kv(k)
+    vq, vscale = quantize_kv(v)
+    quant = decode_attention_quant(q, kq, kscale, vq, vscale, kpos, pos)
+    np.testing.assert_allclose(np.asarray(quant), np.asarray(exact),
+                               atol=0.05, rtol=0.05)
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "granite-34b",
+                                  "mixtral-8x22b"])
+def test_end_to_end_parity_with_quant_cache(arch):
+    cfg = get_config(arch, reduced=True).replace(dtype="float32",
+                                                 kv_quant=True)
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=8.0))
+    params = params_lib.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S + 1), 0,
+                              cfg.vocab_size)
+    full, _ = T.forward(cfg, params, toks)
+    _, cache = T.prefill(cfg, params, toks[:, :S], cache_len=S + 1)
+    assert cache["layers"]["k"].dtype == jnp.int8
+    ld, new_cache = T.decode_step(cfg, params, cache, toks[:, S],
+                                  jnp.int32(S))
+    assert jnp.allclose(ld, full[:, S], atol=5e-2), arch
+    assert new_cache["layers"]["k"].dtype == jnp.int8
+
+
+def test_quant_cache_is_half_the_bytes():
+    cfg = get_config("llama3-8b", reduced=True)
+    plain = jax.eval_shape(lambda: T.init_cache(cfg, 4, 256))
+    quant = jax.eval_shape(
+        lambda: T.init_cache(cfg.replace(kv_quant=True), 4, 256))
+    nbytes = lambda t: sum(np.prod(l.shape) * l.dtype.itemsize
+                           for l in jax.tree.leaves(t))
+    # int8 codes (0.5x) + f32 scales (~1/2hd overhead)
+    assert nbytes(quant) < 0.6 * nbytes(plain)
+
+
+# ----------------------------------------------------------------------
+# Pallas int8 flash-decode kernel (deployment path for C2)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,kv,dk,s,blk", [
+    (2, 8, 2, 128, 1024, 256),
+    (1, 4, 1, 64, 512, 512),       # MQA
+    (2, 16, 8, 64, 768, 256),
+])
+def test_pallas_quant_decode_matches_jnp(b, h, kv, dk, s, blk):
+    from repro.kernels.decode_attention_quant import (
+        decode_attention_quant as kernel)
+    from repro.models.attention import (
+        decode_attention_quant as jnp_quant, quantize_kv)
+    ks = jax.random.split(jax.random.PRNGKey(b * s), 3)
+    q = jax.random.normal(ks[0], (b, h, dk))
+    k = jax.random.normal(ks[1], (b, s, kv, dk))
+    v = jax.random.normal(ks[2], (b, s, kv, dk))
+    length = jnp.int32(s - s // 3)
+    kq, kscale = quantize_kv(k)
+    vq, vscale = quantize_kv(v)
+    out = kernel(q, kq, kscale, vq, vscale, length, block_s=blk,
+                 interpret=True)
+    want = jnp_quant(q, kq, kscale, vq, vscale, jnp.arange(s),
+                     length - 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,39 @@
+"""ModelConfig.use_pallas routes model code through kernels/ops.py.
+
+Off-TPU the ops dispatch to the jnp oracles, so the flag must be
+output-identical on CPU (the TPU path is validated per-kernel in
+tests/test_kernels.py via interpret mode)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import params as params_lib
+from repro.models import transformer as T
+
+ARCHS = ["llama3-8b", "falcon-mamba-7b", "recurrentgemma-2b",
+         "deepseek-7b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_use_pallas_forward_identical_on_cpu(arch):
+    cfg = get_config(arch, reduced=True).replace(dtype="float32")
+    params = params_lib.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    f0, _ = T.forward(cfg, params, toks)
+    f1, _ = T.forward(cfg.replace(use_pallas=True), params, toks)
+    assert float(jnp.max(jnp.abs(f0 - f1))) < 1e-5
+
+
+def test_use_pallas_decode_identical_on_cpu():
+    cfg = get_config("llama3-8b", reduced=True).replace(dtype="float32")
+    params = params_lib.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0,
+                              cfg.vocab_size)
+    _, cache = T.prefill(cfg, params, toks[:, :16], cache_len=17)
+    d0, _ = T.decode_step(cfg, params, cache, toks[:, 16],
+                          jnp.int32(16))
+    d1, _ = T.decode_step(cfg.replace(use_pallas=True), params, cache,
+                          toks[:, 16], jnp.int32(16))
+    assert float(jnp.max(jnp.abs(d0 - d1))) < 1e-5

@@ -1,0 +1,119 @@
+"""Jungler experience store (§6.1) + attribution machinery (§6.3)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.attribution import (
+    coalition_accuracy, leave_one_out, proxy_agreement, proxy_entropy,
+    proxy_similarity, proxy_vs_truth_correlation, shapley)
+from repro.core.retrieval import Experience, ExperienceStore, embed_text
+from repro.teamllm.trace import ModelResponse
+
+
+def mr(model, answer):
+    return ModelResponse(model=model, response=f"answer: {answer}",
+                         answer=answer, cost=0.0)
+
+
+# ----------------------------------------------------------------------
+# retrieval
+# ----------------------------------------------------------------------
+def test_embed_deterministic_and_normalised():
+    v1 = embed_text("what is 2 + 2")
+    v2 = embed_text("what is 2 + 2")
+    np.testing.assert_array_equal(v1, v2)
+    assert np.linalg.norm(v1) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_self_similarity_is_max():
+    store = ExperienceStore()
+    store.add(Experience("compute the derivative of x^2", "2x", True,
+                         "math"))
+    store.add(Experience("capital of france", "paris", True, "qa"))
+    res = store.query("compute the derivative of x^2", top_k=1)
+    assert res[0][0].answer == "2x"
+    assert res[0][1] == pytest.approx(1.0, abs=1e-5)
+
+
+def test_threshold_filters_weak_matches():
+    store = ExperienceStore()
+    store.add(Experience("alpha beta gamma", "x", True, "b"))
+    weak = store.query("completely unrelated words here", threshold=0.7)
+    assert weak == []
+    any_match = store.query("completely unrelated words here",
+                            threshold=-1.0)
+    assert len(any_match) == 1
+
+
+def test_similarity_stats_shape():
+    store = ExperienceStore()
+    for i in range(5):
+        store.add(Experience(f"task number {i} about topic", str(i),
+                             True, "b"))
+    stats = store.similarity_stats(["task about topic", "zzz qqq"])
+    assert 0 <= stats["hit_rate"] <= 1
+    assert len(stats["similarities"]) <= 2
+
+
+# ----------------------------------------------------------------------
+# attribution ground truth
+# ----------------------------------------------------------------------
+def test_loo_identifies_pivotal_model():
+    # c is pivotal: without it the judge picks "wrong"
+    rs = [mr("a", "wrong"), mr("b", "gold"), mr("c", "gold")]
+    loo = leave_one_out(rs, "t", gold="gold")
+    assert loo["b"] > 0 or loo["c"] > 0
+    assert loo["a"] <= 0
+
+
+def test_shapley_efficiency():
+    """sum_i phi_i = v(N) - v(empty)."""
+    rs = [mr("a", "x"), mr("b", "gold"), mr("c", "gold")]
+    phi = shapley(rs, "t", gold="gold")
+    total = sum(phi.values())
+    v_full = coalition_accuracy(rs, "t", "gold")
+    assert total == pytest.approx(v_full - 0.0, abs=1e-9)
+
+
+def test_shapley_symmetry():
+    rs = [mr("a", "gold"), mr("b", "gold"), mr("c", "z")]
+    phi = shapley(rs, "t", gold="gold")
+    assert phi["a"] == pytest.approx(phi["b"], abs=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.sampled_from(["gold", "w1", "w2"]),
+                min_size=2, max_size=3))
+def test_shapley_efficiency_property(answers):
+    rs = [mr(f"m{i}", a) for i, a in enumerate(answers)]
+    phi = shapley(rs, "task-7", gold="gold")
+    assert sum(phi.values()) == pytest.approx(
+        coalition_accuracy(rs, "task-7", "gold"), abs=1e-9)
+
+
+# ----------------------------------------------------------------------
+# proxies (the signals the paper shows fail)
+# ----------------------------------------------------------------------
+def test_proxies_produce_per_model_values():
+    rs = [mr("a", "x"), mr("b", "y"), mr("c", "x")]
+    for proxy in (proxy_entropy(rs), proxy_agreement(rs),
+                  proxy_similarity(rs, "x")):
+        assert set(proxy) == {"a", "b", "c"}
+
+
+def test_proxy_agreement_values():
+    rs = [mr("a", "x"), mr("b", "x"), mr("c", "y")]
+    ag = proxy_agreement(rs)
+    assert ag["a"] == pytest.approx(0.5)
+    assert ag["c"] == 0.0
+
+
+def test_correlation_helper():
+    t = [{"a": 1.0, "b": 0.0}, {"a": 0.0, "b": 1.0}]
+    assert proxy_vs_truth_correlation(t, t) == pytest.approx(1.0)
+    flipped = [{"a": 0.0, "b": 1.0}, {"a": 1.0, "b": 0.0}]
+    assert proxy_vs_truth_correlation(t, flipped) == pytest.approx(-1.0)
+    assert proxy_vs_truth_correlation([], []) == 0.0

@@ -1,0 +1,113 @@
+"""Unit + property tests for sigma (Def. 1) and routing (Def. 2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.routing import (
+    ARENA_LITE, FULL_ARENA, SINGLE_AGENT, decide, execution_mode,
+    majority_vote, models_for_mode)
+from repro.core.sigma import (
+    majority_vote_batch, route_batch, sigma, sigma_batch)
+
+ENSEMBLE = ("m1", "m2", "m3")
+
+
+# ----------------------------------------------------------------------
+# host-side sigma
+# ----------------------------------------------------------------------
+def test_sigma_values_paper():
+    assert sigma(["a", "a", "a"]) == 0.0
+    assert sigma(["a", "a", "b"]) == 0.5
+    assert sigma(["a", "b", "c"]) == 1.0
+
+
+def test_sigma_order_invariant():
+    assert sigma(["b", "a", "a"]) == sigma(["a", "a", "b"]) == 0.5
+
+
+@given(st.lists(st.sampled_from("abcde"), min_size=2, max_size=7))
+def test_sigma_matches_definition(answers):
+    n = len(answers)
+    expected = (len(set(answers)) - 1) / (n - 1)
+    assert sigma(answers) == pytest.approx(expected)
+
+
+@given(st.lists(st.sampled_from("abc"), min_size=3, max_size=3))
+def test_sigma_discrete_for_n3(answers):
+    assert sigma(answers) in (0.0, 0.5, 1.0)
+
+
+# ----------------------------------------------------------------------
+# routing (Def. 2 / Alg. 1)
+# ----------------------------------------------------------------------
+def test_execution_mode_mapping():
+    assert execution_mode(0.0) == SINGLE_AGENT
+    assert execution_mode(0.5) == ARENA_LITE
+    assert execution_mode(1.0) == FULL_ARENA
+
+
+def test_models_for_mode():
+    assert models_for_mode(SINGLE_AGENT, ENSEMBLE) == []
+    assert models_for_mode(ARENA_LITE, ENSEMBLE) == ["m1", "m2"]
+    assert models_for_mode(FULL_ARENA, ENSEMBLE) == list(ENSEMBLE)
+
+
+def test_decide_saves_calls():
+    d0 = decide(0.0, ["a", "a", "a"], ENSEMBLE)
+    d1 = decide(0.5, ["a", "a", "b"], ENSEMBLE)
+    d2 = decide(1.0, ["a", "b", "c"], ENSEMBLE)
+    assert (d0.ensemble_calls_saved, d1.ensemble_calls_saved,
+            d2.ensemble_calls_saved) == (3, 1, 0)
+    assert d0.probe_answer == "a"
+    assert d1.probe_answer == "a"     # majority
+
+
+@given(st.lists(st.sampled_from("abcd"), min_size=3, max_size=3))
+def test_majority_vote_is_modal(answers):
+    win = majority_vote(answers)
+    counts = {a: answers.count(a) for a in answers}
+    assert counts[win] == max(counts.values())
+
+
+def test_majority_vote_tie_breaks_first():
+    assert majority_vote(["x", "y", "z"]) == "x"
+
+
+# ----------------------------------------------------------------------
+# vectorised (on-device) versions agree with host versions
+# ----------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(st.lists(
+    st.lists(st.integers(0, 4), min_size=3, max_size=3),
+    min_size=1, max_size=16))
+def test_sigma_batch_matches_host(rows):
+    ids = jnp.asarray(np.array(rows, np.int32))
+    got = np.asarray(sigma_batch(ids))
+    want = [sigma([str(a) for a in row]) for row in rows]
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(
+    st.lists(st.integers(0, 4), min_size=3, max_size=3),
+    min_size=1, max_size=16))
+def test_route_batch_matches_host(rows):
+    ids = jnp.asarray(np.array(rows, np.int32))
+    modes = np.asarray(route_batch(sigma_batch(ids)))
+    for row, m in zip(rows, modes):
+        want = {SINGLE_AGENT: 0, ARENA_LITE: 1, FULL_ARENA: 2}[
+            execution_mode(sigma([str(a) for a in row]))]
+        assert m == want
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(
+    st.lists(st.integers(0, 4), min_size=3, max_size=3),
+    min_size=1, max_size=16))
+def test_majority_vote_batch_matches_host(rows):
+    ids = jnp.asarray(np.array(rows, np.int32))
+    got = np.asarray(majority_vote_batch(ids))
+    for row, g in zip(rows, got):
+        assert str(g) == majority_vote([str(a) for a in row])

@@ -1,0 +1,147 @@
+"""TEAMLLM substrate invariants (paper §3.1): determinism, immutable
+artifacts, forward-only state machine."""
+import json
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.teamllm.artifacts import ArtifactStore, ChainCorruption, GENESIS
+from repro.teamllm.fingerprint import (
+    capture_environment, prompt_hash, render_prompt)
+from repro.teamllm.state_machine import (
+    IllegalTransition, RunState, RunStateMachine)
+from repro.teamllm.trace import (
+    ModelResponse, ProbeSample, TraceRecord, content_hash)
+
+
+def make_trace(i=0, **kw):
+    base = dict(
+        run_id="r", task_id=f"t{i}", benchmark="b", prompt_hash="ph",
+        seed=0, sigma=0.5, mode="arena_lite",
+        probe_samples=(ProbeSample("resp", "a", 0.01),),
+        responses=(ModelResponse("m", "resp", "a", 0.02),),
+        final_answer="a", correct=True, cost=0.03,
+        logical_time=i, wall_time=123.0)
+    base.update(kw)
+    return TraceRecord(**base)
+
+
+# ----------------------------------------------------------------------
+# invariant 3: forward-only state machine
+# ----------------------------------------------------------------------
+def test_happy_path():
+    sm = RunStateMachine("r1")
+    for s in (RunState.EXECUTING, RunState.VERIFYING,
+              RunState.COMPLETED):
+        sm.advance(s)
+    assert sm.terminal
+    assert sm.history == [
+        ("PENDING", "EXECUTING"), ("EXECUTING", "VERIFYING"),
+        ("VERIFYING", "COMPLETED")]
+
+
+@pytest.mark.parametrize("start,bad", [
+    (RunState.PENDING, RunState.VERIFYING),
+    (RunState.PENDING, RunState.COMPLETED),
+    (RunState.EXECUTING, RunState.PENDING),
+    (RunState.VERIFYING, RunState.EXECUTING),
+    (RunState.COMPLETED, RunState.PENDING),
+    (RunState.COMPLETED, RunState.FAILED),
+    (RunState.FAILED, RunState.EXECUTING),
+])
+def test_no_rollback_or_skip(start, bad):
+    sm = RunStateMachine("r", state=start)
+    with pytest.raises(IllegalTransition):
+        sm.advance(bad)
+
+
+@given(st.lists(st.sampled_from(list(RunState)), max_size=6))
+@settings(deadline=None)
+def test_state_machine_never_goes_backward(path):
+    order = {RunState.PENDING: 0, RunState.EXECUTING: 1,
+             RunState.VERIFYING: 2, RunState.COMPLETED: 3,
+             RunState.FAILED: 99}
+    sm = RunStateMachine("r")
+    prev = sm.state
+    for s in path:
+        try:
+            sm.advance(s)
+        except IllegalTransition:
+            continue
+        assert order[sm.state] > order[prev]
+        prev = sm.state
+
+
+# ----------------------------------------------------------------------
+# invariant 2: immutable hash-chained artifacts
+# ----------------------------------------------------------------------
+def test_append_and_reopen(tmp_path):
+    p = tmp_path / "runs.jsonl"
+    store = ArtifactStore(p)
+    assert store.head == GENESIS
+    h1 = store.append(make_trace(0))
+    h2 = store.append(make_trace(1))
+    assert h1 != h2
+    reopened = ArtifactStore(p)
+    assert reopened.head == h2
+    assert len(reopened) == 2
+    assert reopened.audit()["ok"]
+
+
+def test_tamper_detection(tmp_path):
+    p = tmp_path / "runs.jsonl"
+    store = ArtifactStore(p)
+    store.append(make_trace(0))
+    store.append(make_trace(1))
+    rows = p.read_text().splitlines()
+    row = json.loads(rows[0])
+    row["record"]["final_answer"] = "tampered"
+    rows[0] = json.dumps(row)
+    p.write_text("\n".join(rows) + "\n")
+    with pytest.raises(ChainCorruption):
+        ArtifactStore(p)
+
+
+def test_chain_depends_on_order(tmp_path):
+    s1 = ArtifactStore(tmp_path / "a.jsonl")
+    s1.append(make_trace(0))
+    s1.append(make_trace(1))
+    s2 = ArtifactStore(tmp_path / "b.jsonl")
+    s2.append(make_trace(1))
+    s2.append(make_trace(0))
+    assert s1.head != s2.head
+
+
+# ----------------------------------------------------------------------
+# invariant 1: deterministic hashing; wall time excluded
+# ----------------------------------------------------------------------
+def test_trace_hash_ignores_wall_time():
+    t1 = make_trace(0, wall_time=1.0)
+    t2 = make_trace(0, wall_time=9999.0)
+    assert t1.record_hash() == t2.record_hash()
+
+
+def test_trace_hash_covers_content():
+    assert make_trace(0).record_hash() != \
+        make_trace(0, final_answer="z").record_hash()
+    assert make_trace(0).record_hash() != \
+        make_trace(0, sigma=1.0).record_hash()
+
+
+def test_content_hash_stable_across_key_order():
+    assert content_hash({"a": 1, "b": 2}) == content_hash({"b": 2, "a": 1})
+
+
+def test_environment_fingerprint():
+    f = capture_environment()
+    assert f.digest() == capture_environment().digest()
+    assert f.rubric_version
+
+
+def test_prompt_rendering():
+    p0 = render_prompt("2 + 2 =")
+    assert "2 + 2 =" in p0
+    p1 = render_prompt("2 + 2 =", exemplar="1 + 1 = -> 2")
+    assert "Similar past example" in p1 and "2 + 2 =" in p1
+    assert prompt_hash(p0) != prompt_hash(p1)
