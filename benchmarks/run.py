@@ -15,7 +15,7 @@ def main() -> None:
     from benchmarks import (
         ablation_probe, attribution_bench, figures, kernels_micro,
         roofline, table1_overall, table2_retrieval)
-    from benchmarks import serving_bench
+    from benchmarks import scheduler_bench, serving_bench
 
     sections = [
         ("table1_overall (paper Table 1, Figs 2/3)", table1_overall),
@@ -29,6 +29,8 @@ def main() -> None:
          ablation_probe),
         ("serving_bench (batched ACAR engine over JAX zoo)",
          serving_bench),
+        ("scheduler_bench (continuous batching vs sequential)",
+         scheduler_bench),
     ]
     csv_lines = []
     for title, mod in sections:

@@ -1,0 +1,100 @@
+"""Continuous-batching scheduler benchmark.
+
+Drives the same seeded synthetic workload through the sequential
+``ACAROrchestrator`` and the ``ContinuousBatchingScheduler`` (calibrated
+synthetic backends) and reports task throughput for both paths on the
+deterministic virtual clock — the calibrated per-call latency model the
+simulator exposes — plus host wall time and the equivalence digest.
+
+The virtual clock is the honest metric here: synthetic backends return
+instantly, so wall time measures Python overhead, while the virtual
+makespan measures what batching + the two-stage probe/ensemble pipeline
+buy at the modeled provider latencies (the paper's regime).
+
+    PYTHONPATH=src:tests python -m benchmarks.scheduler_bench
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+from benchmarks.common import csv_line, write_json
+from repro.configs.acar import ACARConfig
+from repro.core.backends import paper_backends
+from repro.core.orchestrator import ACAROrchestrator
+from repro.data.tasks import paper_suite
+from repro.serving.queue import MicroBatchPolicy
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+OUT = Path("experiments/bench/scheduler.json")
+PROBE = "gemini-2.0-flash"
+
+
+def run(n_tasks: int = 200, batch_size: int = 8, seed: int = 0,
+        verbose: bool = True) -> dict:
+    tasks = paper_suite(seed=seed)[:n_tasks]
+    acfg = ACARConfig(seed=seed)
+
+    backs = paper_backends()
+    t0 = time.perf_counter()
+    seq = ACAROrchestrator(acfg, backs[PROBE], backs,
+                           run_id="bench").run_suite(tasks)
+    seq_wall_ms = (time.perf_counter() - t0) * 1e3
+    seq_makespan_ms = sum(o.latency_ms for o in seq)
+
+    backs2 = paper_backends()
+    sched = ContinuousBatchingScheduler(
+        acfg, backs2[PROBE], backs2, run_id="bench",
+        policy=MicroBatchPolicy(max_batch_size=batch_size))
+    bat = sched.serve(tasks)
+    st = sched.stats
+
+    identical = (
+        [o.trace.record_hash() for o in seq]
+        == [o.trace.record_hash() for o in bat])
+    seq_tps = n_tasks / (seq_makespan_ms / 1e3)
+    out = {
+        "n_tasks": n_tasks,
+        "batch_size": batch_size,
+        "identical_traces": identical,
+        "sequential_makespan_ms": seq_makespan_ms,
+        "scheduler_pipeline_makespan_ms": st.pipeline_makespan_ms,
+        "scheduler_serial_batch_makespan_ms":
+            st.serial_batch_makespan_ms,
+        "throughput_sequential_tasks_per_s": seq_tps,
+        "throughput_scheduler_tasks_per_s": st.throughput_tasks_per_s,
+        "throughput_speedup": st.speedup_vs_sequential,
+        "probe_cache_hits": st.probe_cache_hits,
+        "ensemble_calls_saved": st.ensemble_calls_saved,
+        "sequential_wall_ms": seq_wall_ms,
+        "scheduler_wall_ms": st.wall_ms,
+    }
+    write_json(OUT, out)
+    if verbose:
+        print(f"tasks={n_tasks} batch={batch_size} "
+              f"identical_traces={identical}")
+        print(f"sequential : {seq_makespan_ms / 1e3:9.1f} s virtual "
+              f"({seq_tps:6.2f} tasks/s)")
+        print(f"scheduler  : {st.pipeline_makespan_ms / 1e3:9.1f} s "
+              f"virtual ({st.throughput_tasks_per_s:6.2f} tasks/s)")
+        print(f"speedup    : {st.speedup_vs_sequential:9.2f}x "
+              f"(no-overlap batching alone: "
+              f"{seq_makespan_ms / st.serial_batch_makespan_ms:.2f}x)")
+        print(sched.render_metrics())
+    return out
+
+
+def main() -> str:
+    t = run(verbose=False)
+    us = t["scheduler_wall_ms"] * 1e3 / t["n_tasks"]
+    return csv_line(
+        "scheduler_bench", us,
+        f"speedup={t['throughput_speedup']:.2f}x;"
+        f"identical={t['identical_traces']}")
+
+
+if __name__ == "__main__":
+    out = run()
+    sys.exit(0 if out["identical_traces"]
+             and out["throughput_speedup"] >= 2.0 else 1)

@@ -5,8 +5,12 @@ then serves a batch of tasks through the batched ACAR engine: (B x 3)
 probe decode -> EXTRACT -> on-device sigma/routing -> masked ensemble
 decodes -> vectorised judge — the TPU-native formulation of Alg. 1.
 
+With ``--scheduler`` the request stream is admitted through the
+continuous-batching queue and served as micro-batches, printing the
+Prometheus-style scheduler counters at the end.
+
     PYTHONPATH=src python examples/serve_acar.py [--tasks 32]
-        [--train-steps 300]
+        [--train-steps 300] [--scheduler] [--batch-size 8]
 """
 import argparse
 
@@ -17,6 +21,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--tasks", type=int, default=32)
     ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--scheduler", action="store_true")
+    ap.add_argument("--batch-size", type=int, default=8)
     args = ap.parse_args()
-    serve_main(["--tasks", str(args.tasks),
-                "--train-steps", str(args.train_steps)])
+    argv = ["--tasks", str(args.tasks),
+            "--train-steps", str(args.train_steps),
+            "--batch-size", str(args.batch_size)]
+    if args.scheduler:
+        argv.append("--scheduler")
+    serve_main(argv)

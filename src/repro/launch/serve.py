@@ -54,9 +54,20 @@ def build_zoo(archs: Sequence[str], train_steps: int, seed: int = 0,
 
 def serve(tasks: Sequence[Task], probe: ZooModel,
           ensemble: Sequence[ZooModel], acfg: ACARConfig,
-          verbose: bool = True) -> dict:
+          verbose: bool = True,
+          scheduler: bool = False,
+          batch_size: int = 8) -> dict:
+    """Serve tasks through the batched engine. With ``scheduler=True``
+    the request stream flows through the admission queue and is served
+    as micro-batches of at most ``batch_size`` (continuous-batching
+    path); otherwise the whole suite runs as one batch."""
     engine = BatchedACAREngine(acfg, probe, ensemble)
-    res = engine.run_batch(list(tasks))
+    if scheduler:
+        from repro.serving.queue import MicroBatchPolicy
+        res = engine.run_queued(
+            list(tasks), MicroBatchPolicy(max_batch_size=batch_size))
+    else:
+        res = engine.run_batch(list(tasks))
     correct = sum(
         1 for t, a in zip(tasks, res.final_answers)
         if extract(a, t.kind) == t.gold or a == t.gold)
@@ -69,12 +80,17 @@ def serve(tasks: Sequence[Task], probe: ZooModel,
         "wall_ms": res.wall_ms,
         "sigma_mean": float(res.sigma.mean()),
     }
+    if scheduler:
+        out["batch_sizes"] = res.batch_sizes
     if verbose:
         print(f"served {len(tasks)} tasks in {res.wall_ms:.0f} ms")
         print(f"accuracy          : {out['accuracy']:.3f}")
         print(f"mode distribution : {out['mode_distribution']}")
         print(f"calls saved       : {out['ensemble_calls_saved']} "
               f"of {3 * len(tasks)}")
+        if scheduler:
+            print(f"micro-batches     : {res.batch_sizes}")
+            print(res.metrics.render())
     return out
 
 
@@ -87,6 +103,11 @@ def main(argv=None):
                     default=list(DEFAULT_ENSEMBLE))
     ap.add_argument("--probe-temperature", type=float, default=0.7)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scheduler", action="store_true",
+                    help="serve via the admission queue as "
+                         "micro-batches (continuous batching)")
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="micro-batch size budget for --scheduler")
     args = ap.parse_args(argv)
 
     zoo = build_zoo([args.probe] + list(args.ensemble),
@@ -97,7 +118,8 @@ def main(argv=None):
                       probe_temperature=args.probe_temperature,
                       seed=args.seed)
     tasks = arithmetic_suite(args.tasks, seed=args.seed + 99)
-    serve(tasks, probe, ensemble, acfg)
+    serve(tasks, probe, ensemble, acfg,
+          scheduler=args.scheduler, batch_size=args.batch_size)
 
 
 if __name__ == "__main__":

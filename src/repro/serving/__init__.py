@@ -1,9 +1,17 @@
 from repro.serving.engine import (
-    BatchedACAREngine, BatchResult, ZooModel, intern_answers,
-    judge_batch)
+    BatchedACAREngine, BatchResult, QueuedServeResult, ZooModel,
+    intern_answers, judge_batch)
 from repro.serving.jax_backend import JaxModelBackend
+from repro.serving.metrics import PromCounters
+from repro.serving.queue import (
+    AdmissionQueue, MicroBatch, MicroBatchPolicy, Request)
+from repro.serving.scheduler import (
+    ContinuousBatchingScheduler, ProbeCache, SchedulerStats)
 
 __all__ = [
-    "BatchedACAREngine", "BatchResult", "JaxModelBackend", "ZooModel",
+    "AdmissionQueue", "BatchedACAREngine", "BatchResult",
+    "ContinuousBatchingScheduler", "JaxModelBackend", "MicroBatch",
+    "MicroBatchPolicy", "ProbeCache", "PromCounters",
+    "QueuedServeResult", "Request", "SchedulerStats", "ZooModel",
     "intern_answers", "judge_batch",
 ]

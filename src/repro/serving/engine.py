@@ -15,8 +15,8 @@ canonical answers are interned to int32 ids for the on-device math.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,10 +25,13 @@ import numpy as np
 from repro.configs.acar import ACARConfig
 from repro.configs.base import ModelConfig
 from repro.core.extract import extract
-from repro.core.sigma import majority_vote_batch, route_batch, sigma_batch
+from repro.core.sigma import (
+    MODE_NAMES, majority_vote_batch, route_batch, sigma_batch)
 from repro.data import tokenizer as tok
 from repro.data.tasks import Task
 from repro.sampling import generate
+from repro.serving.metrics import PromCounters
+from repro.serving.queue import AdmissionQueue, MicroBatchPolicy
 
 
 @dataclass
@@ -168,3 +171,61 @@ class BatchedACAREngine:
             final_answers=final_answers, probe_texts=probe_texts,
             ensemble_calls_saved=saved,
             wall_ms=(time.perf_counter() - t0) * 1e3)
+
+    # ------------------------------------------------------------------
+    # continuous-batching entry point: admission queue -> micro-batches
+    # ------------------------------------------------------------------
+    def run_queued(self, tasks: Sequence[Task],
+                   policy: MicroBatchPolicy = MicroBatchPolicy()
+                   ) -> "QueuedServeResult":
+        """Serve a request stream through the admission queue: tasks are
+        submitted with logical arrival ticks, grouped into micro-batches
+        under the policy budget, and each micro-batch runs the batched
+        probe -> route -> ensemble pipeline. Per-batch results are
+        concatenated in admission order."""
+        t0 = time.perf_counter()
+        queue = AdmissionQueue(policy)
+        for t in tasks:
+            queue.submit(t)
+        metrics = PromCounters()
+        batch_results: List[BatchResult] = []
+        batch_sizes: List[int] = []
+        for batch in queue.drain_batches():
+            res = self.run_batch([r.task for r in batch.requests])
+            batch_results.append(res)
+            batch_sizes.append(len(batch))
+            metrics.inc("acar_engine_batches_total",
+                        help="micro-batches decoded")
+            metrics.inc("acar_engine_tasks_total", len(batch),
+                        help="tasks served")
+            metrics.inc("acar_engine_ensemble_calls_saved_total",
+                        res.ensemble_calls_saved,
+                        help="ensemble decodes avoided by routing")
+            for m in res.modes:
+                metrics.inc("acar_engine_mode_total",
+                            mode=MODE_NAMES[int(m)],
+                            help="tasks routed per execution mode")
+        return QueuedServeResult(
+            sigma=np.concatenate([r.sigma for r in batch_results])
+            if batch_results else np.zeros(0, np.float32),
+            modes=np.concatenate([r.modes for r in batch_results])
+            if batch_results else np.zeros(0, np.int32),
+            final_answers=[a for r in batch_results
+                           for a in r.final_answers],
+            batch_sizes=batch_sizes,
+            ensemble_calls_saved=sum(r.ensemble_calls_saved
+                                     for r in batch_results),
+            wall_ms=(time.perf_counter() - t0) * 1e3,
+            metrics=metrics)
+
+
+@dataclass
+class QueuedServeResult:
+    """Concatenated (admission-order) result of a queued serve run."""
+    sigma: np.ndarray
+    modes: np.ndarray
+    final_answers: List[str]
+    batch_sizes: List[int]
+    ensemble_calls_saved: int
+    wall_ms: float
+    metrics: Optional[object] = field(default=None, repr=False)

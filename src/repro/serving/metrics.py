@@ -1,0 +1,48 @@
+"""Prometheus-style counter registry (dependency-free).
+
+Shared by the continuous-batching scheduler and the real-model engine's
+queued serving path; rendering follows the Prometheus text exposition
+format with deterministic ordering.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+
+class PromCounters:
+    """Minimal Prometheus text-format counter registry."""
+
+    def __init__(self):
+        self._values: Dict[Tuple[str, Tuple[Tuple[str, str], ...]],
+                           float] = {}
+        self._help: Dict[str, str] = {}
+
+    def inc(self, name: str, value: float = 1.0,
+            help: str = "", **labels: str) -> None:
+        key = (name, tuple(sorted((k, str(v))
+                                  for k, v in labels.items())))
+        self._values[key] = self._values.get(key, 0.0) + value
+        if help and name not in self._help:
+            self._help[name] = help
+
+    def get(self, name: str, **labels: str) -> float:
+        key = (name, tuple(sorted((k, str(v))
+                                  for k, v in labels.items())))
+        return self._values.get(key, 0.0)
+
+    def render(self) -> str:
+        """Prometheus exposition text format, deterministically sorted."""
+        lines: List[str] = []
+        for name in sorted({n for n, _ in self._values}):
+            if name in self._help:
+                lines.append(f"# HELP {name} {self._help[name]}")
+            lines.append(f"# TYPE {name} counter")
+            for (n, labels), v in sorted(self._values.items()):
+                if n != name:
+                    continue
+                if labels:
+                    lab = ",".join(f'{k}="{v_}"' for k, v_ in labels)
+                    lines.append(f"{name}{{{lab}}} {v:g}")
+                else:
+                    lines.append(f"{name} {v:g}")
+        return "\n".join(lines) + ("\n" if lines else "")

@@ -1,0 +1,399 @@
+"""Continuous-batching ACAR scheduler.
+
+The sequential orchestrator (core/orchestrator.py) routes one task at
+a time. This scheduler serves a continuous request stream:
+
+1. **Admission** — requests enter an ``AdmissionQueue`` with logical
+   arrival ticks and are grouped into micro-batches under a joint
+   size/token/wait budget (serving/queue.py).
+2. **Probe wave** — per micro-batch, the N-sample probe decode runs for
+   every request (skipping prompts already in the probe cache), answers
+   are interned to int32 ids, and sigma/route are computed **on
+   device** with ``sigma_batch`` / ``route_batch`` — one padded XLA
+   program per wave instead of per-task host logic.
+3. **Ensemble wave** — the routed ensemble members execute per request
+   with per-mode masking (single_agent rows run nothing), and
+   aggregation reuses the orchestrator's exact ``aggregate`` function.
+4. **Pipelining** — the probe wave of micro-batch k+1 is prefetched on
+   a worker thread while the ensemble wave of micro-batch k runs, so
+   the two stages overlap; a deterministic virtual clock accounts the
+   modeled makespan of the pipeline vs the sequential path.
+
+Equivalence guarantee: every per-task phase (retrieval, probe
+generation, extraction, aggregation, cost accounting, trace
+construction) is the *same code* the sequential orchestrator runs, and
+all seeds derive from (model, task, sample, seed) — so the scheduler
+produces bit-identical modes, final answers, and record hashes, with
+traces appended in admission order. Queue/batch provenance rides the
+non-hashed ``schedule`` side channel of each TraceRecord.
+
+Cost/latency accounting is exported as Prometheus-style counters
+(``render_metrics``).
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.acar import ACARConfig
+from repro.core.backends import GenResult, ModelBackend
+from repro.core.orchestrator import (
+    TaskOutcome, aggregate, build_trace, execute_ensemble, probe_task,
+    retrieve_exemplar, task_cost_latency)
+from repro.core.retrieval import ExperienceStore
+from repro.core.routing import majority_vote, models_for_mode
+from repro.core.sigma import (
+    MODE_NAMES, route_batch, sigma as sigma_fn, sigma_batch)
+from repro.data.tasks import Task
+from repro.serving.metrics import PromCounters
+from repro.serving.queue import AdmissionQueue, MicroBatch, \
+    MicroBatchPolicy, Request
+from repro.teamllm.artifacts import ArtifactStore
+from repro.teamllm.fingerprint import render_prompt
+from repro.teamllm.state_machine import RunState, RunStateMachine
+from repro.teamllm.trace import ProbeSample
+
+
+# ----------------------------------------------------------------------
+# probe-result cache
+# ----------------------------------------------------------------------
+@dataclass
+class _ProbeEntry:
+    probe_samples: List[ProbeSample]
+    probe_results: List[GenResult]
+    probe_latency: float
+
+
+class ProbeCache:
+    """LRU cache of probe waves keyed by the full generation identity:
+    (task_id, prompt, n_samples, temperature, seed). Deterministic
+    backends make a hit byte-identical to recomputation, so cache reuse
+    cannot perturb routing or trace hashes."""
+
+    def __init__(self, capacity: int = 512):
+        self.capacity = capacity
+        self._data: Dict[Tuple, _ProbeEntry] = {}
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(task: Task, prompt: str, acfg: ACARConfig) -> Tuple:
+        return (task.task_id, prompt, acfg.n_probe_samples,
+                acfg.probe_temperature, acfg.seed)
+
+    def lookup(self, key: Tuple) -> Optional[_ProbeEntry]:
+        entry = self._data.get(key)
+        if entry is not None:
+            self.hits += 1
+            self._data[key] = self._data.pop(key)    # refresh LRU slot
+        else:
+            self.misses += 1
+        return entry
+
+    def insert(self, key: Tuple, entry: _ProbeEntry) -> None:
+        if self.capacity <= 0:
+            return
+        self._data[key] = entry
+        while len(self._data) > self.capacity:
+            self._data.pop(next(iter(self._data)))
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+
+# ----------------------------------------------------------------------
+# scheduler
+# ----------------------------------------------------------------------
+@dataclass
+class _ProbedRequest:
+    request: Request
+    prompt: str
+    retrieval_sim: Optional[float]
+    ret_meta: Optional[Dict[str, Any]]
+    probe_samples: List[ProbeSample]
+    probe_results: List[GenResult]
+    probe_latency: float
+    cache_hit: bool
+    sigma: float = 0.0
+    mode: str = "single_agent"
+
+
+@dataclass
+class _ProbedBatch:
+    batch: MicroBatch
+    rows: List[_ProbedRequest]
+    wave_latency_ms: float       # max over cache-missed rows
+
+
+@dataclass
+class SchedulerStats:
+    tasks: int = 0
+    batches: int = 0
+    probe_cache_hits: int = 0
+    probe_cache_misses: int = 0
+    ensemble_calls_saved: int = 0
+    total_cost: float = 0.0
+    # deterministic virtual clock (the calibrated latency model)
+    sequential_makespan_ms: float = 0.0   # sum of per-task latencies
+    serial_batch_makespan_ms: float = 0.0  # batched, no overlap
+    pipeline_makespan_ms: float = 0.0      # batched + stage overlap
+    wall_ms: float = 0.0                   # host wall clock
+
+    @property
+    def speedup_vs_sequential(self) -> float:
+        if self.pipeline_makespan_ms <= 0:
+            return float("inf") if self.sequential_makespan_ms > 0 \
+                else 1.0
+        return self.sequential_makespan_ms / self.pipeline_makespan_ms
+
+    @property
+    def throughput_tasks_per_s(self) -> float:
+        if self.pipeline_makespan_ms <= 0:
+            return float("inf")
+        return self.tasks / (self.pipeline_makespan_ms / 1e3)
+
+
+class ContinuousBatchingScheduler:
+    """Continuous-batching, trace-equivalent ACAR serving scheduler."""
+
+    def __init__(self, acfg: ACARConfig, probe: ModelBackend,
+                 ensemble: Dict[str, ModelBackend],
+                 store: Optional[ArtifactStore] = None,
+                 experience: Optional[ExperienceStore] = None,
+                 run_id: str = "acar",
+                 policy: MicroBatchPolicy = MicroBatchPolicy(),
+                 probe_cache_size: int = 512,
+                 overlap: bool = True,
+                 device_routing: bool = True):
+        self.acfg = acfg
+        self.probe = probe
+        self.ensemble = ensemble
+        self.ensemble_order = list(ensemble)
+        self.store = store
+        self.experience = experience
+        self.run_id = run_id
+        self.policy = policy
+        self.queue = AdmissionQueue(policy)
+        self.cache = ProbeCache(probe_cache_size)
+        self.overlap = overlap
+        self.device_routing = device_routing
+        self.metrics = PromCounters()
+        self.stats = SchedulerStats()
+
+    # -- admission -----------------------------------------------------
+    def submit(self, task: Task,
+               arrival_time: Optional[int] = None) -> Request:
+        req = self.queue.submit(task, arrival_time)
+        self.metrics.inc("acar_sched_requests_total",
+                         help="requests admitted to the queue")
+        self.metrics.inc("acar_sched_tokens_admitted_total",
+                         req.est_tokens,
+                         help="estimated prompt tokens admitted")
+        return req
+
+    def submit_many(self, tasks: Sequence[Task]) -> List[Request]:
+        return [self.submit(t) for t in tasks]
+
+    # -- probe wave ----------------------------------------------------
+    def _probe_wave(self, batch: MicroBatch) -> _ProbedBatch:
+        rows: List[_ProbedRequest] = []
+        wave_latency = 0.0
+        for req in batch.requests:
+            task = req.task
+            exemplar, sim, ret_meta = retrieve_exemplar(
+                self.acfg, self.experience, task)
+            prompt = render_prompt(task.text, exemplar or "")
+            key = ProbeCache.key(task, prompt, self.acfg)
+            entry = self.cache.lookup(key)
+            hit = entry is not None
+            if entry is None:
+                samples, results, lat = probe_task(
+                    self.acfg, self.probe, task, prompt, sim)
+                entry = _ProbeEntry(samples, results, lat)
+                self.cache.insert(key, entry)
+                wave_latency = max(wave_latency, lat)
+            rows.append(_ProbedRequest(
+                request=req, prompt=prompt, retrieval_sim=sim,
+                ret_meta=ret_meta, probe_samples=entry.probe_samples,
+                probe_results=entry.probe_results,
+                probe_latency=entry.probe_latency, cache_hit=hit))
+
+        self._route_rows(rows)
+        return _ProbedBatch(batch=batch, rows=rows,
+                            wave_latency_ms=wave_latency)
+
+    def _route_rows(self, rows: List[_ProbedRequest]) -> None:
+        """sigma + mode per row. The routing decision runs on device
+        over the whole wave (one padded XLA program); the recorded
+        sigma uses the host Def. 1 value so trace hashes stay
+        bit-identical with sequential execution (float32 vs float64
+        rounding must not leak into the audit chain)."""
+        if not rows:
+            return
+        answer_lists = [[p.answer for p in r.probe_samples]
+                        for r in rows]
+        for r, answers in zip(rows, answer_lists):
+            r.sigma = sigma_fn(answers)
+        if self.device_routing:
+            n = self.acfg.n_probe_samples
+            pad_b = self.policy.max_batch_size
+            ids = np.zeros((pad_b, n), np.int32)
+            for i, answers in enumerate(answer_lists):
+                table: Dict[str, int] = {}
+                for j, a in enumerate(answers):
+                    ids[i, j] = table.setdefault(a, len(table))
+            modes = np.asarray(
+                route_batch(sigma_batch(jnp.asarray(ids))))
+            for i, r in enumerate(rows):
+                r.mode = MODE_NAMES[int(modes[i])]
+        else:
+            from repro.core.routing import execution_mode
+            for r in rows:
+                r.mode = execution_mode(r.sigma)
+
+    # -- ensemble wave -------------------------------------------------
+    def _ensemble_wave(self, probed: _ProbedBatch
+                       ) -> Tuple[List[TaskOutcome], float]:
+        outcomes: List[TaskOutcome] = []
+        wave_latency = 0.0
+        for row in probed.rows:
+            req, task = row.request, row.request.task
+            sm = RunStateMachine(f"{self.run_id}/{task.task_id}")
+            sm.advance(RunState.EXECUTING)
+            probe_majority = majority_vote(
+                [p.answer for p in row.probe_samples])
+            executed = models_for_mode(row.mode, self.ensemble_order,
+                                       self.acfg.arena_lite_size)
+            responses, results, exec_latency = execute_ensemble(
+                self.acfg, self.ensemble, executed, task, row.prompt,
+                row.retrieval_sim)
+            final_answer, semantic = aggregate(
+                task, row.mode, probe_majority, row.probe_samples,
+                row.probe_results, responses, results)
+            sm.advance(RunState.VERIFYING)
+            correct = semantic == task.gold
+            cost, latency = task_cost_latency(
+                row.probe_samples, responses, row.probe_latency,
+                exec_latency)
+            task_exec_latency = latency - row.probe_latency
+            wave_latency = max(wave_latency, task_exec_latency)
+
+            trace = build_trace(
+                self.run_id, task, row.prompt, self.acfg.seed,
+                row.sigma, row.mode, row.probe_samples, responses,
+                final_answer, correct, cost, row.ret_meta,
+                logical_time=req.admission_index,
+                schedule={
+                    "arrival": req.arrival_time,
+                    "admitted": req.admission_index,
+                    "batch_id": req.batch_id,
+                    "batch_formed_at": probed.batch.formed_at,
+                    "probe_cache_hit": row.cache_hit,
+                })
+            if self.store is not None:
+                self.store.append(trace)
+            sm.advance(RunState.COMPLETED)
+            outcomes.append(TaskOutcome(
+                trace=trace, latency_ms=latency,
+                semantic_answer=semantic, correct=correct))
+
+            saved = len(self.ensemble_order) - len(executed)
+            self.stats.ensemble_calls_saved += saved
+            self.stats.total_cost += cost
+            self.stats.sequential_makespan_ms += latency
+            self.metrics.inc("acar_sched_mode_total", mode=row.mode,
+                             help="tasks routed per execution mode")
+            self.metrics.inc("acar_sched_cost_total", cost,
+                             mode=row.mode,
+                             help="accumulated cost per execution mode")
+            self.metrics.inc("acar_sched_task_latency_ms_total",
+                             latency, mode=row.mode,
+                             help="accumulated per-task latency "
+                                  "(sequential-equivalent) per mode")
+            self.metrics.inc("acar_sched_ensemble_calls_saved_total",
+                             saved,
+                             help="ensemble calls avoided vs full arena")
+            if row.cache_hit:
+                self.metrics.inc("acar_sched_probe_cache_hits_total",
+                                 help="probe waves served from cache")
+            else:
+                self.metrics.inc("acar_sched_probe_cache_misses_total",
+                                 help="probe waves decoded")
+        return outcomes, wave_latency
+
+    # -- main loop -----------------------------------------------------
+    def run_until_idle(self) -> List[TaskOutcome]:
+        """Drain the queue: form micro-batches, run the two-stage
+        pipeline (probe wave of batch k+1 prefetched while the ensemble
+        wave of batch k executes), emit traces in admission order."""
+        t0 = time.perf_counter()
+        batches = self.queue.drain_batches()
+        outcomes: List[TaskOutcome] = []
+        probe_end = 0.0          # virtual clock: probe stage frontier
+        ens_end = 0.0            # virtual clock: ensemble stage frontier
+        serial = 0.0
+
+        executor: Optional[ThreadPoolExecutor] = None
+        pending: Optional[Future] = None
+        try:
+            if self.overlap and len(batches) > 1:
+                executor = ThreadPoolExecutor(max_workers=1)
+            for k, batch in enumerate(batches):
+                if pending is not None:
+                    probed = pending.result()
+                    pending = None
+                else:
+                    probed = self._probe_wave(batch)
+                if executor is not None and k + 1 < len(batches):
+                    pending = executor.submit(self._probe_wave,
+                                              batches[k + 1])
+                batch_outcomes, ens_latency = self._ensemble_wave(probed)
+                outcomes.extend(batch_outcomes)
+
+                # virtual two-stage pipeline bookkeeping: the probe
+                # stage is serial with itself; an ensemble wave starts
+                # once its probe wave AND the previous ensemble wave
+                # are done
+                probe_end = probe_end + probed.wave_latency_ms
+                ens_end = max(probe_end, ens_end) + ens_latency
+                serial += probed.wave_latency_ms + ens_latency
+
+                self.stats.batches += 1
+                self.stats.tasks += len(batch.requests)
+                self.metrics.inc("acar_sched_batches_total",
+                                 help="micro-batches executed")
+                self.metrics.inc(
+                    "acar_sched_probe_wave_ms_total",
+                    probed.wave_latency_ms,
+                    help="virtual probe-wave latency accumulated")
+                self.metrics.inc(
+                    "acar_sched_ensemble_wave_ms_total", ens_latency,
+                    help="virtual ensemble-wave latency accumulated")
+        finally:
+            if pending is not None:
+                pending.cancel()
+            if executor is not None:
+                executor.shutdown(wait=False)
+
+        # each drain's virtual clock starts at 0, so successive drains
+        # accumulate — keeping speedup/throughput honest for streaming
+        # usage with repeated run_until_idle calls
+        self.stats.serial_batch_makespan_ms += serial
+        self.stats.pipeline_makespan_ms += ens_end
+        self.stats.probe_cache_hits = self.cache.hits
+        self.stats.probe_cache_misses = self.cache.misses
+        self.stats.wall_ms += (time.perf_counter() - t0) * 1e3
+        return outcomes
+
+    def serve(self, tasks: Sequence[Task]) -> List[TaskOutcome]:
+        """Convenience: submit every task, then drain."""
+        self.submit_many(tasks)
+        return self.run_until_idle()
+
+    def render_metrics(self) -> str:
+        return self.metrics.render()

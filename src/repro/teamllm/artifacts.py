@@ -61,12 +61,15 @@ class ArtifactStore:
     def append(self, record: Union[TraceRecord, Dict[str, Any]],
                wall_time: Optional[float] = None) -> str:
         """Append a record; returns its chain hash."""
+        schedule = None
         if isinstance(record, TraceRecord):
             hashed = record.hashed_view()
             wall = record.wall_time
+            schedule = record.schedule
         else:
             hashed = dict(record)
             wall = hashed.pop("wall_time", 0.0)
+            schedule = hashed.pop("schedule", None)
         if wall_time is not None:
             wall = wall_time
         rh = content_hash(hashed)
@@ -78,6 +81,10 @@ class ArtifactStore:
             "chain_hash": self._chain,
             "wall_time": wall or time.time(),
         }
+        if schedule is not None:
+            # non-hashed side channel, like wall_time: queue/batch
+            # provenance is auditable but does not perturb the chain
+            row["schedule"] = schedule
         with self.path.open("a") as f:
             f.write(stable_json(row) + "\n")
         return self._chain

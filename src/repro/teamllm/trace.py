@@ -4,6 +4,14 @@ A TraceRecord is the per-task auditable artifact: task identity, probe
 samples, sigma, chosen mode, final answer, per-model responses, cost.
 Wall-clock time lives in a separate non-hashed side channel so that the
 hash chain is deterministic under re-execution (DESIGN.md §7.2).
+
+Scheduling metadata (``schedule``: arrival tick, admission index,
+batch id, probe-cache hit) rides the same non-hashed side channel: a
+task routed through the continuous-batching scheduler must hash
+identically to the same task routed through the sequential
+orchestrator — batching is an execution strategy, not a semantic
+input — while the queue/batch provenance stays fully auditable in the
+persisted artifact row.
 """
 from __future__ import annotations
 
@@ -57,6 +65,10 @@ class TraceRecord:
     retrieval: Optional[Dict[str, Any]] = None
     logical_time: int = 0     # hashed (deterministic counter)
     wall_time: float = 0.0    # NOT hashed
+    # scheduler provenance {arrival, admitted, batch_id, ...}; NOT
+    # hashed — batched and sequential execution of the same task must
+    # produce the same record hash
+    schedule: Optional[Dict[str, Any]] = None
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -68,6 +80,7 @@ class TraceRecord:
     def hashed_view(self) -> Dict[str, Any]:
         d = self.to_dict()
         d.pop("wall_time", None)
+        d.pop("schedule", None)
         return d
 
     def record_hash(self) -> str:

@@ -5,6 +5,6 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-for p in (str(ROOT), str(ROOT / "src")):
+for p in (str(ROOT), str(ROOT / "src"), str(ROOT / "tests")):
     if p not in sys.path:
         sys.path.insert(0, p)

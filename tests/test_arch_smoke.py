@@ -13,6 +13,10 @@ from repro.models import transformer as T
 from repro.models.frontends import synthetic_frames, synthetic_patches
 from repro.optim import init as opt_init
 
+# JIT/compile-heavy: excluded from the fast inner loop (-m 'not slow')
+pytestmark = pytest.mark.slow
+
+
 B, S = 2, 16
 
 

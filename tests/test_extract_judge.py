@@ -1,7 +1,11 @@
 """EXTRACT canonicalisation + JudgeSelect / arena_verify."""
 import pytest
-from hypothesis import given
-from hypothesis import strategies as st
+try:
+    from hypothesis import given
+    from hypothesis import strategies as st
+except ImportError:                          # seeded fallback shim
+    from _propshim import given
+    from _propshim import strategies as st
 
 from repro.core.extract import (
     extract, extract_code, extract_math, extract_mcq, extract_reasoning)

@@ -11,6 +11,10 @@ from repro.kernels.fused_swiglu import fused_swiglu
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.selective_scan import selective_scan
 
+# JIT/compile-heavy: excluded from the fast inner loop (-m 'not slow')
+pytestmark = pytest.mark.slow
+
+
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
 

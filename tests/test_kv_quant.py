@@ -13,6 +13,10 @@ from repro.models.attention import (
     decode_attention, decode_attention_quant, quantize_kv)
 
 
+# JIT/compile-heavy: excluded from the fast inner loop (-m 'not slow')
+pytestmark = pytest.mark.slow
+
+
 def test_quantize_roundtrip_error_bounded():
     x = jax.random.normal(jax.random.PRNGKey(0), (4, 64, 8, 128))
     codes, scale = quantize_kv(x)

@@ -13,6 +13,10 @@ from repro.launch.steps import (
 from repro.launch.train import train
 from repro.sharding import axis_rules
 
+# JIT/compile-heavy: excluded from the fast inner loop (-m 'not slow')
+pytestmark = pytest.mark.slow
+
+
 SMALL_TRAIN = InputShape("train_small", 32, 4, "train")
 SMALL_PREFILL = InputShape("prefill_small", 64, 2, "prefill")
 SMALL_DECODE = InputShape("decode_small", 64, 4, "decode")

@@ -11,6 +11,9 @@ from repro.configs.registry import get_config
 from repro.models import params as params_lib
 from repro.models import transformer as T
 
+# JIT/compile-heavy: excluded from the fast inner loop (-m 'not slow')
+pytestmark = pytest.mark.slow
+
 ARCHS = ["llama3-8b", "falcon-mamba-7b", "recurrentgemma-2b",
          "deepseek-7b"]
 

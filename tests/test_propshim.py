@@ -1,0 +1,52 @@
+"""The hypothesis fallback shim itself: seeded, reproducible, and
+settings-aware in either decorator order."""
+from _propshim import given, settings
+from _propshim import strategies as st
+
+
+def test_settings_above_given():
+    calls = []
+
+    @settings(max_examples=7)
+    @given(st.integers(0, 5))
+    def prop(x):
+        calls.append(x)
+
+    prop()
+    assert len(calls) == 7
+    assert all(0 <= x <= 5 for x in calls)
+
+
+def test_settings_beneath_given():
+    calls = []
+
+    @given(st.integers(0, 5))
+    @settings(max_examples=9)
+    def prop(x):
+        calls.append(x)
+
+    prop()
+    assert len(calls) == 9
+
+
+def test_examples_are_deterministic():
+    runs = []
+    for _ in range(2):
+        calls = []
+
+        @given(st.lists(st.sampled_from("abc"), min_size=1, max_size=4))
+        def prop(xs):
+            calls.append(tuple(xs))
+
+        prop()
+        runs.append(calls)
+    assert runs[0] == runs[1]
+
+
+def test_wrapper_hides_generated_params_from_pytest():
+    @given(st.integers(0, 1))
+    def prop(x):
+        pass
+
+    import inspect
+    assert inspect.signature(prop).parameters == {}

@@ -3,8 +3,12 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                          # seeded fallback shim
+    from _propshim import given, settings
+    from _propshim import strategies as st
 
 from repro.core.attribution import (
     coalition_accuracy, leave_one_out, proxy_agreement, proxy_entropy,

@@ -1,0 +1,189 @@
+"""Sequential <-> batched equivalence (the scheduler's core contract).
+
+The continuous-batching scheduler must be an *execution strategy*, not
+a semantic change: identical routing modes, final answers, and trace
+record hashes as the sequential ACAROrchestrator, for any batch shape.
+"""
+import pytest
+
+from harness.simulate import (
+    ScriptedBackend, WorkloadConfig, generate_workload, run_equivalence,
+    scripted_task)
+from repro.configs.acar import ACARConfig
+from repro.core.backends import paper_backends
+from repro.core.orchestrator import ACAROrchestrator
+from repro.core.routing import ARENA_LITE, FULL_ARENA, SINGLE_AGENT
+from repro.data.tasks import paper_suite
+from repro.serving.queue import MicroBatchPolicy
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+ACFG = ACARConfig()
+PROBE = "gemini-2.0-flash"
+
+
+def run_both_scripted(probe_answers, member_answers, gold="a"):
+    """Drive one scripted task through both paths; returns
+    (sequential outcome, scheduler outcome)."""
+    task = scripted_task("t0", gold=gold)
+    probe_script = {("t0", i): a for i, a in enumerate(probe_answers)}
+    ens_names = [f"m{i + 1}" for i in range(len(member_answers))]
+
+    def mk_backends():
+        probe = ScriptedBackend("probe", dict(probe_script))
+        ens = {n: ScriptedBackend(n, {("t0", 0): a})
+               for n, a in zip(ens_names, member_answers)}
+        return probe, ens
+
+    p1, e1 = mk_backends()
+    seq = ACAROrchestrator(ACFG, p1, e1, run_id="s").run_task(task)
+    p2, e2 = mk_backends()
+    sched = ContinuousBatchingScheduler(ACFG, p2, e2, run_id="s")
+    bat = sched.serve([task])[0]
+    return seq, bat
+
+
+# ----------------------------------------------------------------------
+# sigma edge cases (Def. 1 / Def. 2 boundaries)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("probe_answers,members,want_mode", [
+    # all-agree -> sigma=0 -> single_agent, probe consensus is final
+    (("a", "a", "a"), ("x", "y", "z"), SINGLE_AGENT),
+    # 2-of-3 agreement -> sigma=0.5 -> arena_lite
+    (("a", "a", "b"), ("a", "a", "z"), ARENA_LITE),
+    # 2-of-3, majority arrives late (tie-break to first seen)
+    (("b", "a", "b"), ("b", "b", "z"), ARENA_LITE),
+    # arena_lite unanimous override: members agree on a != probe answer
+    (("a", "a", "b"), ("q", "q", "z"), ARENA_LITE),
+    # all-disagree -> sigma=1 -> full_arena, judge aggregates
+    (("a", "b", "c"), ("a", "b", "b"), FULL_ARENA),
+    # full_arena with all members distinct (judge coin tie-break)
+    (("a", "b", "c"), ("x", "y", "z"), FULL_ARENA),
+])
+def test_sigma_edge_case_equivalence(probe_answers, members, want_mode):
+    seq, bat = run_both_scripted(probe_answers, members)
+    assert seq.trace.mode == want_mode
+    assert bat.trace.mode == seq.trace.mode
+    assert bat.trace.final_answer == seq.trace.final_answer
+    assert bat.trace.sigma == seq.trace.sigma
+    assert bat.trace.record_hash() == seq.trace.record_hash()
+    assert bat.semantic_answer == seq.semantic_answer
+    assert bat.correct == seq.correct
+
+
+def test_arena_lite_override_picks_member_answer():
+    seq, bat = run_both_scripted(("a", "a", "b"), ("q", "q", "z"))
+    # members m1,m2 unanimously contradict the probe majority
+    assert seq.trace.final_answer == "q"
+    assert bat.trace.final_answer == "q"
+
+
+# ----------------------------------------------------------------------
+# calibrated-backend equivalence over batch shapes
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("batch_size", [1, 3, 8, 64])
+def test_equivalence_across_batch_shapes(batch_size, tmp_path):
+    tasks = paper_suite(seed=3)[:48]
+    report, _, _ = run_equivalence(
+        tasks, acfg=ACFG,
+        policy=MicroBatchPolicy(max_batch_size=batch_size),
+        workdir=tmp_path / f"b{batch_size}")
+    assert report.ok, report.summary()
+
+
+def test_equivalence_without_overlap(tmp_path):
+    tasks = paper_suite(seed=5)[:24]
+    report, _, _ = run_equivalence(
+        tasks, acfg=ACFG, policy=MicroBatchPolicy(max_batch_size=4),
+        workdir=tmp_path, overlap=False)
+    assert report.ok, report.summary()
+
+
+def test_equivalence_with_retrieval(tmp_path):
+    """ACAR-UJ path: retrieval metadata must survive batching too."""
+    from repro.configs.acar import ACAR_UJ_ALIGNED
+    from repro.core.retrieval import Experience, ExperienceStore
+    from repro.teamllm.artifacts import ArtifactStore
+
+    tasks = paper_suite(seed=1)[:16]
+    exp = ExperienceStore()
+    for i, t in enumerate(tasks[:8]):
+        exp.add(Experience(t.text, t.gold, True, t.benchmark))
+
+    backs = paper_backends()
+    seq_store = ArtifactStore(tmp_path / "seq.jsonl")
+    seq = ACAROrchestrator(ACAR_UJ_ALIGNED, backs[PROBE], backs,
+                           store=seq_store, experience=exp,
+                           run_id="uj").run_suite(tasks)
+    backs2 = paper_backends()
+    sched_store = ArtifactStore(tmp_path / "sched.jsonl")
+    sched = ContinuousBatchingScheduler(
+        ACAR_UJ_ALIGNED, backs2[PROBE], backs2, store=sched_store,
+        experience=exp, run_id="uj",
+        policy=MicroBatchPolicy(max_batch_size=4))
+    bat = sched.serve(tasks)
+    assert [o.trace.record_hash() for o in seq] == \
+        [o.trace.record_hash() for o in bat]
+    assert seq_store.head == sched_store.head
+
+
+def test_scheduler_rerun_is_deterministic():
+    tasks = paper_suite(seed=7)[:32]
+
+    def one_run():
+        backs = paper_backends()
+        sched = ContinuousBatchingScheduler(
+            ACFG, backs[PROBE], backs, run_id="det",
+            policy=MicroBatchPolicy(max_batch_size=8))
+        return [o.trace.record_hash() for o in sched.serve(tasks)]
+
+    assert one_run() == one_run()
+
+
+# ----------------------------------------------------------------------
+# the acceptance-criteria simulation: >= 200 seeded synthetic tasks
+# ----------------------------------------------------------------------
+def test_simulation_200_tasks_bit_identical(tmp_path):
+    stream = generate_workload(WorkloadConfig(
+        n_tasks=200, seed=0, duplicate_rate=0.15))
+    assert len(stream) == 200
+    report, seq, bat = run_equivalence(
+        stream, acfg=ACFG, policy=MicroBatchPolicy(max_batch_size=8),
+        workdir=tmp_path)
+    assert report.ok, report.summary()
+    # duplicates in the stream hit the probe cache
+    assert report.probe_cache_hits > 0
+    # batching + pipelining beats the sequential virtual makespan >= 2x
+    assert report.speedup_vs_sequential >= 2.0
+    # the modes really are bit-identical, per task
+    assert [o.trace.mode for o in seq] == [o.trace.mode for o in bat]
+    assert [o.trace.final_answer for o in seq] == \
+        [o.trace.final_answer for o in bat]
+
+
+def test_streaming_drains_accumulate_makespan():
+    """Repeated submit/drain cycles must keep the virtual-clock stats
+    honest: both sides of the speedup ratio accumulate."""
+    tasks = paper_suite(seed=11)[:16]
+    backs = paper_backends()
+    sched = ContinuousBatchingScheduler(
+        ACFG, backs[PROBE], backs, run_id="stream",
+        policy=MicroBatchPolicy(max_batch_size=4))
+    sched.serve(tasks[:8])
+    pipe1 = sched.stats.pipeline_makespan_ms
+    seq1 = sched.stats.sequential_makespan_ms
+    speedup1 = sched.stats.speedup_vs_sequential
+    sched.serve(tasks[8:])
+    assert sched.stats.pipeline_makespan_ms > pipe1
+    assert sched.stats.sequential_makespan_ms > seq1
+    # the ratio stays in the same regime instead of doubling per drain
+    assert sched.stats.speedup_vs_sequential < 2 * speedup1
+
+
+def test_workload_generator_is_seeded():
+    cfg = WorkloadConfig(n_tasks=50, seed=4, duplicate_rate=0.2)
+    a = [t.task_id for t in generate_workload(cfg)]
+    b = [t.task_id for t in generate_workload(cfg)]
+    assert a == b
+    c = [t.task_id for t in generate_workload(
+        WorkloadConfig(n_tasks=50, seed=5, duplicate_rate=0.2))]
+    assert a != c

@@ -1,0 +1,182 @@
+"""Admission queue, micro-batch formation, probe cache, and the
+Prometheus-style counter registry."""
+import pytest
+
+from repro.configs.acar import ACARConfig
+from repro.data.tasks import Task, arithmetic_suite
+from repro.serving.queue import (
+    AdmissionQueue, MicroBatchPolicy, estimate_tokens)
+from repro.serving.scheduler import ProbeCache, PromCounters, \
+    _ProbeEntry
+
+
+def mk_task(i, text="1 + 1 ="):
+    return Task(task_id=f"q-{i:03d}", benchmark="arithmetic",
+                kind="math", text=text, gold="2", difficulty=0.0)
+
+
+# ----------------------------------------------------------------------
+# admission + batch formation
+# ----------------------------------------------------------------------
+def test_fifo_admission_and_batch_size_budget():
+    q = AdmissionQueue(MicroBatchPolicy(max_batch_size=4))
+    for i in range(10):
+        q.submit(mk_task(i))
+    batches = q.drain_batches()
+    assert [len(b) for b in batches] == [4, 4, 2]
+    assert [b.batch_id for b in batches] == [0, 1, 2]
+    flat = [r for b in batches for r in b.requests]
+    assert [r.task.task_id for r in flat] == \
+        [f"q-{i:03d}" for i in range(10)]
+    assert [r.admission_index for r in flat] == list(range(10))
+    assert len(q) == 0
+
+
+def test_token_budget_closes_batch():
+    q = AdmissionQueue(MicroBatchPolicy(max_batch_size=16,
+                                        max_batch_tokens=10))
+    for i in range(4):
+        q.submit(mk_task(i, text="w " * 4))     # 4 tokens each
+    batches = q.drain_batches()
+    assert [len(b) for b in batches] == [2, 2]
+    assert all(b.total_tokens <= 10 for b in batches)
+
+
+def test_oversized_request_admitted_alone():
+    q = AdmissionQueue(MicroBatchPolicy(max_batch_size=8,
+                                        max_batch_tokens=4))
+    q.submit(mk_task(0, text="w " * 50))        # alone exceeds budget
+    q.submit(mk_task(1))
+    batches = q.drain_batches()
+    assert [len(b) for b in batches] == [1, 1]
+
+
+def test_arrival_times_monotone():
+    q = AdmissionQueue()
+    q.submit(mk_task(0), arrival_time=5)
+    with pytest.raises(ValueError):
+        q.submit(mk_task(1), arrival_time=3)
+    r = q.submit(mk_task(2))                    # auto tick continues
+    assert r.arrival_time > 5
+
+
+def test_arrival_watermark_survives_batch_formation():
+    """Monotonicity is enforced against the last arrival ever seen,
+    not just the current pending tail."""
+    q = AdmissionQueue()
+    q.submit(mk_task(0), arrival_time=10)
+    q.form_batch()                              # drains the deque
+    with pytest.raises(ValueError):
+        q.submit(mk_task(1), arrival_time=3)
+
+
+def test_ready_fill_or_timeout():
+    q = AdmissionQueue(MicroBatchPolicy(max_batch_size=4,
+                                        max_wait_ticks=10))
+    assert not q.ready()
+    q.submit(mk_task(0), arrival_time=0)
+    assert not q.ready(now=5)               # not full, not timed out
+    assert q.ready(now=10)                  # oldest waited max_wait
+    for i in range(1, 4):
+        q.submit(mk_task(i))
+    assert q.ready(now=1)                   # size budget reachable
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        MicroBatchPolicy(max_batch_size=0)
+    with pytest.raises(ValueError):
+        MicroBatchPolicy(max_batch_tokens=0)
+
+
+def test_estimate_tokens():
+    assert estimate_tokens("a b c") == 3
+    assert estimate_tokens("") == 1
+
+
+# ----------------------------------------------------------------------
+# probe cache
+# ----------------------------------------------------------------------
+def entry():
+    return _ProbeEntry([], [], 1.0)
+
+
+def test_probe_cache_hit_miss_counting():
+    c = ProbeCache(capacity=4)
+    k = ProbeCache.key(mk_task(0), "prompt", ACARConfig())
+    assert c.lookup(k) is None
+    c.insert(k, entry())
+    assert c.lookup(k) is not None
+    assert (c.hits, c.misses) == (1, 1)
+
+
+def test_probe_cache_key_covers_generation_identity():
+    t = mk_task(0)
+    base = ProbeCache.key(t, "p", ACARConfig())
+    assert ProbeCache.key(t, "p2", ACARConfig()) != base
+    assert ProbeCache.key(t, "p", ACARConfig(seed=1)) != base
+    assert ProbeCache.key(t, "p", ACARConfig(
+        probe_temperature=0.1)) != base
+    assert ProbeCache.key(mk_task(1), "p", ACARConfig()) != base
+
+
+def test_probe_cache_lru_eviction():
+    c = ProbeCache(capacity=2)
+    ks = [ProbeCache.key(mk_task(i), "p", ACARConfig())
+          for i in range(3)]
+    c.insert(ks[0], entry())
+    c.insert(ks[1], entry())
+    assert c.lookup(ks[0]) is not None      # refresh 0 -> 1 is LRU
+    c.insert(ks[2], entry())                # evicts 1
+    assert c.lookup(ks[1]) is None
+    assert c.lookup(ks[0]) is not None
+    assert len(c) == 2
+
+
+def test_probe_cache_zero_capacity_disables():
+    c = ProbeCache(capacity=0)
+    k = ProbeCache.key(mk_task(0), "p", ACARConfig())
+    c.insert(k, entry())
+    assert c.lookup(k) is None
+
+
+# ----------------------------------------------------------------------
+# Prometheus-style counters
+# ----------------------------------------------------------------------
+def test_counters_accumulate_and_render():
+    m = PromCounters()
+    m.inc("acar_x_total", help="an x counter")
+    m.inc("acar_x_total", 2.0)
+    m.inc("acar_y_total", 1.0, mode="full_arena")
+    m.inc("acar_y_total", 1.0, mode="single_agent")
+    assert m.get("acar_x_total") == 3.0
+    assert m.get("acar_y_total", mode="full_arena") == 1.0
+    text = m.render()
+    assert "# HELP acar_x_total an x counter" in text
+    assert "# TYPE acar_x_total counter" in text
+    assert "acar_x_total 3" in text
+    assert 'acar_y_total{mode="full_arena"} 1' in text
+    assert text.endswith("\n")
+
+
+def test_counters_render_deterministic():
+    def build():
+        m = PromCounters()
+        m.inc("b_total", mode="z")
+        m.inc("a_total")
+        m.inc("b_total", mode="a")
+        return m.render()
+    assert build() == build()
+    assert build().index("a_total") < build().index("b_total")
+
+
+# ----------------------------------------------------------------------
+# engine wiring: queued serve over the real-model engine is exercised
+# in test_serving_engine.py-adjacent speed; here we only check the
+# micro-batch split logic is reachable through run_queued's queue use
+# ----------------------------------------------------------------------
+def test_arithmetic_queue_split():
+    q = AdmissionQueue(MicroBatchPolicy(max_batch_size=8))
+    for t in arithmetic_suite(20, seed=0):
+        q.submit(t)
+    assert [len(b) for b in q.drain_batches()] == [8, 8, 4]

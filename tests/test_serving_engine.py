@@ -18,6 +18,10 @@ from repro.serving import (
 from repro.teamllm.trace import ModelResponse
 
 
+# JIT/compile-heavy: excluded from the fast inner loop (-m 'not slow')
+pytestmark = pytest.mark.slow
+
+
 def test_intern_answers():
     ids = intern_answers(["a", "b", "a", "c", "b"])
     np.testing.assert_array_equal(ids, [0, 1, 0, 2, 1])
@@ -119,3 +123,26 @@ def test_engine_runs_end_to_end():
         answers = [extract(txt, t.kind) for txt in res.probe_texts[i]]
         assert float(res.sigma[i]) == pytest.approx(sigma_host(answers))
     assert 0 <= res.ensemble_calls_saved <= 3 * 8
+
+
+def test_engine_run_queued_micro_batches():
+    """Continuous-batching entry point: admission queue -> micro-batch
+    decodes, concatenated in admission order."""
+    from repro.serving import MicroBatchPolicy
+    zoo = _tiny_zoo()
+    acfg = ACARConfig(probe_temperature=0.9, seed=0)
+    engine = BatchedACAREngine(acfg, zoo[0], zoo[1:],
+                               max_new_tokens=4)
+    tasks = arithmetic_suite(10, seed=1)
+    res = engine.run_queued(tasks, MicroBatchPolicy(max_batch_size=4))
+    assert res.batch_sizes == [4, 4, 2]
+    assert len(res.final_answers) == 10
+    assert res.modes.shape == (10,)
+    assert res.sigma.shape == (10,)
+    # queued serve == per-micro-batch run_batch, concatenated
+    ref = [a for lo in (0, 4, 8)
+           for a in engine.run_batch(tasks[lo:lo + 4]).final_answers]
+    assert res.final_answers == ref
+    text = res.metrics.render()
+    assert "acar_engine_batches_total 3" in text
+    assert "acar_engine_tasks_total 10" in text

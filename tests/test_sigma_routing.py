@@ -2,8 +2,12 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                          # seeded fallback shim
+    from _propshim import given, settings
+    from _propshim import strategies as st
 
 from repro.core.routing import (
     ARENA_LITE, FULL_ARENA, SINGLE_AGENT, decide, execution_mode,

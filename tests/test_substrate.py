@@ -20,6 +20,10 @@ from repro.sampling import generate, sample_token
 from repro.sharding import SINGLE_POD_RULES, axis_rules, resolve
 
 
+# JIT/compile-heavy: excluded from the fast inner loop (-m 'not slow')
+pytestmark = pytest.mark.slow
+
+
 # ----------------------------------------------------------------------
 # optimizer
 # ----------------------------------------------------------------------

@@ -3,8 +3,12 @@ artifacts, forward-only state machine."""
 import json
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                          # seeded fallback shim
+    from _propshim import given, settings
+    from _propshim import strategies as st
 
 from repro.teamllm.artifacts import ArtifactStore, ChainCorruption, GENESIS
 from repro.teamllm.fingerprint import (
