@@ -11,29 +11,115 @@ instantly, so wall time measures Python overhead, while the virtual
 makespan measures what batching + the two-stage probe/ensemble pipeline
 buy at the modeled provider latencies (the paper's regime).
 
-    PYTHONPATH=src:tests python -m benchmarks.scheduler_bench
+The compaction section reports what escalated-subset wave planning
+buys, twice: at the **calibrated** routing distribution this
+reproduction's synthetic backends produce over the paper mix (~68%
+escalated — honest but pessimistic for compaction), and at the
+**paper's published rate** (sigma-routing avoids ensemble work on
+54.2% of tasks, i.e. 45.8% escalate) via a scripted-sigma workload.
+Both report ensemble decode row reduction vs the masked full-batch
+path and the shared-prefix probe prefill reduction (~N x). Results are
+persisted to ``BENCH_scheduler.json`` (repo root, uploaded nightly by
+CI) and ``experiments/bench/scheduler.json``.
+
+    PYTHONPATH=src:tests python -m benchmarks.scheduler_bench [--smoke]
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
+from dataclasses import dataclass
 from pathlib import Path
+
+import numpy as np
 
 from benchmarks.common import csv_line, write_json
 from repro.configs.acar import ACARConfig
-from repro.core.backends import paper_backends
+from repro.core.backends import GenResult, paper_backends
 from repro.core.orchestrator import ACAROrchestrator
-from repro.data.tasks import paper_suite
+from repro.data.tasks import Task, paper_suite
 from repro.serving.queue import MicroBatchPolicy
 from repro.serving.scheduler import ContinuousBatchingScheduler
 
 OUT = Path("experiments/bench/scheduler.json")
+BENCH_OUT = Path("BENCH_scheduler.json")
 PROBE = "gemini-2.0-flash"
+
+# 24-task repeating block hitting the paper's routing rates exactly:
+# 13 sigma=0 (54.2% single_agent), 4 sigma=0.5, 7 sigma=1 -> 45.8%
+# escalated
+PAPER_RATE_BLOCK = [0] * 13 + [1] * 4 + [2] * 7
+
+
+@dataclass
+class _SigmaScriptedBackend:
+    """Probe whose N=3 samples realise a scripted sigma per task id;
+    as an ensemble member it always answers 'a'."""
+    name: str
+    sigma_class: dict            # task_id -> 0 | 1 | 2
+    latency_ms: float = 100.0
+
+    _ANSWERS = {0: ("a", "a", "a"), 1: ("a", "a", "b"),
+                2: ("a", "b", "c")}
+
+    def generate(self, task: Task, prompt: str, *, temperature: float,
+                 sample_idx: int = 0, seed: int = 0, **_kw) -> GenResult:
+        cls = self.sigma_class.get(task.task_id, 0)
+        ans = self._ANSWERS[cls][sample_idx % 3]
+        return GenResult(response=f"answer: {ans}",
+                         semantic_answer=ans, cost=0.001,
+                         latency_ms=self.latency_ms, score=0.0)
+
+
+def paper_rate_run(n_tasks: int, batch_size: int, seed: int) -> dict:
+    """Compaction accounting at the paper's published routing rates."""
+    rng = np.random.default_rng(seed + 0x45A)
+    classes = []
+    while len(classes) < n_tasks:
+        block = list(PAPER_RATE_BLOCK)
+        rng.shuffle(block)
+        classes.extend(block)
+    classes = classes[:n_tasks]
+    tasks = [Task(task_id=f"pr-{i:05d}", benchmark="paper_rate",
+                  kind="reasoning", text=f"paper rate task {i}",
+                  gold="a", difficulty=0.0)
+             for i in range(n_tasks)]
+    sigma_class = {t.task_id: c for t, c in zip(tasks, classes)}
+    probe = _SigmaScriptedBackend("probe", sigma_class)
+    ensemble = {n: _SigmaScriptedBackend(n, {})
+                for n in ("m1", "m2", "m3")}
+    sched = ContinuousBatchingScheduler(
+        ACARConfig(seed=seed), probe, ensemble, run_id="paper-rate",
+        policy=MicroBatchPolicy(max_batch_size=batch_size))
+    sched.serve(tasks)
+    st = sched.stats
+    return {
+        "paper_rate_n_tasks": n_tasks,
+        "paper_rate_escalation_rate": st.escalated_rows / n_tasks,
+        "paper_rate_ensemble_decode_rows": st.ensemble_decode_rows,
+        "paper_rate_ensemble_decode_rows_saved":
+            st.ensemble_decode_rows_saved,
+        "paper_rate_ensemble_decode_row_reduction":
+            st.ensemble_decode_row_reduction,
+        "paper_rate_probe_prefill_reduction":
+            st.probe_prefill_reduction,
+    }
+
+
+def sample_workload(n_tasks: int, seed: int):
+    """Seeded sample spread across the whole paper mix. The suite is
+    ordered by benchmark, so taking its head would over-represent the
+    high-escalation benchmarks and misstate the routing distribution."""
+    pool = paper_suite(seed=seed)
+    rng = np.random.default_rng(seed + 0xBE7C)
+    idx = rng.permutation(len(pool))[:n_tasks]
+    return [pool[int(i)] for i in idx]
 
 
 def run(n_tasks: int = 200, batch_size: int = 8, seed: int = 0,
         verbose: bool = True) -> dict:
-    tasks = paper_suite(seed=seed)[:n_tasks]
+    tasks = sample_workload(n_tasks, seed)
     acfg = ACARConfig(seed=seed)
 
     backs = paper_backends()
@@ -69,8 +155,20 @@ def run(n_tasks: int = 200, batch_size: int = 8, seed: int = 0,
         "ensemble_calls_saved": st.ensemble_calls_saved,
         "sequential_wall_ms": seq_wall_ms,
         "scheduler_wall_ms": st.wall_ms,
+        # escalated-subset compaction (wave planning) accounting
+        "escalation_rate": st.escalated_rows / n_tasks,
+        "full_arena_rate": st.full_arena_rows / n_tasks,
+        "ensemble_decode_rows": st.ensemble_decode_rows,
+        "ensemble_decode_rows_saved": st.ensemble_decode_rows_saved,
+        "ensemble_decode_row_reduction":
+            st.ensemble_decode_row_reduction,
+        "probe_prefill_tokens": st.probe_prefill_tokens,
+        "probe_prefill_tokens_saved": st.probe_prefill_tokens_saved,
+        "probe_prefill_reduction": st.probe_prefill_reduction,
     }
+    out.update(paper_rate_run(max(n_tasks, 192), batch_size, seed))
     write_json(OUT, out)
+    write_json(BENCH_OUT, out)
     if verbose:
         print(f"tasks={n_tasks} batch={batch_size} "
               f"identical_traces={identical}")
@@ -81,6 +179,20 @@ def run(n_tasks: int = 200, batch_size: int = 8, seed: int = 0,
         print(f"speedup    : {st.speedup_vs_sequential:9.2f}x "
               f"(no-overlap batching alone: "
               f"{seq_makespan_ms / st.serial_batch_makespan_ms:.2f}x)")
+        print(f"compaction : escalation={out['escalation_rate']:.1%} "
+              f"decode-rows {st.ensemble_decode_rows} vs "
+              f"{st.ensemble_decode_rows + st.ensemble_decode_rows_saved}"
+              f" masked "
+              f"({out['ensemble_decode_row_reduction']:.2f}x fewer), "
+              f"probe prefill {out['probe_prefill_reduction']:.2f}x "
+              f"fewer tokens")
+        print(f"paper rate : escalation="
+              f"{out['paper_rate_escalation_rate']:.1%} decode-rows "
+              f"{out['paper_rate_ensemble_decode_rows']} vs "
+              f"{out['paper_rate_ensemble_decode_rows'] + out['paper_rate_ensemble_decode_rows_saved']}"
+              f" masked "
+              f"({out['paper_rate_ensemble_decode_row_reduction']:.2f}x"
+              f" fewer)")
         print(sched.render_metrics())
     return out
 
@@ -91,10 +203,32 @@ def main() -> str:
     return csv_line(
         "scheduler_bench", us,
         f"speedup={t['throughput_speedup']:.2f}x;"
-        f"identical={t['identical_traces']}")
+        f"identical={t['identical_traces']};"
+        f"decode_reduction={t['ensemble_decode_row_reduction']:.2f}x")
 
 
 if __name__ == "__main__":
-    out = run()
-    sys.exit(0 if out["identical_traces"]
-             and out["throughput_speedup"] >= 2.0 else 1)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tasks", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast run for CI artifact tracking")
+    args = ap.parse_args()
+    n = 60 if args.smoke else args.tasks
+    out = run(n_tasks=n, batch_size=args.batch_size, seed=args.seed)
+    # the prefill-reduction figures are modeled (the scheduler's host
+    # backends fix them at N by construction), so they are reported
+    # but not gated — the measured guard for shared-prefix prefill is
+    # the engine-side equivalence suite (tests/test_engine_compaction
+    # + tests/test_sampling_shared_prefix)
+    gates = {
+        "identical_traces": out["identical_traces"],
+        "throughput_speedup >= 2.0": out["throughput_speedup"] >= 2.0,
+        "paper_rate_ensemble_decode_row_reduction >= 2.0":
+            out["paper_rate_ensemble_decode_row_reduction"] >= 2.0,
+    }
+    for name, passed in gates.items():
+        if not passed:
+            print(f"GATE FAILED: {name}", file=sys.stderr)
+    sys.exit(0 if all(gates.values()) else 1)

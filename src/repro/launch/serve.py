@@ -80,6 +80,14 @@ def serve(tasks: Sequence[Task], probe: ZooModel,
         "wall_ms": res.wall_ms,
         "sigma_mean": float(res.sigma.mean()),
     }
+    cs = res.compaction
+    if cs is not None:
+        out["ensemble_decode_tokens"] = cs.ensemble_decode_tokens
+        out["ensemble_decode_tokens_saved"] = \
+            cs.ensemble_decode_tokens_saved
+        out["ensemble_decode_token_reduction"] = \
+            cs.ensemble_decode_token_reduction
+        out["probe_prefill_reduction"] = cs.probe_prefill_reduction
     if scheduler:
         out["batch_sizes"] = res.batch_sizes
     if verbose:
@@ -88,6 +96,13 @@ def serve(tasks: Sequence[Task], probe: ZooModel,
         print(f"mode distribution : {out['mode_distribution']}")
         print(f"calls saved       : {out['ensemble_calls_saved']} "
               f"of {3 * len(tasks)}")
+        if cs is not None:
+            print(f"compaction        : "
+                  f"{cs.ensemble_decode_tokens} ensemble decode tokens "
+                  f"({cs.ensemble_decode_tokens_saved} saved, "
+                  f"{out['ensemble_decode_token_reduction']:.2f}x), "
+                  f"probe prefill "
+                  f"{out['probe_prefill_reduction']:.2f}x fewer tokens")
         if scheduler:
             print(f"micro-batches     : {res.batch_sizes}")
             print(res.metrics.render())

@@ -1,4 +1,6 @@
 from repro.sampling.sampler import (
-    GenerateOutput, decode_text, generate, sample_token)
+    GenerateOutput, batch_invariant, decode_text, generate,
+    generate_samples, sample_token, tile_cache)
 
-__all__ = ["GenerateOutput", "decode_text", "generate", "sample_token"]
+__all__ = ["GenerateOutput", "batch_invariant", "decode_text",
+           "generate", "generate_samples", "sample_token", "tile_cache"]

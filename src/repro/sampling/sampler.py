@@ -6,6 +6,15 @@ builds the cache sized for prompt+new tokens, then a ``lax.scan`` drives
 otherwise tokens come from a temperature-scaled categorical. Finished
 rows (EOS emitted) keep emitting ``pad_id`` without disturbing the
 cache, so the whole batch runs a fixed-length program.
+
+``generate_samples`` is the shared-prefix N-sample variant the ACAR
+probe uses: each prompt is prefilled **once**, the KV cache is
+broadcast across the N samples, and only the decode scan runs at the
+expanded (B*N) batch — cutting prefill FLOPs by ~N x while emitting
+tokens bit-identical to ``generate`` over an ``np.repeat``-expanded
+prompt batch (per-row computation is batch-composition invariant for
+every non-MoE family; MoE prefill routes with a capacity that couples
+rows, see ``batch_invariant``).
 """
 from __future__ import annotations
 
@@ -34,6 +43,46 @@ def sample_token(logits: jax.Array, temperature: float,
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
+def batch_invariant(cfg: ModelConfig) -> bool:
+    """True when one row's forward pass cannot depend on which other
+    rows share the batch. Dense / SSM / hybrid stacks compute strictly
+    per row; MoE prefill routes with a capacity proportional to the
+    *total* token count, so expert overflow (token dropping) couples
+    rows — compaction and shared-prefix prefill are only bit-equivalent
+    to the padded/tiled paths for batch-invariant configs."""
+    return cfg.moe is None
+
+
+def _decode_scan(cfg: ModelConfig, params: dict, cache, logits0,
+                 start_pos: int, batch: int, max_new_tokens: int,
+                 temperature: float, key: jax.Array, eos_id: int,
+                 pad_id: int) -> GenerateOutput:
+    """Shared fixed-length decode loop over an existing prefill cache."""
+
+    def body(carry, step_key):
+        cache, logits, pos, done = carry
+        tok = sample_token(logits, temperature, step_key)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        tok_logp = jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
+        emit = jnp.where(done, pad_id, tok)
+        new_done = done | (tok == eos_id)
+        next_logits, cache = T.decode_step(cfg, params, cache, emit, pos)
+        return ((cache, next_logits, pos + 1, new_done),
+                (emit, jnp.where(done, 0.0, tok_logp), ~done))
+
+    keys = jax.random.split(key, max_new_tokens)
+    init = (cache, logits0, jnp.int32(start_pos),
+            jnp.zeros((batch,), bool))
+    _, (toks, logps, live) = jax.lax.scan(body, init, keys)
+    toks = toks.T                      # (B, max_new)
+    logps = logps.T
+    # a row emits a real token (possibly EOS, possibly one that merely
+    # *equals* pad_id) at every step it was not yet done — counting
+    # pad_id occurrences would undercount legitimately sampled pads
+    lengths = live.T.sum(axis=1).astype(jnp.int32)
+    return GenerateOutput(tokens=toks, logprobs=logps, lengths=lengths)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "max_new_tokens", "temperature", "eos_id",
@@ -51,26 +100,67 @@ def generate(cfg: ModelConfig, params: dict, prompt_tokens: jax.Array,
     total = s + max_new_tokens
     logits0, cache = T.prefill(cfg, params, prompt_tokens,
                                frontend_embeds, cache_len=total)
+    return _decode_scan(cfg, params, cache, logits0, s, b,
+                        max_new_tokens, temperature, key, eos_id,
+                        pad_id)
 
-    def body(carry, step_key):
-        cache, logits, pos, done = carry
-        tok = sample_token(logits, temperature, step_key)
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-        tok_logp = jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
-        emit = jnp.where(done, pad_id, tok)
-        new_done = done | (tok == eos_id)
-        next_logits, cache = T.decode_step(cfg, params, cache, emit, pos)
-        return ((cache, next_logits, pos + 1, new_done),
-                (emit, jnp.where(done, 0.0, tok_logp)))
 
-    keys = jax.random.split(key, max_new_tokens)
-    init = (cache, logits0, jnp.int32(s),
-            jnp.zeros((b,), bool))
-    (_, _, _, done), (toks, logps) = jax.lax.scan(body, init, keys)
-    toks = toks.T                      # (B, max_new)
-    logps = logps.T
-    lengths = (toks != pad_id).sum(axis=1).astype(jnp.int32)
-    return GenerateOutput(tokens=toks, logprobs=logps, lengths=lengths)
+def tile_cache(cache, n: int, batch: Optional[int] = None):
+    """Broadcast a prefill cache of batch B to B*n rows (row i's
+    replicas occupy rows i*n .. i*n+n-1, matching ``np.repeat`` on the
+    prompt batch). Stacked layer pytrees (``layers`` / ``dec_layers`` /
+    ``cross``) carry (L, B, ...); unrolled per-layer entries
+    (``layer_XX``) carry (B, ...). Pass ``batch`` to assert the chosen
+    axis really is the batch axis — the key->axis rule mirrors
+    ``transformer.init_cache``'s layout and must fail loudly if a new
+    cache entry breaks it."""
+    out = {}
+    for k, v in cache.items():
+        axis = 1 if k in ("layers", "dec_layers", "cross") else 0
+        if batch is not None:
+            for leaf in jax.tree.leaves(v):
+                if leaf.shape[axis] != batch:
+                    raise ValueError(
+                        f"cache entry {k!r}: expected batch {batch} on "
+                        f"axis {axis}, got shape {leaf.shape} — "
+                        "tile_cache's key->axis rule no longer matches "
+                        "the cache layout")
+        out[k] = jax.tree.map(
+            lambda a, ax=axis: jnp.repeat(a, n, axis=ax), v)
+    return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "n", "max_new_tokens", "temperature",
+                     "eos_id", "pad_id"))
+def generate_samples(cfg: ModelConfig, params: dict,
+                     prompt_tokens: jax.Array, n: int, *,
+                     max_new_tokens: int, temperature: float = 0.0,
+                     key: Optional[jax.Array] = None, eos_id: int = -1,
+                     pad_id: int = 0,
+                     frontend_embeds: Optional[jax.Array] = None
+                     ) -> GenerateOutput:
+    """N samples per prompt with a single shared-prefix prefill.
+
+    prompt_tokens: (B, S) -> GenerateOutput over B*n rows, row-major in
+    sample index (row i*n+j is sample j of prompt i). Bit-identical to
+    ``generate(cfg, params, np.repeat(prompt_tokens, n, axis=0), ...)``
+    with the same key for ``batch_invariant`` configs, because the
+    decode scan sees the same (B*n, V) logits and the same per-step
+    keys — only the redundant n-1 prefills per prompt are elided.
+    """
+    b, s = prompt_tokens.shape
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    total = s + max_new_tokens
+    logits0, cache = T.prefill(cfg, params, prompt_tokens,
+                               frontend_embeds, cache_len=total)
+    cache = tile_cache(cache, n, batch=b)
+    logits0 = jnp.repeat(logits0, n, axis=0)
+    return _decode_scan(cfg, params, cache, logits0, s, b * n,
+                        max_new_tokens, temperature, key, eos_id,
+                        pad_id)
 
 
 def decode_text(tokens, detok) -> list:

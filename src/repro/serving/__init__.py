@@ -1,3 +1,6 @@
+from repro.serving.compaction import (
+    CompactionPlan, CompactionStats, MemberPlan, bucket_size,
+    plan_compaction)
 from repro.serving.engine import (
     BatchedACAREngine, BatchResult, QueuedServeResult, ZooModel,
     intern_answers, judge_batch)
@@ -10,8 +13,9 @@ from repro.serving.scheduler import (
 
 __all__ = [
     "AdmissionQueue", "BatchedACAREngine", "BatchResult",
-    "ContinuousBatchingScheduler", "JaxModelBackend", "MicroBatch",
-    "MicroBatchPolicy", "ProbeCache", "PromCounters",
-    "QueuedServeResult", "Request", "SchedulerStats", "ZooModel",
-    "intern_answers", "judge_batch",
+    "CompactionPlan", "CompactionStats", "ContinuousBatchingScheduler",
+    "JaxModelBackend", "MemberPlan", "MicroBatch", "MicroBatchPolicy",
+    "ProbeCache", "PromCounters", "QueuedServeResult", "Request",
+    "SchedulerStats", "ZooModel", "bucket_size", "intern_answers",
+    "judge_batch", "plan_compaction",
 ]

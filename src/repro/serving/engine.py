@@ -2,21 +2,40 @@
 
 The paper routes one task at a time with host-side Python. On TPU the
 profitable formulation batches: a request batch of B tasks becomes one
-(B x N) probe decode, sigma and the routing decision are computed
-on-device with ``sigma_batch`` / ``route_batch``, and the ensemble
-members run as batched decodes with per-row mode masks. Aggregation
-(majority vote, arena-lite verification, full-arena judge) is
-vectorised over answer ids, so the entire routing pipeline is a handful
-of XLA programs instead of 1,510 host round-trips.
+probe decode, sigma and the routing decision are computed on-device
+with ``sigma_batch`` / ``route_batch``, and the ensemble members run as
+batched decodes. Aggregation (majority vote, arena-lite verification,
+full-arena judge) is vectorised over answer ids, so the entire routing
+pipeline is a handful of XLA programs instead of 1,510 host
+round-trips.
+
+Two compute-follows-routing optimisations make decode cost
+proportional to what the router actually escalated:
+
+* **Shared-prefix probe prefill** — the N probe samples of a prompt
+  share one prefill; the KV cache is broadcast across samples and only
+  the decode scan runs at (B*N) (sampling/sampler.py
+  ``generate_samples``), cutting probe prefill FLOPs ~N x.
+* **Escalated-subset compaction** — ensemble members decode only the
+  ``sigma>0`` rows (and the ``modes>=2`` subset for members past the
+  arena-lite pair), gathered into power-of-two shape buckets and
+  scattered back (serving/compaction.py). The masked fallback decodes
+  the full batch and discards non-escalated answers; both paths feed
+  ``judge_batch`` bit-identical inputs. Compaction engages only when
+  the decode is batch-composition invariant: greedy ensemble
+  temperature (categorical draws depend on batch shape) and non-MoE
+  member configs (MoE prefill capacity couples rows).
 
 Answer ids: EXTRACT runs host-side on decoded text (string logic), then
-canonical answers are interned to int32 ids for the on-device math.
+canonical answers are interned to int32 ids for the on-device math —
+one interning table per batch, shared between probe and ensemble
+answers so the judge compares ids from a single namespace.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +48,9 @@ from repro.core.sigma import (
     MODE_NAMES, majority_vote_batch, route_batch, sigma_batch)
 from repro.data import tokenizer as tok
 from repro.data.tasks import Task
-from repro.sampling import generate
+from repro.sampling import batch_invariant, generate, generate_samples
+from repro.serving.compaction import (
+    CompactionStats, plan_compaction)
 from repro.serving.metrics import PromCounters
 from repro.serving.queue import AdmissionQueue, MicroBatchPolicy
 
@@ -41,9 +62,14 @@ class ZooModel:
     params: dict
 
 
-def intern_answers(answers: Sequence[str]) -> np.ndarray:
-    """Intern canonical answer strings to dense int32 ids."""
-    table: Dict[str, int] = {}
+def intern_answers(answers: Sequence[str],
+                   table: Optional[Dict[str, int]] = None) -> np.ndarray:
+    """Intern canonical answer strings to dense int32 ids.
+
+    Pass ``table`` to thread one namespace through several calls (the
+    engine interns probe and ensemble answers into a single table)."""
+    if table is None:
+        table = {}
     out = np.empty(len(answers), np.int32)
     for i, a in enumerate(answers):
         out[i] = table.setdefault(a, len(table))
@@ -89,73 +115,150 @@ class BatchResult:
     probe_texts: List[List[str]]
     ensemble_calls_saved: int
     wall_ms: float
+    # per-row, per-member extracted answers; None where the router did
+    # not escalate the row to that member (exactly the judge's -1
+    # entries) — identical between compacted and masked execution
+    member_answers: Optional[List[List[Optional[str]]]] = None
+    compaction: Optional[CompactionStats] = None
 
 
 class BatchedACAREngine:
+    """Batched ACAR engine over real JAX zoo models.
+
+    ``compact`` enables escalated-subset compaction, ``shared_prefix``
+    the single-prefill probe expansion; both auto-disable per model
+    when the bit-equivalence preconditions fail (see module docstring),
+    so disabling them explicitly is only needed for A/B measurement.
+    ``route_fn`` overrides sigma->mode routing (tests use it to force
+    escalation rates)."""
+
     def __init__(self, acfg: ACARConfig, probe: ZooModel,
                  ensemble: Sequence[ZooModel], prompt_len: int = 16,
-                 max_new_tokens: int = 8):
+                 max_new_tokens: int = 8, compact: bool = True,
+                 shared_prefix: bool = True,
+                 route_fn: Optional[Callable[[jax.Array],
+                                             jax.Array]] = None):
         self.acfg = acfg
         self.probe = probe
         self.ensemble = list(ensemble)
         self.prompt_len = prompt_len
         self.max_new_tokens = max_new_tokens
+        self.compact = compact
+        self.shared_prefix = shared_prefix
+        self.route_fn = route_fn or route_batch
 
     # ------------------------------------------------------------------
     def _decode_texts(self, out_tokens) -> List[str]:
         return [tok.decode(row) for row in np.asarray(out_tokens)]
+
+    def _probe_decode(self, ids: np.ndarray, key: jax.Array,
+                      stats: CompactionStats) -> List[str]:
+        """N-sample probe decode; prefers the shared-prefix path."""
+        b, s = ids.shape
+        n = self.acfg.n_probe_samples
+        stats.probe_prefill_tokens += b * s
+        if self.shared_prefix and batch_invariant(self.probe.cfg):
+            out = generate_samples(
+                self.probe.cfg, self.probe.params, jnp.asarray(ids), n,
+                max_new_tokens=self.max_new_tokens,
+                temperature=self.acfg.probe_temperature,
+                key=key, eos_id=tok.EOS, pad_id=tok.PAD)
+            saved = b * (n - 1) * s
+            stats.probe_prefill_tokens_saved += saved
+            stats.probe_prefill_flops_saved += \
+                2.0 * self.probe.cfg.active_param_count() * saved
+        else:
+            # (B*N) expansion recomputes each prompt's prefill N times
+            stats.probe_prefill_tokens += b * (n - 1) * s
+            out = generate(
+                self.probe.cfg, self.probe.params,
+                jnp.asarray(np.repeat(ids, n, axis=0)),
+                max_new_tokens=self.max_new_tokens,
+                temperature=self.acfg.probe_temperature,
+                key=key, eos_id=tok.EOS, pad_id=tok.PAD)
+        return self._decode_texts(out.tokens)
+
+    def _member_compactable(self, zm: ZooModel) -> bool:
+        """Compaction must not perturb the decoded rows: greedy decode
+        (temperature-0 sampling is batch-shape independent, categorical
+        draws are not) of a batch-invariant config."""
+        return (self.compact
+                and self.acfg.ensemble_temperature <= 0.0
+                and batch_invariant(zm.cfg))
 
     def run_batch(self, tasks: Sequence[Task]) -> BatchResult:
         t0 = time.perf_counter()
         b = len(tasks)
         n = self.acfg.n_probe_samples
         ids = tok.encode_aligned([t.text for t in tasks])
-        # (B*N) probe expansion — one decode program for all samples
-        tiled = np.repeat(ids, n, axis=0)
         key = jax.random.PRNGKey(self.acfg.seed)
-        out = generate(self.probe.cfg, self.probe.params,
-                       jnp.asarray(tiled),
-                       max_new_tokens=self.max_new_tokens,
-                       temperature=self.acfg.probe_temperature,
-                       key=key, eos_id=tok.EOS, pad_id=tok.PAD)
-        texts = self._decode_texts(out.tokens)
+        stats = CompactionStats(batch=b)
+        texts = self._probe_decode(ids, key, stats)
         answers = [extract(texts[i * n + j], tasks[i].kind)
                    for i in range(b) for j in range(n)]
-        answer_ids = intern_answers(answers).reshape(b, n)
+        # one interning table for the whole batch: probe ids first,
+        # ensemble answers join the same namespace below
+        id_table: Dict[str, int] = {}
+        answer_ids = intern_answers(answers, id_table).reshape(b, n)
 
         sig = sigma_batch(jnp.asarray(answer_ids))
-        modes = route_batch(sig)
+        modes = self.route_fn(sig)
         probe_major = majority_vote_batch(jnp.asarray(answer_ids))
 
-        # ensemble decodes (batched over all rows; per-row mode masks
-        # select which answers count — a compacting scheduler would slice
-        # the escalated subset instead, same math)
-        id_table: Dict[str, int] = {}
-        for i, a in enumerate(answers):
-            id_table.setdefault(a, len(id_table))
-        member_cols = []
-        member_texts: List[List[str]] = []
+        # ensemble decodes over the escalated subset: gather sigma>0
+        # rows (modes>=2 for members past the arena-lite pair) into
+        # power-of-two buckets, decode, scatter answers back; masked
+        # full-batch decode when compaction preconditions fail
         modes_np = np.asarray(modes)
+        plan = plan_compaction(modes_np, len(self.ensemble),
+                               self.acfg.arena_lite_size)
+        stats.escalated_rows = plan.escalated_rows
+        stats.full_arena_rows = plan.full_arena_rows
+        member_cols = []
+        member_answers: List[List[Optional[str]]] = \
+            [[None] * len(self.ensemble) for _ in range(b)]
         for mi, zm in enumerate(self.ensemble):
-            needed = modes_np >= (1 if mi < self.acfg.arena_lite_size
-                                  else 2)
-            if not needed.any():
-                member_cols.append(np.full(b, -1, np.int32))
-                member_texts.append([""] * b)
-                continue
-            mout = generate(zm.cfg, zm.params, jnp.asarray(ids),
-                            max_new_tokens=self.max_new_tokens,
-                            temperature=self.acfg.ensemble_temperature,
-                            key=jax.random.fold_in(key, 1000 + mi),
-                            eos_id=tok.EOS, pad_id=tok.PAD)
-            mtexts = self._decode_texts(mout.tokens)
-            member_texts.append(mtexts)
+            mp = plan.members[mi]
             col = np.full(b, -1, np.int32)
-            for i in range(b):
-                if needed[i]:
-                    a = extract(mtexts[i], tasks[i].kind)
-                    col[i] = id_table.setdefault(a, len(id_table))
+            if mp.n_rows == 0:
+                member_cols.append(col)
+                continue
+            mkey = jax.random.fold_in(key, 1000 + mi)
+            if self._member_compactable(zm) and mp.bucket < b:
+                rows = mp.padded_rows()
+                mout = generate(zm.cfg, zm.params,
+                                jnp.asarray(ids[rows]),
+                                max_new_tokens=self.max_new_tokens,
+                                temperature=(
+                                    self.acfg.ensemble_temperature),
+                                key=mkey, eos_id=tok.EOS,
+                                pad_id=tok.PAD)
+                sub_texts = self._decode_texts(mout.tokens)
+                for j, r in enumerate(mp.rows):
+                    a = extract(sub_texts[j], tasks[r].kind)
+                    col[r] = id_table.setdefault(a, len(id_table))
+                    member_answers[r][mi] = a
+                decoded_rows = mp.bucket
+            else:
+                mout = generate(zm.cfg, zm.params, jnp.asarray(ids),
+                                max_new_tokens=self.max_new_tokens,
+                                temperature=(
+                                    self.acfg.ensemble_temperature),
+                                key=mkey, eos_id=tok.EOS,
+                                pad_id=tok.PAD)
+                mtexts = self._decode_texts(mout.tokens)
+                for r in mp.rows:
+                    a = extract(mtexts[r], tasks[r].kind)
+                    col[r] = id_table.setdefault(a, len(id_table))
+                    member_answers[r][mi] = a
+                decoded_rows = b
             member_cols.append(col)
+            stats.bucket_sizes.append(decoded_rows)
+            stats.bucket_rows.append(mp.n_rows)
+            stats.ensemble_decode_tokens += \
+                decoded_rows * self.max_new_tokens
+            stats.ensemble_decode_tokens_saved += \
+                (b - decoded_rows) * self.max_new_tokens
         member_ids = jnp.asarray(np.stack(member_cols, axis=1))
 
         final_ids = judge_batch(member_ids, probe_major, modes)
@@ -170,7 +273,8 @@ class BatchedACAREngine:
             sigma=np.asarray(sig), modes=modes_np,
             final_answers=final_answers, probe_texts=probe_texts,
             ensemble_calls_saved=saved,
-            wall_ms=(time.perf_counter() - t0) * 1e3)
+            wall_ms=(time.perf_counter() - t0) * 1e3,
+            member_answers=member_answers, compaction=stats)
 
     # ------------------------------------------------------------------
     # continuous-batching entry point: admission queue -> micro-batches
@@ -188,6 +292,7 @@ class BatchedACAREngine:
         for t in tasks:
             queue.submit(t)
         metrics = PromCounters()
+        compaction = CompactionStats()
         batch_results: List[BatchResult] = []
         batch_sizes: List[int] = []
         for batch in queue.drain_batches():
@@ -205,6 +310,44 @@ class BatchedACAREngine:
                 metrics.inc("acar_engine_mode_total",
                             mode=MODE_NAMES[int(m)],
                             help="tasks routed per execution mode")
+            cs = res.compaction
+            if cs is not None:
+                compaction.merge(cs)
+                metrics.inc("acar_engine_escalated_rows_total",
+                            cs.escalated_rows,
+                            help="rows with sigma>0 per wave, summed")
+                metrics.inc("acar_engine_full_arena_rows_total",
+                            cs.full_arena_rows,
+                            help="rows escalated to the full arena")
+                metrics.inc(
+                    "acar_engine_ensemble_decode_tokens_total",
+                    cs.ensemble_decode_tokens,
+                    help="ensemble decode tokens actually generated")
+                metrics.inc(
+                    "acar_engine_ensemble_decode_tokens_saved_total",
+                    cs.ensemble_decode_tokens_saved,
+                    help="decode tokens the masked full-batch path "
+                         "would have generated but compaction skipped")
+                metrics.inc(
+                    "acar_engine_probe_prefill_tokens_saved_total",
+                    cs.probe_prefill_tokens_saved,
+                    help="probe prefill tokens elided by shared-prefix "
+                         "expansion")
+                metrics.inc(
+                    "acar_engine_probe_prefill_flops_saved_total",
+                    cs.probe_prefill_flops_saved,
+                    help="approx. prefill FLOPs saved "
+                         "(2 * active params * tokens)")
+                for bkt, rows in zip(cs.bucket_sizes, cs.bucket_rows):
+                    metrics.inc("acar_engine_bucket_waves_total",
+                                bucket=str(bkt),
+                                help="member decode waves per shape "
+                                     "bucket")
+                    metrics.set_gauge(
+                        "acar_engine_bucket_occupancy",
+                        rows / bkt if bkt else 0.0, bucket=str(bkt),
+                        help="escalated-row fill of the last decode "
+                             "wave in each shape bucket")
         return QueuedServeResult(
             sigma=np.concatenate([r.sigma for r in batch_results])
             if batch_results else np.zeros(0, np.float32),
@@ -216,7 +359,11 @@ class BatchedACAREngine:
             ensemble_calls_saved=sum(r.ensemble_calls_saved
                                      for r in batch_results),
             wall_ms=(time.perf_counter() - t0) * 1e3,
-            metrics=metrics)
+            metrics=metrics, compaction=compaction,
+            probe_texts=[p for r in batch_results
+                         for p in r.probe_texts],
+            member_answers=[m for r in batch_results
+                            for m in (r.member_answers or [])])
 
 
 @dataclass
@@ -229,3 +376,6 @@ class QueuedServeResult:
     ensemble_calls_saved: int
     wall_ms: float
     metrics: Optional[object] = field(default=None, repr=False)
+    compaction: Optional[CompactionStats] = None
+    probe_texts: Optional[List[List[str]]] = None
+    member_answers: Optional[List[List[Optional[str]]]] = None

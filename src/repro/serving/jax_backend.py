@@ -23,6 +23,7 @@ from repro.core.extract import extract_math
 from repro.data import tokenizer as tok
 from repro.data.tasks import Task
 from repro.sampling import generate
+from repro.teamllm.fingerprint import stable_fingerprint
 
 # $ per active-parameter per generated token (synthetic pricing used to
 # make the cost axis comparable across zoo members)
@@ -44,9 +45,12 @@ class JaxModelBackend:
                  sample_idx: int = 0, seed: int = 0,
                  **_ignored) -> GenResult:
         ids = tok.encode_aligned([task.text])
+        # stable_fingerprint, not hash(): builtin str hashing is salted
+        # per process, which would draw different keys for identical
+        # runs (breaking the deterministic-execution invariant)
         key = jax.random.fold_in(
             jax.random.fold_in(jax.random.PRNGKey(seed), sample_idx),
-            abs(hash(task.task_id)) % (1 << 31))
+            stable_fingerprint(task.task_id))
         t0 = time.perf_counter()
         out = generate(
             self.cfg, self.params, jnp.asarray(ids),

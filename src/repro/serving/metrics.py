@@ -1,8 +1,10 @@
-"""Prometheus-style counter registry (dependency-free).
+"""Prometheus-style metric registry (dependency-free).
 
 Shared by the continuous-batching scheduler and the real-model engine's
 queued serving path; rendering follows the Prometheus text exposition
-format with deterministic ordering.
+format with deterministic ordering. Counters accumulate via ``inc``;
+gauges (``set_gauge``) hold the last observed value — used for
+per-wave occupancy readings like compaction bucket fill.
 """
 from __future__ import annotations
 
@@ -10,25 +12,37 @@ from typing import Dict, List, Tuple
 
 
 class PromCounters:
-    """Minimal Prometheus text-format counter registry."""
+    """Minimal Prometheus text-format counter/gauge registry."""
 
     def __init__(self):
         self._values: Dict[Tuple[str, Tuple[Tuple[str, str], ...]],
                            float] = {}
         self._help: Dict[str, str] = {}
+        self._types: Dict[str, str] = {}
+
+    @staticmethod
+    def _key(name: str, labels: Dict[str, str]):
+        return (name, tuple(sorted((k, str(v))
+                                   for k, v in labels.items())))
 
     def inc(self, name: str, value: float = 1.0,
             help: str = "", **labels: str) -> None:
-        key = (name, tuple(sorted((k, str(v))
-                                  for k, v in labels.items())))
+        key = self._key(name, labels)
         self._values[key] = self._values.get(key, 0.0) + value
         if help and name not in self._help:
             self._help[name] = help
+        self._types.setdefault(name, "counter")
+
+    def set_gauge(self, name: str, value: float,
+                  help: str = "", **labels: str) -> None:
+        """Set a gauge to its latest observation (no accumulation)."""
+        self._values[self._key(name, labels)] = value
+        if help and name not in self._help:
+            self._help[name] = help
+        self._types[name] = "gauge"
 
     def get(self, name: str, **labels: str) -> float:
-        key = (name, tuple(sorted((k, str(v))
-                                  for k, v in labels.items())))
-        return self._values.get(key, 0.0)
+        return self._values.get(self._key(name, labels), 0.0)
 
     def render(self) -> str:
         """Prometheus exposition text format, deterministically sorted."""
@@ -36,7 +50,8 @@ class PromCounters:
         for name in sorted({n for n, _ in self._values}):
             if name in self._help:
                 lines.append(f"# HELP {name} {self._help[name]}")
-            lines.append(f"# TYPE {name} counter")
+            lines.append(
+                f"# TYPE {name} {self._types.get(name, 'counter')}")
             for (n, labels), v in sorted(self._values.items()):
                 if n != name:
                     continue

@@ -50,6 +50,7 @@ from repro.core.routing import majority_vote, models_for_mode
 from repro.core.sigma import (
     MODE_NAMES, route_batch, sigma as sigma_fn, sigma_batch)
 from repro.data.tasks import Task
+from repro.serving.compaction import CompactionPlan, plan_compaction
 from repro.serving.metrics import PromCounters
 from repro.serving.queue import AdmissionQueue, MicroBatch, \
     MicroBatchPolicy, Request
@@ -128,6 +129,10 @@ class _ProbedBatch:
     batch: MicroBatch
     rows: List[_ProbedRequest]
     wave_latency_ms: float       # max over cache-missed rows
+    # escalated-subset decode plan, computed on the (overlapped) probe
+    # stage so the ensemble wave starts with its gather/bucket shapes
+    # already known
+    plan: Optional[CompactionPlan] = None
 
 
 @dataclass
@@ -138,6 +143,13 @@ class SchedulerStats:
     probe_cache_misses: int = 0
     ensemble_calls_saved: int = 0
     total_cost: float = 0.0
+    # compaction accounting (escalated-subset wave planning)
+    escalated_rows: int = 0               # rows routed past single_agent
+    full_arena_rows: int = 0              # rows routed to the full arena
+    ensemble_decode_rows: int = 0         # compacted row-decodes issued
+    ensemble_decode_rows_saved: int = 0   # full-batch masked rows elided
+    probe_prefill_tokens: int = 0         # shared-prefix prefill tokens
+    probe_prefill_tokens_saved: int = 0   # (N-1)x prompt tokens elided
     # deterministic virtual clock (the calibrated latency model)
     sequential_makespan_ms: float = 0.0   # sum of per-task latencies
     serial_batch_makespan_ms: float = 0.0  # batched, no overlap
@@ -156,6 +168,25 @@ class SchedulerStats:
         if self.pipeline_makespan_ms <= 0:
             return float("inf")
         return self.tasks / (self.pipeline_makespan_ms / 1e3)
+
+    @property
+    def ensemble_decode_row_reduction(self) -> float:
+        """masked-path row-decodes / compacted row-decodes (>= 1)."""
+        if self.ensemble_decode_rows <= 0:
+            return float("inf") if self.ensemble_decode_rows_saved \
+                else 1.0
+        return (self.ensemble_decode_rows
+                + self.ensemble_decode_rows_saved) \
+            / self.ensemble_decode_rows
+
+    @property
+    def probe_prefill_reduction(self) -> float:
+        """tiled-expansion prefill tokens / shared-prefix tokens."""
+        if self.probe_prefill_tokens <= 0:
+            return 1.0
+        return (self.probe_prefill_tokens
+                + self.probe_prefill_tokens_saved) \
+            / self.probe_prefill_tokens
 
 
 class ContinuousBatchingScheduler:
@@ -224,8 +255,16 @@ class ContinuousBatchingScheduler:
                 probe_latency=entry.probe_latency, cache_hit=hit))
 
         self._route_rows(rows)
+        # wave planning: the escalated-subset gather/bucket shapes are
+        # decided here, on the prefetch thread, so the ensemble wave of
+        # batch k pipelines against the probe wave of batch k+1 with no
+        # planning work left on the critical path
+        modes_np = np.asarray(
+            [MODE_NAMES.index(r.mode) for r in rows], np.int32)
+        plan = plan_compaction(modes_np, len(self.ensemble_order),
+                               self.acfg.arena_lite_size)
         return _ProbedBatch(batch=batch, rows=rows,
-                            wave_latency_ms=wave_latency)
+                            wave_latency_ms=wave_latency, plan=plan)
 
     def _route_rows(self, rows: List[_ProbedRequest]) -> None:
         """sigma + mode per row. The routing decision runs on device
@@ -261,6 +300,7 @@ class ContinuousBatchingScheduler:
                        ) -> Tuple[List[TaskOutcome], float]:
         outcomes: List[TaskOutcome] = []
         wave_latency = 0.0
+        self._account_compaction(probed)
         for row in probed.rows:
             req, task = row.request, row.request.task
             sm = RunStateMachine(f"{self.run_id}/{task.task_id}")
@@ -325,6 +365,62 @@ class ContinuousBatchingScheduler:
                 self.metrics.inc("acar_sched_probe_cache_misses_total",
                                  help="probe waves decoded")
         return outcomes, wave_latency
+
+    def _account_compaction(self, probed: _ProbedBatch) -> None:
+        """Record the wave's escalated-subset decode plan: how many
+        rows escalated, how many row-decodes the compacted sub-batches
+        issue vs the full-batch masked path, the shape-bucket occupancy
+        (bounded XLA recompiles: one shape per power of two), and the
+        shared-prefix probe prefill savings. Runs on the main thread —
+        the probe wave may execute on the prefetch worker, so stats and
+        metrics mutation stays out of ``_probe_wave``."""
+        # shared-prefix probe: a cache-missed row prefills its prompt
+        # once; the tiled (B*N) expansion would have prefilled it N
+        # times
+        n = self.acfg.n_probe_samples
+        for row in probed.rows:
+            if not row.cache_hit:
+                est = row.request.est_tokens
+                self.stats.probe_prefill_tokens += est
+                self.stats.probe_prefill_tokens_saved += (n - 1) * est
+                self.metrics.inc(
+                    "acar_sched_probe_prefill_tokens_saved_total",
+                    (n - 1) * est,
+                    help="probe prefill tokens elided by shared-prefix "
+                         "expansion")
+        plan = probed.plan
+        if plan is None:
+            return
+        st = self.stats
+        st.escalated_rows += plan.escalated_rows
+        st.full_arena_rows += plan.full_arena_rows
+        st.ensemble_decode_rows += plan.compacted_decode_rows
+        st.ensemble_decode_rows_saved += plan.decode_rows_saved
+        self.metrics.inc("acar_sched_escalated_rows_total",
+                         plan.escalated_rows,
+                         help="rows escalated past single_agent")
+        self.metrics.inc("acar_sched_full_arena_rows_total",
+                         plan.full_arena_rows,
+                         help="rows escalated to the full arena")
+        self.metrics.inc("acar_sched_ensemble_decode_rows_total",
+                         plan.compacted_decode_rows,
+                         help="row-decodes issued by compacted waves")
+        self.metrics.inc(
+            "acar_sched_ensemble_decode_rows_saved_total",
+            plan.decode_rows_saved,
+            help="row-decodes the masked full-batch path would have "
+                 "issued but compaction elided")
+        for mp in plan.members:
+            if mp.bucket == 0:
+                continue
+            self.metrics.inc("acar_sched_bucket_waves_total",
+                             bucket=str(mp.bucket),
+                             help="member decode waves per shape bucket")
+            self.metrics.set_gauge(
+                "acar_sched_bucket_occupancy", mp.occupancy,
+                bucket=str(mp.bucket),
+                help="escalated-row fill of the last decode wave in "
+                     "each shape bucket")
 
     # -- main loop -----------------------------------------------------
     def run_until_idle(self) -> List[TaskOutcome]:

@@ -26,6 +26,17 @@ def prompt_hash(template: str) -> str:
     return hashlib.sha256(template.encode()).hexdigest()[:16]
 
 
+def stable_fingerprint(text: str, bits: int = 31) -> int:
+    """Process-stable non-negative integer fingerprint of a string.
+
+    Python's builtin ``hash`` is salted per process (PYTHONHASHSEED),
+    so PRNG keys derived from it differ between otherwise identical
+    runs — exactly the nondeterminism the §3.1 invariant forbids. This
+    sha256-derived value is identical everywhere."""
+    h = hashlib.sha256(text.encode()).digest()
+    return int.from_bytes(h[:8], "little") % (1 << bits)
+
+
 @dataclass(frozen=True)
 class EnvironmentFingerprint:
     python: str

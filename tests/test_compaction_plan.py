@@ -1,0 +1,104 @@
+"""Host-side compaction planning: shape buckets, gather/scatter plans,
+savings accounting, and the metrics gauge support they feed."""
+import numpy as np
+import pytest
+
+from repro.serving.compaction import (
+    CompactionStats, bucket_size, plan_compaction)
+from repro.serving.metrics import PromCounters
+
+
+@pytest.mark.parametrize("k,want", [
+    (0, 0), (1, 1), (2, 2), (3, 4), (4, 4), (5, 8), (7, 8), (8, 8),
+    (9, 16), (63, 64),
+])
+def test_bucket_size_power_of_two(k, want):
+    assert bucket_size(k) == want
+
+
+def test_bucket_size_cap():
+    assert bucket_size(5, cap=8) == 8
+    assert bucket_size(5, cap=6) == 6     # clipped, still >= k
+    assert bucket_size(3, cap=8) == 4
+    assert bucket_size(0, cap=8) == 0
+
+
+def test_plan_compaction_subsets():
+    # modes: 3 single_agent, 3 arena_lite, 2 full_arena
+    modes = [0, 1, 0, 2, 1, 0, 2, 1]
+    plan = plan_compaction(modes, n_members=3, arena_lite_size=2)
+    assert plan.escalated_rows == 5
+    assert plan.full_arena_rows == 2
+    # arena-lite members decode the modes>=1 rows
+    np.testing.assert_array_equal(plan.members[0].rows, [1, 3, 4, 6, 7])
+    np.testing.assert_array_equal(plan.members[1].rows, [1, 3, 4, 6, 7])
+    # the third member only the modes>=2 rows
+    np.testing.assert_array_equal(plan.members[2].rows, [3, 6])
+    assert plan.members[0].bucket == 8    # 5 -> 8, capped at batch
+    assert plan.members[2].bucket == 2
+
+
+def test_plan_padded_rows_replicate_first():
+    plan = plan_compaction([0, 2, 0, 2, 2], 3, 2)
+    mp = plan.members[2]
+    np.testing.assert_array_equal(mp.rows, [1, 3, 4])
+    np.testing.assert_array_equal(mp.padded_rows(), [1, 3, 4, 1])
+    assert mp.occupancy == 3 / 4
+
+
+def test_plan_accounting_half_escalation():
+    # batch 8, half escalated (2 lite + 2 full) — the regime where
+    # compaction pays
+    modes = [0, 1, 0, 2, 0, 1, 0, 2]
+    plan = plan_compaction(modes, 3, 2)
+    # members 0/1 decode bucket(4)=4 rows, member 2 bucket(2)=2
+    assert plan.compacted_decode_rows == 4 + 4 + 2
+    # masked path: all three members decode the full batch
+    assert plan.masked_decode_rows == 3 * 8
+    assert plan.decode_rows_saved == 24 - 10
+    assert plan.decode_tokens(8) == 10 * 8
+
+
+def test_plan_no_escalation_skips_everything():
+    plan = plan_compaction([0, 0, 0, 0], 3, 2)
+    assert plan.compacted_decode_rows == 0
+    assert plan.masked_decode_rows == 0
+    assert all(m.bucket == 0 for m in plan.members)
+
+
+def test_plan_full_escalation_saves_nothing():
+    plan = plan_compaction([2, 2, 2, 2], 3, 2)
+    assert plan.compacted_decode_rows == 12
+    assert plan.masked_decode_rows == 12
+    assert plan.decode_rows_saved == 0
+
+
+def test_compaction_stats_merge_and_reductions():
+    a = CompactionStats(batch=8, escalated_rows=4,
+                        ensemble_decode_tokens=80,
+                        ensemble_decode_tokens_saved=112,
+                        probe_prefill_tokens=72,
+                        probe_prefill_tokens_saved=144)
+    b = CompactionStats(batch=8, escalated_rows=3,
+                        ensemble_decode_tokens=48,
+                        ensemble_decode_tokens_saved=144)
+    a.merge(b)
+    assert a.batch == 16 and a.escalated_rows == 7
+    assert a.ensemble_decode_tokens == 128
+    assert a.ensemble_decode_tokens_saved == 256
+    assert a.ensemble_decode_token_reduction == pytest.approx(3.0)
+    assert a.probe_prefill_reduction == pytest.approx(3.0)
+
+
+def test_prom_gauge_renders_and_overwrites():
+    m = PromCounters()
+    m.inc("waves_total", help="waves")
+    m.set_gauge("occupancy", 0.5, help="fill", bucket="4")
+    m.set_gauge("occupancy", 0.75, bucket="4")
+    m.set_gauge("occupancy", 1.0, bucket="8")
+    text = m.render()
+    assert "# TYPE occupancy gauge" in text
+    assert '# TYPE waves_total counter' in text
+    assert 'occupancy{bucket="4"} 0.75' in text
+    assert 'occupancy{bucket="8"} 1' in text
+    assert m.get("occupancy", bucket="4") == 0.75

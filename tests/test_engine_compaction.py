@@ -1,0 +1,91 @@
+"""Compacted <-> masked engine equivalence (the tentpole contract).
+
+The escalated-subset engine must be an execution strategy, not a
+semantic change: identical sigma, modes, final answers, per-member
+answers, and trace record hashes as the masked full-batch path, at any
+escalation rate and for batch sizes on and off the power-of-two bucket
+boundaries — while actually decoding fewer ensemble rows.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from harness.simulate import run_engine_compaction_equivalence
+
+# JIT/compile-heavy: excluded from the fast inner loop (-m 'not slow')
+pytestmark = pytest.mark.slow
+
+
+def forced_route(rate: float):
+    """route_fn driving an exact escalation rate: the first
+    round(rate*B) rows alternate arena_lite / full_arena, the rest stay
+    single_agent."""
+    def route(sig):
+        b = sig.shape[0]
+        modes = np.zeros(b, np.int32)
+        k = int(round(rate * b))
+        for j in range(k):
+            modes[j] = 1 + (j % 2)
+        return jnp.asarray(modes)
+    return route
+
+
+@pytest.mark.parametrize("batch_size", [6, 8])
+@pytest.mark.parametrize("rate", [0.0, 0.5, 1.0])
+def test_compaction_equivalence_forced_rates(rate, batch_size,
+                                             tmp_path):
+    """Escalation 0% / ~50% / 100%, batch sizes straddling the
+    power-of-two bucket boundary (6 pads into a 4+2 split world,
+    8 is exact)."""
+    report = run_engine_compaction_equivalence(
+        n_tasks=batch_size, batch_size=batch_size,
+        route_fn=forced_route(rate),
+        workdir=tmp_path / f"r{rate}-b{batch_size}")
+    assert report.ok, report.summary()
+    # probe prefill is always shared-prefix: N=3 -> 3x
+    assert report.probe_prefill_reduction == pytest.approx(3.0)
+    if rate == 0.0:
+        # nothing escalated: neither path decodes any ensemble rows
+        assert report.ensemble_decode_token_reduction == 1.0
+    elif rate == 0.5:
+        # half the rows escalated -> compaction at least halves the
+        # ensemble decode tokens of the masked path
+        assert report.ensemble_decode_token_reduction >= 1.5
+    else:
+        # every row escalated, but only half to the full arena: the
+        # arena-lite members run the full batch while the third member
+        # still compacts its modes>=2 subset — a modest, real win
+        assert 1.0 <= report.ensemble_decode_token_reduction <= 1.5
+
+
+def test_compaction_all_full_arena_saves_nothing(tmp_path):
+    """All rows at sigma=1: every member decodes every row; compaction
+    must not cheat (and must still be bit-equivalent)."""
+    def route(sig):
+        return jnp.full(sig.shape[0], 2, jnp.int32)
+
+    report = run_engine_compaction_equivalence(
+        n_tasks=8, batch_size=8, route_fn=route,
+        workdir=tmp_path)
+    assert report.ok, report.summary()
+    assert report.ensemble_decode_token_reduction == pytest.approx(1.0)
+
+
+def test_compaction_equivalence_emergent_routing(tmp_path):
+    """No forced routing: whatever sigma the tiny probe produces, the
+    two paths must agree bit-for-bit (including the audit chain
+    head) across multiple micro-batches."""
+    report = run_engine_compaction_equivalence(
+        n_tasks=12, batch_size=5, workdir=tmp_path)
+    assert report.ok, report.summary()
+
+
+def test_compaction_saves_decode_tokens_at_paper_rate(tmp_path):
+    """At the paper's ~45.8% escalation the compacted engine must cut
+    ensemble decode tokens >= 2x vs the masked path."""
+    # 8-row batches: 4 escalated rows (2 lite + 2 full) ~ 50%
+    report = run_engine_compaction_equivalence(
+        n_tasks=16, batch_size=8, route_fn=forced_route(0.458),
+        workdir=tmp_path)
+    assert report.ok, report.summary()
+    assert report.ensemble_decode_token_reduction >= 2.0

@@ -1,0 +1,100 @@
+"""Shared-prefix N-sample generation + decode-length accounting.
+
+``generate_samples`` must emit tokens bit-identical to ``generate``
+over an ``np.repeat``-expanded prompt batch — it elides the redundant
+prefills, nothing else. ``GenerateOutput.lengths`` must count emitted
+tokens via the done mask, not by counting non-pad tokens (a model may
+legitimately sample the pad token before EOS).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data import tokenizer as tok
+from repro.models import params as params_lib
+from repro.sampling import batch_invariant, generate, generate_samples
+
+# JIT/compile-heavy: excluded from the fast inner loop (-m 'not slow')
+pytestmark = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("smollm-135m", reduced=True).replace(
+        vocab_size=tok.VOCAB_SIZE, dtype="float32",
+        tie_embeddings=True)
+    prm = params_lib.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, prm
+
+
+def _prompts():
+    return tok.encode_aligned(
+        ["3 + 4 = ", "2 * 3 = ", "9 - 5 = ", "1 + 1 = "])
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_generate_samples_bit_equals_tiled_generate(tiny_model,
+                                                    temperature):
+    cfg, prm = tiny_model
+    ids = _prompts()
+    n, key = 3, jax.random.PRNGKey(7)
+    tiled = generate(cfg, prm, jnp.asarray(np.repeat(ids, n, axis=0)),
+                     max_new_tokens=6, temperature=temperature,
+                     key=key, eos_id=tok.EOS, pad_id=tok.PAD)
+    shared = generate_samples(cfg, prm, jnp.asarray(ids), n,
+                              max_new_tokens=6, temperature=temperature,
+                              key=key, eos_id=tok.EOS, pad_id=tok.PAD)
+    np.testing.assert_array_equal(np.asarray(tiled.tokens),
+                                  np.asarray(shared.tokens))
+    np.testing.assert_array_equal(np.asarray(tiled.logprobs),
+                                  np.asarray(shared.logprobs))
+    np.testing.assert_array_equal(np.asarray(tiled.lengths),
+                                  np.asarray(shared.lengths))
+
+
+def test_lengths_count_sampled_pad_tokens(tiny_model):
+    """With EOS unreachable every row emits max_new real tokens; rows
+    that sample the pad-valued token mid-stream must not be
+    undercounted."""
+    cfg, prm = tiny_model
+    ids = _prompts()
+    out = generate(cfg, prm, jnp.asarray(ids), max_new_tokens=6,
+                   temperature=0.9, key=jax.random.PRNGKey(7),
+                   eos_id=-999, pad_id=tok.PAD)
+    toks = np.asarray(out.tokens)
+    assert (np.asarray(out.lengths) == 6).all()
+    # the regression scenario actually occurs: some row sampled the
+    # pad id before the end (the old formula would have undercounted)
+    assert (toks == tok.PAD).any()
+
+
+def test_lengths_include_eos_and_stop_counting_after(tiny_model):
+    """Pick a row's first emitted token as the EOS id and rerun: that
+    row must report length 1 (EOS inclusive), and pre-EOS emissions
+    never count as padding."""
+    cfg, prm = tiny_model
+    ids = _prompts()
+    key = jax.random.PRNGKey(3)
+    base = generate(cfg, prm, jnp.asarray(ids), max_new_tokens=6,
+                    temperature=0.0, key=key, eos_id=-999,
+                    pad_id=tok.PAD)
+    first = int(np.asarray(base.tokens)[0, 0])
+    out = generate(cfg, prm, jnp.asarray(ids), max_new_tokens=6,
+                   temperature=0.0, key=key, eos_id=first,
+                   pad_id=tok.PAD)
+    toks = np.asarray(out.tokens)
+    lengths = np.asarray(out.lengths)
+    assert lengths[0] == 1
+    for r in range(toks.shape[0]):
+        hits = np.nonzero(toks[r] == first)[0]
+        want = int(hits[0]) + 1 if hits.size else 6
+        assert lengths[r] == want
+
+
+def test_batch_invariant_gate():
+    dense = get_config("smollm-135m", reduced=True)
+    assert batch_invariant(dense)
+    moe = get_config("mixtral-8x22b", reduced=True)
+    assert moe.moe is not None and not batch_invariant(moe)

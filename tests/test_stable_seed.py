@@ -1,0 +1,43 @@
+"""Process-stable PRNG seeding (deterministic-execution invariant).
+
+``JaxModelBackend`` derives its generation key from the task id. That
+derivation must not depend on PYTHONHASHSEED — builtin str hashing is
+salted per process, so two identical runs in different processes would
+otherwise draw different keys.
+"""
+import hashlib
+import os
+import subprocess
+import sys
+
+from repro.teamllm.fingerprint import stable_fingerprint
+
+
+def _run(expr: str, hashseed: str) -> str:
+    env = dict(os.environ, PYTHONHASHSEED=hashseed,
+               PYTHONPATH="src" + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    return subprocess.check_output(
+        [sys.executable, "-c", expr], env=env, text=True).strip()
+
+
+def test_stable_fingerprint_is_sha_derived():
+    h = hashlib.sha256(b"task-123").digest()
+    assert stable_fingerprint("task-123") == \
+        int.from_bytes(h[:8], "little") % (1 << 31)
+    assert 0 <= stable_fingerprint("x", bits=16) < (1 << 16)
+
+
+def test_stable_fingerprint_survives_hashseed():
+    expr = ("from repro.teamllm.fingerprint import stable_fingerprint;"
+            "print(stable_fingerprint('gsm8k-0042'))")
+    a = _run(expr, "0")
+    b = _run(expr, "12345")
+    assert a == b == str(stable_fingerprint("gsm8k-0042"))
+
+
+def test_builtin_hash_would_have_failed():
+    """Sanity: the quantity the old code used really does vary with
+    PYTHONHASHSEED — this test guards the fix's motivation."""
+    expr = "print(abs(hash('gsm8k-0042')) % (1 << 31))"
+    assert _run(expr, "0") != _run(expr, "12345")
