@@ -32,6 +32,12 @@ ARENA3 = ["claude-sonnet-4", "gpt-4o", "gemini-2.0-flash"]
 # paper's experience store: 837 entries, built from held-out history
 STORE_SIZE = 837
 
+# 24-task repeating block hitting the paper's published routing rates
+# exactly: 13 sigma=0 (54.2% single_agent), 4 sigma=0.5 (arena_lite),
+# 7 sigma=1 (full_arena) -> 45.8% escalated. Shared by the scheduler
+# and kv benchmarks so both measure the same regime.
+PAPER_RATE_BLOCK = [0] * 13 + [1] * 4 + [2] * 7
+
 
 @dataclass
 class ConfigRun:
@@ -132,3 +138,12 @@ def csv_line(name: str, us_per_call: float, derived) -> str:
 def write_json(path: Path, obj) -> None:
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(obj, indent=1, default=float))
+
+
+def persist_bench(name: str, payload: dict) -> None:
+    """Write a benchmark's dual artifacts in one place: the CI-uploaded
+    ``BENCH_<name>.json`` at the repo root and the experiment-tracking
+    ``experiments/bench/<name>.json`` — one helper so the two copies
+    cannot drift."""
+    write_json(Path(f"BENCH_{name}.json"), payload)
+    write_json(Path("experiments/bench") / f"{name}.json", payload)

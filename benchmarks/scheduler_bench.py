@@ -30,11 +30,10 @@ import argparse
 import sys
 import time
 from dataclasses import dataclass
-from pathlib import Path
 
 import numpy as np
 
-from benchmarks.common import csv_line, write_json
+from benchmarks.common import PAPER_RATE_BLOCK, csv_line, persist_bench
 from repro.configs.acar import ACARConfig
 from repro.core.backends import GenResult, paper_backends
 from repro.core.orchestrator import ACAROrchestrator
@@ -42,14 +41,7 @@ from repro.data.tasks import Task, paper_suite
 from repro.serving.queue import MicroBatchPolicy
 from repro.serving.scheduler import ContinuousBatchingScheduler
 
-OUT = Path("experiments/bench/scheduler.json")
-BENCH_OUT = Path("BENCH_scheduler.json")
 PROBE = "gemini-2.0-flash"
-
-# 24-task repeating block hitting the paper's routing rates exactly:
-# 13 sigma=0 (54.2% single_agent), 4 sigma=0.5, 7 sigma=1 -> 45.8%
-# escalated
-PAPER_RATE_BLOCK = [0] * 13 + [1] * 4 + [2] * 7
 
 
 @dataclass
@@ -165,10 +157,14 @@ def run(n_tasks: int = 200, batch_size: int = 8, seed: int = 0,
         "probe_prefill_tokens": st.probe_prefill_tokens,
         "probe_prefill_tokens_saved": st.probe_prefill_tokens_saved,
         "probe_prefill_reduction": st.probe_prefill_reduction,
+        # paged-KV page-budget planning (virtual; the measured pool
+        # numbers live in BENCH_kv.json from benchmarks/kv_bench.py)
+        "kv_pages_allocated": st.kv_pages_allocated,
+        "kv_pages_highwater": st.kv_pages_highwater,
+        "kv_prefill_tokens_reused": st.kv_prefill_tokens_reused,
     }
     out.update(paper_rate_run(max(n_tasks, 192), batch_size, seed))
-    write_json(OUT, out)
-    write_json(BENCH_OUT, out)
+    persist_bench("scheduler", out)
     if verbose:
         print(f"tasks={n_tasks} batch={batch_size} "
               f"identical_traces={identical}")

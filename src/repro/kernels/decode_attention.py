@@ -77,8 +77,20 @@ def decode_attention(q: jax.Array, k_cache: jax.Array,
     s, kv = k_cache.shape[1], k_cache.shape[2]
     dv = v_cache.shape[-1]
     g = h // kv
-    if s % block_s != 0:
+    if s < block_s:
         block_s = s
+    elif s % block_s != 0:
+        # pad the cache to the next block multiple instead of
+        # collapsing to one giant (s, head_dim) VMEM tile — the padded
+        # positions sit past ``length`` and are masked like any other
+        # invalid slot. The model path allocates caches on the block
+        # grid (transformer._attn_cache_len), so this copy only runs
+        # for direct off-grid callers.
+        pad = block_s - s % block_s
+        widths = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+        s = s + pad
     n_s = s // block_s
     scale = 1.0 / (dk ** 0.5)
 

@@ -14,6 +14,7 @@ import jax
 from repro.kernels import decode_attention as _da
 from repro.kernels import decode_attention_quant as _daq
 from repro.kernels import fused_swiglu as _fs
+from repro.kernels import paged_decode_attention as _pda
 from repro.kernels import rglru_scan as _rg
 from repro.kernels import ref
 from repro.kernels import selective_scan as _ss
@@ -31,6 +32,16 @@ def decode_attention(q, k_cache, v_cache, length, *,
     return _da.decode_attention(q, k_cache, v_cache, length,
                                 block_s=block_s,
                                 interpret=bool(interpret))
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, lengths,
+                           *, interpret: Optional[bool] = None):
+    if interpret is None and not _on_tpu():
+        return ref.paged_decode_attention_ref(q, k_pages, v_pages,
+                                              block_table, lengths)
+    return _pda.paged_decode_attention(q, k_pages, v_pages,
+                                       block_table, lengths,
+                                       interpret=bool(interpret))
 
 
 def decode_attention_quant(q, k_codes, k_scale, v_codes, v_scale,

@@ -36,6 +36,37 @@ def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
     return out.reshape(b, h, v_cache.shape[-1]).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array,
+                               block_table: jax.Array,
+                               lengths: jax.Array) -> jax.Array:
+    """Single-token GQA decode attention over a paged KV cache.
+
+    q: (B, H, Dk); k_pages/v_pages: (P, page_size, KV, Dk/Dv);
+    block_table: (B, NB) int32 page ids per row; lengths: (B,) int32
+    valid positions per row. Gathers each row's pages into a
+    contiguous view and attends over the valid prefix; math in f32.
+    Returns (B, H, Dv).
+    """
+    b, h, dk = q.shape
+    page_size, kv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_table.shape[1]
+    g = h // kv
+    k_cache = k_pages[block_table].reshape(b, nb * page_size, kv, dk)
+    v_cache = v_pages[block_table].reshape(b, nb * page_size, kv,
+                                           v_pages.shape[-1])
+    scale = 1.0 / jnp.sqrt(jnp.float32(dk))
+    qr = q.reshape(b, kv, g, dk).astype(jnp.float32) * scale
+    scores = jnp.einsum("bkgd,bskd->bkgs", qr,
+                        k_cache.astype(jnp.float32))
+    valid = jnp.arange(nb * page_size)[None] < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, h, v_cache.shape[-1]).astype(q.dtype)
+
+
 def selective_scan_ref(x: jax.Array, dt: jax.Array, a_log: jax.Array,
                        b_in: jax.Array, c_in: jax.Array,
                        h0: Optional[jax.Array] = None

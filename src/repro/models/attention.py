@@ -312,6 +312,65 @@ def gqa_decode(cfg: ModelConfig, p: dict, x_t: jax.Array, cache: dict,
     return y, {"k": k_cache, "v": v_cache}
 
 
+def gqa_decode_paged(cfg: ModelConfig, p: dict, x_t: jax.Array,
+                     k_pages: jax.Array, v_pages: jax.Array,
+                     block_table: jax.Array, pos: jax.Array, *,
+                     cache_len: int
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token GQA decode against a paged KV cache.
+
+    x_t: (B, d); k_pages/v_pages: (P, page_size, KV, Dh) — one layer's
+    slice of the page pool; block_table: (B, NB) int32 page ids;
+    pos: scalar int32; cache_len: static dense-equivalent cache length
+    (prompt + max_new).
+
+    Bit-equivalence contract: the gathered page view sliced to
+    ``cache_len`` feeds the *same* ``decode_attention`` with the same
+    shapes and values as the dense path's contiguous cache, so the
+    output is bit-identical. Stale bytes in recycled pages sit at
+    positions > pos and are masked to the same -1e30 the dense path's
+    zero-initialised slots are, before any softmax math runs.
+    """
+    b, _ = x_t.shape
+    hd = cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+    q = jnp.einsum("bd,dh->bh", x_t, p["wq"]).reshape(
+        b, cfg.num_heads, hd)
+    k = jnp.einsum("bd,dh->bh", x_t, p["wk"]).reshape(b, kv, hd)
+    v = jnp.einsum("bd,dh->bh", x_t, p["wv"]).reshape(b, kv, hd)
+    if cfg.use_rope:
+        pos_b = jnp.broadcast_to(pos, (1, 1))
+        q = apply_rope(q[:, None], pos_b, cfg.rope_theta)[:, 0]
+        k = apply_rope(k[:, None], pos_b, cfg.rope_theta)[:, 0]
+
+    ps = k_pages.shape[1]
+    page_ids = jnp.take(block_table, pos // ps, axis=1)      # (B,)
+    slot = pos % ps
+    k_pages = k_pages.at[page_ids, slot].set(
+        k.astype(k_pages.dtype))
+    v_pages = v_pages.at[page_ids, slot].set(
+        v.astype(v_pages.dtype))
+
+    if cfg.use_pallas:
+        # TPU deployment: block-table flash-decode kernel reads the
+        # pages in place (no gathered copy). Off-TPU the op dispatches
+        # to the gather-based oracle.
+        from repro.kernels import ops
+        lengths = jnp.broadcast_to(pos + 1, (b,)).astype(jnp.int32)
+        out = ops.paged_decode_attention(q, k_pages, v_pages,
+                                         block_table, lengths)
+    else:
+        k_cache = k_pages[block_table].reshape(
+            b, -1, kv, hd)[:, :cache_len]
+        v_cache = v_pages[block_table].reshape(
+            b, -1, kv, hd)[:, :cache_len]
+        out = decode_attention(q, k_cache, v_cache,
+                               jnp.arange(cache_len), pos)
+    out = out.reshape(b, cfg.num_heads * hd)
+    y = jnp.einsum("bh,hd->bd", out, p["wo"])
+    return y, k_pages, v_pages
+
+
 # ======================================================================
 # MLA (DeepSeek-V2 multi-head latent attention)
 # ======================================================================

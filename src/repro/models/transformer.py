@@ -66,6 +66,16 @@ def mlp_apply_token(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
 def _attn_cache_len(cfg: ModelConfig, seq_len: int) -> int:
     if cfg.window is not None:
         return min(seq_len, cfg.window)
+    if cfg.use_pallas and seq_len > 0:
+        # the flash-decode kernel tiles the cache in BLOCK_S chunks;
+        # allocating on the block grid here means its off-grid fallback
+        # (pad-and-copy per call) never triggers on the deployment
+        # path — positions past the true length are masked like any
+        # other invalid slot. Caches shorter than one block stay exact
+        # (the kernel runs them as a single s-sized block).
+        from repro.kernels.decode_attention import DEFAULT_BLOCK_S
+        if seq_len > DEFAULT_BLOCK_S:
+            return -(-seq_len // DEFAULT_BLOCK_S) * DEFAULT_BLOCK_S
     return seq_len
 
 
@@ -495,6 +505,108 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
                             cfg.num_layers - n_unrolled)
     cache["layers"] = entries
     return _logits(cfg, params, x[:, -1]), cache
+
+
+# ----------------------------------------------------------------------
+# paged KV-cache path (serving/kv_pool.py page pool + block tables)
+# ----------------------------------------------------------------------
+def paged_supported(cfg: ModelConfig) -> bool:
+    """True when the config can run the paged KV path bit-identically
+    to the dense path: a uniform dense-GQA stack with a linear cache.
+    Sliding-window layers keep O(window) ring buffers (already
+    sub-linear — paging buys nothing), quantised caches carry scale
+    planes the page layout doesn't model, and MoE prefill is not
+    batch-composition invariant, which the bucketed prefill relies on.
+    """
+    return (cfg.family == "dense" and cfg.attn_kind == "gqa"
+            and cfg.window is None and not cfg.kv_quant
+            and cfg.moe is None and cfg.frontend is None)
+
+
+def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                  k_pages: jax.Array, v_pages: jax.Array,
+                  prefill_table: jax.Array, moe_shards: int = 1
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prompt prefill that scatters each layer's K/V into pool pages.
+
+    tokens: (B, S); k_pages/v_pages: (L, P, page_size, KV, Dh);
+    prefill_table: (B, NBp) int32 page ids covering ceil(S/page_size)
+    pages per row (rows must not alias writable pages). Returns
+    (last-position logits, updated k_pages, updated v_pages). The
+    hidden-state math is the dense ``prefill`` bit-for-bit — only the
+    cache packing differs.
+    """
+    assert paged_supported(cfg), cfg.name
+    b, s = tokens.shape
+    ps = k_pages.shape[2]
+    nbp = prefill_table.shape[1]
+    positions = jnp.arange(s)
+    x = _embed_inputs(cfg, params, tokens, None)
+
+    def body(x, lp):
+        h = norm_apply(cfg, lp["attn_norm"], x)
+        q, k, v = attn.gqa_project_qkv(cfg, lp["attn"], h)
+        if cfg.use_rope:
+            q = attn.apply_rope(q, positions[None], cfg.rope_theta)
+            k = attn.apply_rope(k, positions[None], cfg.rope_theta)
+        o = attn.flash_attention(q, k, v, positions, positions,
+                                 causal=True, window=cfg.window)
+        o = o.reshape(b, s, cfg.num_heads * cfg.resolved_head_dim)
+        x = x + jnp.einsum("bsh,hd->bsd", o, lp["attn"]["wo"])
+        h = norm_apply(cfg, lp["mlp_norm"], x)
+        y, _ = mlp_apply(cfg, lp["mlp"], h, moe_shards)
+        return x + y, (k, v)
+
+    x, (ks, vs) = stack_scan(cfg, body, x, params["layers"],
+                             cfg.num_layers)
+    # pack (L, B, S, KV, Dh) into pages: pad S to the page boundary and
+    # scatter page-shaped chunks at the block-table ids (pad chunks land
+    # in the partial tail page's dead slots, matching the dense cache's
+    # zero padding)
+    s_pad = nbp * ps
+    if s_pad != s:
+        pad = [(0, 0)] * ks.ndim
+        pad[2] = (0, s_pad - s)
+        ks = jnp.pad(ks, pad)
+        vs = jnp.pad(vs, pad)
+    kv, hd = ks.shape[-2], ks.shape[-1]
+    ks = ks.reshape(cfg.num_layers, b, nbp, ps, kv, hd).astype(
+        k_pages.dtype)
+    vs = vs.reshape(cfg.num_layers, b, nbp, ps, kv, hd).astype(
+        v_pages.dtype)
+    k_pages = k_pages.at[:, prefill_table].set(ks)
+    v_pages = v_pages.at[:, prefill_table].set(vs)
+    return _logits(cfg, params, x[:, -1]), k_pages, v_pages
+
+
+def decode_step_paged(cfg: ModelConfig, params: dict,
+                      k_pages: jax.Array, v_pages: jax.Array,
+                      block_table: jax.Array, token: jax.Array,
+                      pos: jax.Array, *, cache_len: int
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step over the paged cache. token: (B,) int32;
+    pos: scalar int32; cache_len: static dense-equivalent cache length.
+    Writes each layer's K/V at ``pos`` into the row's block-table page
+    and returns (logits, updated k_pages, updated v_pages)."""
+    assert paged_supported(cfg), cfg.name
+    x = jnp.take(params["embedding"], token, axis=0)
+    x = shard(x, "batch", "embed")
+
+    def body(x, xs):
+        lp, kp, vp = xs
+        h = norm_apply(cfg, lp["attn_norm"], x)
+        a, kp, vp = attn.gqa_decode_paged(
+            cfg, lp["attn"], h, kp, vp, block_table, pos,
+            cache_len=cache_len)
+        x = x + a
+        h = norm_apply(cfg, lp["mlp_norm"], x)
+        x = x + mlp_apply_token(cfg, lp["mlp"], h)
+        return x, (kp, vp)
+
+    x, (k_pages, v_pages) = stack_scan(
+        cfg, body, x, (params["layers"], k_pages, v_pages),
+        cfg.num_layers)
+    return _logits(cfg, params, x), k_pages, v_pages
 
 
 # ----------------------------------------------------------------------

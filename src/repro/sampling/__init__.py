@@ -1,6 +1,8 @@
 from repro.sampling.sampler import (
-    GenerateOutput, batch_invariant, decode_text, generate,
-    generate_samples, sample_token, tile_cache)
+    GenerateOutput, batch_invariant, decode_paged, decode_text,
+    fork_pages, generate, generate_samples, prefill_paged,
+    sample_token, tile_cache)
 
-__all__ = ["GenerateOutput", "batch_invariant", "decode_text",
-           "generate", "generate_samples", "sample_token", "tile_cache"]
+__all__ = ["GenerateOutput", "batch_invariant", "decode_paged",
+           "decode_text", "fork_pages", "generate", "generate_samples",
+           "prefill_paged", "sample_token", "tile_cache"]

@@ -56,8 +56,18 @@ def batch_invariant(cfg: ModelConfig) -> bool:
 def _decode_scan(cfg: ModelConfig, params: dict, cache, logits0,
                  start_pos: int, batch: int, max_new_tokens: int,
                  temperature: float, key: jax.Array, eos_id: int,
-                 pad_id: int) -> GenerateOutput:
-    """Shared fixed-length decode loop over an existing prefill cache."""
+                 pad_id: int, decode_fn=None
+                 ) -> Tuple[GenerateOutput, object]:
+    """Shared fixed-length decode loop over an existing prefill cache.
+
+    ``decode_fn(cache, token, pos) -> (logits, cache)`` overrides the
+    per-step transition — the paged path threads (k_pages, v_pages)
+    through it; the default is the dense ``T.decode_step``. Returns the
+    final cache alongside the output (dense callers drop it; the paged
+    path must keep its updated pages)."""
+    if decode_fn is None:
+        def decode_fn(cache, token, pos):
+            return T.decode_step(cfg, params, cache, token, pos)
 
     def body(carry, step_key):
         cache, logits, pos, done = carry
@@ -66,21 +76,23 @@ def _decode_scan(cfg: ModelConfig, params: dict, cache, logits0,
         tok_logp = jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
         emit = jnp.where(done, pad_id, tok)
         new_done = done | (tok == eos_id)
-        next_logits, cache = T.decode_step(cfg, params, cache, emit, pos)
+        next_logits, cache = decode_fn(cache, emit, pos)
         return ((cache, next_logits, pos + 1, new_done),
                 (emit, jnp.where(done, 0.0, tok_logp), ~done))
 
     keys = jax.random.split(key, max_new_tokens)
     init = (cache, logits0, jnp.int32(start_pos),
             jnp.zeros((batch,), bool))
-    _, (toks, logps, live) = jax.lax.scan(body, init, keys)
+    (cache, _, _, _), (toks, logps, live) = jax.lax.scan(body, init,
+                                                         keys)
     toks = toks.T                      # (B, max_new)
     logps = logps.T
     # a row emits a real token (possibly EOS, possibly one that merely
     # *equals* pad_id) at every step it was not yet done — counting
     # pad_id occurrences would undercount legitimately sampled pads
     lengths = live.T.sum(axis=1).astype(jnp.int32)
-    return GenerateOutput(tokens=toks, logprobs=logps, lengths=lengths)
+    return GenerateOutput(tokens=toks, logprobs=logps,
+                          lengths=lengths), cache
 
 
 @functools.partial(
@@ -100,9 +112,10 @@ def generate(cfg: ModelConfig, params: dict, prompt_tokens: jax.Array,
     total = s + max_new_tokens
     logits0, cache = T.prefill(cfg, params, prompt_tokens,
                                frontend_embeds, cache_len=total)
-    return _decode_scan(cfg, params, cache, logits0, s, b,
-                        max_new_tokens, temperature, key, eos_id,
-                        pad_id)
+    out, _ = _decode_scan(cfg, params, cache, logits0, s, b,
+                          max_new_tokens, temperature, key, eos_id,
+                          pad_id)
+    return out
 
 
 def tile_cache(cache, n: int, batch: Optional[int] = None):
@@ -158,9 +171,78 @@ def generate_samples(cfg: ModelConfig, params: dict,
                                frontend_embeds, cache_len=total)
     cache = tile_cache(cache, n, batch=b)
     logits0 = jnp.repeat(logits0, n, axis=0)
-    return _decode_scan(cfg, params, cache, logits0, s, b * n,
-                        max_new_tokens, temperature, key, eos_id,
-                        pad_id)
+    out, _ = _decode_scan(cfg, params, cache, logits0, s, b * n,
+                          max_new_tokens, temperature, key, eos_id,
+                          pad_id)
+    return out
+
+
+# ----------------------------------------------------------------------
+# paged KV-cache path (serving/kv_pool.py owns allocation; these are
+# the jitted device programs it drives)
+# ----------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def prefill_paged(cfg: ModelConfig, params: dict,
+                  prompt_tokens: jax.Array, k_pages: jax.Array,
+                  v_pages: jax.Array, prefill_table: jax.Array):
+    """Prompt prefill scattering K/V into pool pages.
+
+    prompt_tokens: (B, S); k_pages/v_pages: (L, P, page_size, KV, Dh);
+    prefill_table: (B, NBp) int32. Returns (logits0 (B, V), k_pages,
+    v_pages). Logits are bit-identical to the dense ``T.prefill`` —
+    only the cache packing differs."""
+    return T.prefill_paged(cfg, params, prompt_tokens, k_pages,
+                           v_pages, prefill_table)
+
+
+@jax.jit
+def fork_pages(k_pages: jax.Array, v_pages: jax.Array,
+               src: jax.Array, dst: jax.Array):
+    """Copy-on-write materialisation: page ``dst[i]`` becomes a private
+    copy of ``src[i]`` across every layer. ``src`` may repeat (one
+    canonical prompt-tail page forked to N samples); ``dst`` must not.
+    """
+    k_pages = k_pages.at[:, dst].set(k_pages[:, src])
+    v_pages = v_pages.at[:, dst].set(v_pages[:, src])
+    return k_pages, v_pages
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "start_pos", "max_new_tokens",
+                     "temperature", "eos_id", "pad_id"))
+def decode_paged(cfg: ModelConfig, params: dict, logits0: jax.Array,
+                 k_pages: jax.Array, v_pages: jax.Array,
+                 block_table: jax.Array, key: jax.Array, *,
+                 start_pos: int, max_new_tokens: int,
+                 temperature: float = 0.0, eos_id: int = -1,
+                 pad_id: int = 0):
+    """Fixed-length decode over a paged cache, from prefill logits.
+
+    logits0: (B, V) last-prompt-position logits (freshly computed or
+    reused from a retained probe prefill — bit-identical either way);
+    block_table: (B, NB) page ids per row. The N-sample probe wave
+    passes block tables whose prompt-prefix entries point at *shared*
+    read-only pages — that sharing, not a tiled cache copy, is what
+    replaced ``tile_cache`` for the probe. Returns (GenerateOutput,
+    k_pages, v_pages); emitted tokens are bit-identical to the dense
+    ``generate``/``generate_samples`` over the same prompts and key.
+    """
+    b = logits0.shape[0]
+    cache_len = start_pos + max_new_tokens
+
+    def decode_fn(pages, token, pos):
+        kp, vp = pages
+        logits, kp, vp = T.decode_step_paged(
+            cfg, params, kp, vp, block_table, token, pos,
+            cache_len=cache_len)
+        return logits, (kp, vp)
+
+    out, (k_pages, v_pages) = _decode_scan(
+        cfg, params, (k_pages, v_pages), logits0, start_pos, b,
+        max_new_tokens, temperature, key, eos_id, pad_id,
+        decode_fn=decode_fn)
+    return out, k_pages, v_pages
 
 
 def decode_text(tokens, detok) -> list:

@@ -5,6 +5,10 @@ from repro.serving.engine import (
     BatchedACAREngine, BatchResult, QueuedServeResult, ZooModel,
     intern_answers, judge_batch)
 from repro.serving.jax_backend import JaxModelBackend
+from repro.serving.kv_pool import (
+    KVStats, PageAccountingError, PagePool, PagePoolError,
+    PagedKVServer, PoolExhausted, ProbeHandle, dense_tile_slots,
+    pages_for)
 from repro.serving.metrics import PromCounters
 from repro.serving.queue import (
     AdmissionQueue, MicroBatch, MicroBatchPolicy, Request)
@@ -14,8 +18,10 @@ from repro.serving.scheduler import (
 __all__ = [
     "AdmissionQueue", "BatchedACAREngine", "BatchResult",
     "CompactionPlan", "CompactionStats", "ContinuousBatchingScheduler",
-    "JaxModelBackend", "MemberPlan", "MicroBatch", "MicroBatchPolicy",
-    "ProbeCache", "PromCounters", "QueuedServeResult", "Request",
-    "SchedulerStats", "ZooModel", "bucket_size", "intern_answers",
-    "judge_batch", "plan_compaction",
+    "JaxModelBackend", "KVStats", "MemberPlan", "MicroBatch",
+    "MicroBatchPolicy", "PageAccountingError", "PagePool",
+    "PagePoolError", "PagedKVServer", "PoolExhausted", "ProbeCache",
+    "ProbeHandle", "PromCounters", "QueuedServeResult", "Request",
+    "SchedulerStats", "ZooModel", "bucket_size", "dense_tile_slots",
+    "intern_answers", "judge_batch", "pages_for", "plan_compaction",
 ]

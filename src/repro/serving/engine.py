@@ -48,9 +48,11 @@ from repro.core.sigma import (
     MODE_NAMES, majority_vote_batch, route_batch, sigma_batch)
 from repro.data import tokenizer as tok
 from repro.data.tasks import Task
+from repro.models.transformer import paged_supported
 from repro.sampling import batch_invariant, generate, generate_samples
 from repro.serving.compaction import (
     CompactionStats, plan_compaction)
+from repro.serving.kv_pool import KVStats, PagedKVServer, ProbeHandle
 from repro.serving.metrics import PromCounters
 from repro.serving.queue import AdmissionQueue, MicroBatchPolicy
 
@@ -136,6 +138,9 @@ class BatchedACAREngine:
                  ensemble: Sequence[ZooModel], prompt_len: int = 16,
                  max_new_tokens: int = 8, compact: bool = True,
                  shared_prefix: bool = True,
+                 paged: Optional[bool] = None,
+                 kv_page_size: int = 8,
+                 kv_prefix_cache: int = 32,
                  route_fn: Optional[Callable[[jax.Array],
                                              jax.Array]] = None):
         self.acfg = acfg
@@ -145,7 +150,42 @@ class BatchedACAREngine:
         self.max_new_tokens = max_new_tokens
         self.compact = compact
         self.shared_prefix = shared_prefix
+        # paged KV: None = auto (on for every model whose config
+        # supports the paged path bit-identically); False disables for
+        # A/B baselines
+        self.paged = paged
+        self.kv_page_size = kv_page_size
+        self.kv_prefix_cache = kv_prefix_cache
+        self._kv_servers: Dict[int, PagedKVServer] = {}
+        self._kv_emitted: Dict[Tuple[str, str], int] = {}
         self.route_fn = route_fn or route_batch
+
+    # -- paged KV servers ----------------------------------------------
+    def _kv_server(self, zm: ZooModel) -> Optional[PagedKVServer]:
+        """One server per distinct params object: an ensemble member
+        that *is* the probe model shares the probe's server, which is
+        what makes probe->ensemble prefill-page reuse sound (KV is a
+        function of params, not just configs)."""
+        if self.paged is False or not paged_supported(zm.cfg):
+            return None
+        key = id(zm.params)
+        srv = self._kv_servers.get(key)
+        if srv is None:
+            srv = PagedKVServer(zm.cfg, page_size=self.kv_page_size,
+                                prefix_cache_entries=self.kv_prefix_cache)
+            srv.stats.model = zm.name
+            self._kv_servers[key] = srv
+        return srv
+
+    def kv_stats(self) -> Dict[str, KVStats]:
+        """Measured paged-KV accounting per model server."""
+        return {srv.stats.model: srv.stats
+                for srv in self._kv_servers.values()}
+
+    def _kv_reuse_member(self, zm: ZooModel,
+                         kv_srv: Optional[PagedKVServer]) -> bool:
+        return (kv_srv is not None and zm.cfg == self.probe.cfg
+                and self._kv_server(zm) is kv_srv)
 
     # ------------------------------------------------------------------
     def _decode_texts(self, out_tokens) -> List[str]:
@@ -178,6 +218,23 @@ class BatchedACAREngine:
                 key=key, eos_id=tok.EOS, pad_id=tok.PAD)
         return self._decode_texts(out.tokens)
 
+    def _member_decode(self, zm: ZooModel,
+                       srv_m: Optional[PagedKVServer],
+                       sub_ids: np.ndarray, mkey: jax.Array):
+        """One ensemble member decode over ``sub_ids`` rows: paged
+        when the member's config supports it, dense otherwise —
+        bit-identical either way."""
+        if srv_m is not None:
+            return srv_m.generate(
+                zm.params, sub_ids,
+                max_new_tokens=self.max_new_tokens,
+                temperature=self.acfg.ensemble_temperature,
+                key=mkey, eos_id=tok.EOS, pad_id=tok.PAD)
+        return generate(zm.cfg, zm.params, jnp.asarray(sub_ids),
+                        max_new_tokens=self.max_new_tokens,
+                        temperature=self.acfg.ensemble_temperature,
+                        key=mkey, eos_id=tok.EOS, pad_id=tok.PAD)
+
     def _member_compactable(self, zm: ZooModel) -> bool:
         """Compaction must not perturb the decoded rows: greedy decode
         (temperature-0 sampling is batch-shape independent, categorical
@@ -186,6 +243,32 @@ class BatchedACAREngine:
                 and self.acfg.ensemble_temperature <= 0.0
                 and batch_invariant(zm.cfg))
 
+    def _probe_decode_paged(self, ids: np.ndarray, key: jax.Array,
+                            stats: CompactionStats,
+                            kv_srv: PagedKVServer
+                            ) -> Tuple[List[str], ProbeHandle]:
+        """Paged N-sample probe: one prefill per uncached prompt, the
+        samples share read-only prefix pages (kv_pool COW fork), and
+        the prompt pages stay retained for ensemble seeding. Prefill
+        accounting records what actually ran (prefix-cache hits and
+        bucket padding included), so the dense-equivalent baseline
+        stays b*n*s and the reduction reflects real reuse."""
+        b, s = ids.shape
+        n = self.acfg.n_probe_samples
+        computed0 = kv_srv.stats.prefill_tokens_computed
+        out, handle = kv_srv.probe_wave(
+            self.probe.params, ids, n,
+            max_new_tokens=self.max_new_tokens,
+            temperature=self.acfg.probe_temperature, key=key,
+            eos_id=tok.EOS, pad_id=tok.PAD)
+        computed = kv_srv.stats.prefill_tokens_computed - computed0
+        saved = b * n * s - computed
+        stats.probe_prefill_tokens += computed
+        stats.probe_prefill_tokens_saved += saved
+        stats.probe_prefill_flops_saved += \
+            2.0 * self.probe.cfg.active_param_count() * saved
+        return self._decode_texts(out.tokens), handle
+
     def run_batch(self, tasks: Sequence[Task]) -> BatchResult:
         t0 = time.perf_counter()
         b = len(tasks)
@@ -193,88 +276,115 @@ class BatchedACAREngine:
         ids = tok.encode_aligned([t.text for t in tasks])
         key = jax.random.PRNGKey(self.acfg.seed)
         stats = CompactionStats(batch=b)
-        texts = self._probe_decode(ids, key, stats)
-        answers = [extract(texts[i * n + j], tasks[i].kind)
-                   for i in range(b) for j in range(n)]
-        # one interning table for the whole batch: probe ids first,
-        # ensemble answers join the same namespace below
-        id_table: Dict[str, int] = {}
-        answer_ids = intern_answers(answers, id_table).reshape(b, n)
+        kv_srv = self._kv_server(self.probe) if self.shared_prefix \
+            else None
+        handle: Optional[ProbeHandle] = None
+        if kv_srv is not None:
+            texts, handle = self._probe_decode_paged(ids, key, stats,
+                                                     kv_srv)
+        else:
+            texts = self._probe_decode(ids, key, stats)
+        try:
+            answers = [extract(texts[i * n + j], tasks[i].kind)
+                       for i in range(b) for j in range(n)]
+            # one interning table for the whole batch: probe ids first,
+            # ensemble answers join the same namespace below
+            id_table: Dict[str, int] = {}
+            answer_ids = intern_answers(answers, id_table).reshape(b, n)
 
-        sig = sigma_batch(jnp.asarray(answer_ids))
-        modes = self.route_fn(sig)
-        probe_major = majority_vote_batch(jnp.asarray(answer_ids))
+            sig = sigma_batch(jnp.asarray(answer_ids))
+            modes = self.route_fn(sig)
+            probe_major = majority_vote_batch(jnp.asarray(answer_ids))
 
-        # ensemble decodes over the escalated subset: gather sigma>0
-        # rows (modes>=2 for members past the arena-lite pair) into
-        # power-of-two buckets, decode, scatter answers back; masked
-        # full-batch decode when compaction preconditions fail
-        modes_np = np.asarray(modes)
-        plan = plan_compaction(modes_np, len(self.ensemble),
-                               self.acfg.arena_lite_size)
-        stats.escalated_rows = plan.escalated_rows
-        stats.full_arena_rows = plan.full_arena_rows
-        member_cols = []
-        member_answers: List[List[Optional[str]]] = \
-            [[None] * len(self.ensemble) for _ in range(b)]
-        for mi, zm in enumerate(self.ensemble):
-            mp = plan.members[mi]
-            col = np.full(b, -1, np.int32)
-            if mp.n_rows == 0:
+            # ensemble decodes over the escalated subset: gather sigma>0
+            # rows (modes>=2 for members past the arena-lite pair) into
+            # power-of-two buckets, decode, scatter answers back; masked
+            # full-batch decode when compaction preconditions fail
+            modes_np = np.asarray(modes)
+            plan = plan_compaction(modes_np, len(self.ensemble),
+                                   self.acfg.arena_lite_size)
+            stats.escalated_rows = plan.escalated_rows
+            stats.full_arena_rows = plan.full_arena_rows
+            if handle is not None:
+                # a task's probe pages are freed the moment its route
+                # resolves; only rows some probe-model ensemble member will
+                # seed its prefill from stay retained
+                keep: set = set()
+                for mi, zm in enumerate(self.ensemble):
+                    mp = plan.members[mi]
+                    if (self._kv_reuse_member(zm, kv_srv)
+                            and self._member_compactable(zm)
+                            and mp.bucket < b):
+                        keep.update(int(r) for r in mp.rows)
+                handle.resolve(sorted(keep))
+            member_cols = []
+            member_answers: List[List[Optional[str]]] = \
+                [[None] * len(self.ensemble) for _ in range(b)]
+            for mi, zm in enumerate(self.ensemble):
+                mp = plan.members[mi]
+                col = np.full(b, -1, np.int32)
+                if mp.n_rows == 0:
+                    member_cols.append(col)
+                    continue
+                mkey = jax.random.fold_in(key, 1000 + mi)
+                srv_m = self._kv_server(zm)
+                if self._member_compactable(zm) and mp.bucket < b:
+                    rows = mp.padded_rows()
+                    if (handle is not None
+                            and self._kv_reuse_member(zm, kv_srv)):
+                        # seed from the probe's retained prompt pages:
+                        # prefill skipped, logits0 reused, tail COW-forked
+                        mout = kv_srv.reuse_decode(
+                            self.probe.params, handle, rows.tolist(),
+                            max_new_tokens=self.max_new_tokens,
+                            temperature=self.acfg.ensemble_temperature,
+                            key=mkey, eos_id=tok.EOS, pad_id=tok.PAD)
+                    else:
+                        mout = self._member_decode(zm, srv_m,
+                                                   ids[rows], mkey)
+                    sub_texts = self._decode_texts(mout.tokens)
+                    for j, r in enumerate(mp.rows):
+                        a = extract(sub_texts[j], tasks[r].kind)
+                        col[r] = id_table.setdefault(a, len(id_table))
+                        member_answers[r][mi] = a
+                    decoded_rows = mp.bucket
+                else:
+                    mout = self._member_decode(zm, srv_m, ids, mkey)
+                    mtexts = self._decode_texts(mout.tokens)
+                    for r in mp.rows:
+                        a = extract(mtexts[r], tasks[r].kind)
+                        col[r] = id_table.setdefault(a, len(id_table))
+                        member_answers[r][mi] = a
+                    decoded_rows = b
                 member_cols.append(col)
-                continue
-            mkey = jax.random.fold_in(key, 1000 + mi)
-            if self._member_compactable(zm) and mp.bucket < b:
-                rows = mp.padded_rows()
-                mout = generate(zm.cfg, zm.params,
-                                jnp.asarray(ids[rows]),
-                                max_new_tokens=self.max_new_tokens,
-                                temperature=(
-                                    self.acfg.ensemble_temperature),
-                                key=mkey, eos_id=tok.EOS,
-                                pad_id=tok.PAD)
-                sub_texts = self._decode_texts(mout.tokens)
-                for j, r in enumerate(mp.rows):
-                    a = extract(sub_texts[j], tasks[r].kind)
-                    col[r] = id_table.setdefault(a, len(id_table))
-                    member_answers[r][mi] = a
-                decoded_rows = mp.bucket
-            else:
-                mout = generate(zm.cfg, zm.params, jnp.asarray(ids),
-                                max_new_tokens=self.max_new_tokens,
-                                temperature=(
-                                    self.acfg.ensemble_temperature),
-                                key=mkey, eos_id=tok.EOS,
-                                pad_id=tok.PAD)
-                mtexts = self._decode_texts(mout.tokens)
-                for r in mp.rows:
-                    a = extract(mtexts[r], tasks[r].kind)
-                    col[r] = id_table.setdefault(a, len(id_table))
-                    member_answers[r][mi] = a
-                decoded_rows = b
-            member_cols.append(col)
-            stats.bucket_sizes.append(decoded_rows)
-            stats.bucket_rows.append(mp.n_rows)
-            stats.ensemble_decode_tokens += \
-                decoded_rows * self.max_new_tokens
-            stats.ensemble_decode_tokens_saved += \
-                (b - decoded_rows) * self.max_new_tokens
-        member_ids = jnp.asarray(np.stack(member_cols, axis=1))
+                stats.bucket_sizes.append(decoded_rows)
+                stats.bucket_rows.append(mp.n_rows)
+                stats.ensemble_decode_tokens += \
+                    decoded_rows * self.max_new_tokens
+                stats.ensemble_decode_tokens_saved += \
+                    (b - decoded_rows) * self.max_new_tokens
+            member_ids = jnp.asarray(np.stack(member_cols, axis=1))
 
-        final_ids = judge_batch(member_ids, probe_major, modes)
-        rev = {v: k for k, v in id_table.items()}
-        final_answers = [rev[int(i)] for i in np.asarray(final_ids)]
-        saved = int(np.sum(3 - np.where(
-            modes_np == 0, 0,
-            np.where(modes_np == 1, self.acfg.arena_lite_size,
-                     len(self.ensemble)))))
-        probe_texts = [texts[i * n:(i + 1) * n] for i in range(b)]
-        return BatchResult(
-            sigma=np.asarray(sig), modes=modes_np,
-            final_answers=final_answers, probe_texts=probe_texts,
-            ensemble_calls_saved=saved,
-            wall_ms=(time.perf_counter() - t0) * 1e3,
-            member_answers=member_answers, compaction=stats)
+            final_ids = judge_batch(member_ids, probe_major, modes)
+            rev = {v: k for k, v in id_table.items()}
+            final_answers = [rev[int(i)] for i in np.asarray(final_ids)]
+            saved = int(np.sum(3 - np.where(
+                modes_np == 0, 0,
+                np.where(modes_np == 1, self.acfg.arena_lite_size,
+                         len(self.ensemble)))))
+            probe_texts = [texts[i * n:(i + 1) * n] for i in range(b)]
+            return BatchResult(
+                sigma=np.asarray(sig), modes=modes_np,
+                final_answers=final_answers, probe_texts=probe_texts,
+                ensemble_calls_saved=saved,
+                wall_ms=(time.perf_counter() - t0) * 1e3,
+                member_answers=member_answers, compaction=stats)
+        finally:
+            # probe prompt pages must never outlive the batch,
+            # even when a member decode raises (close is
+            # idempotent over already-resolved rows)
+            if handle is not None:
+                handle.close()
 
     # ------------------------------------------------------------------
     # continuous-batching entry point: admission queue -> micro-batches
@@ -348,6 +458,7 @@ class BatchedACAREngine:
                         rows / bkt if bkt else 0.0, bucket=str(bkt),
                         help="escalated-row fill of the last decode "
                              "wave in each shape bucket")
+            self._emit_kv_metrics(metrics)
         return QueuedServeResult(
             sigma=np.concatenate([r.sigma for r in batch_results])
             if batch_results else np.zeros(0, np.float32),
@@ -363,7 +474,35 @@ class BatchedACAREngine:
             probe_texts=[p for r in batch_results
                          for p in r.probe_texts],
             member_answers=[m for r in batch_results
-                            for m in (r.member_answers or [])])
+                            for m in (r.member_answers or [])],
+            kv=self.kv_stats() or None)
+
+    def _emit_kv_metrics(self, metrics: PromCounters) -> None:
+        """Per-batch paged-KV exposition: pool gauges plus monotonic
+        prefill-reuse counters (deltas since the last emission, so
+        repeated run_queued calls on one engine stay cumulative)."""
+        for srv in self._kv_servers.values():
+            st = srv.stats
+            metrics.set_gauge(
+                "acar_kv_pages_in_use", st.pages_in_use,
+                model=st.model,
+                help="KV pool pages currently referenced")
+            metrics.set_gauge(
+                "acar_kv_pages_highwater", st.pages_highwater,
+                model=st.model,
+                help="KV pool pages-in-use peak since server creation")
+            for source, value in (
+                    ("probe", st.prefill_tokens_reused_probe),
+                    ("prefix_cache", st.prefill_tokens_reused_prefix)):
+                k = (st.model, source)
+                delta = value - self._kv_emitted.get(k, 0)
+                if delta:
+                    metrics.inc(
+                        "acar_kv_prefill_tokens_reused_total", delta,
+                        model=st.model, source=source,
+                        help="prefill tokens served from retained "
+                             "pages instead of recomputation")
+                    self._kv_emitted[k] = value
 
 
 @dataclass
@@ -379,3 +518,5 @@ class QueuedServeResult:
     compaction: Optional[CompactionStats] = None
     probe_texts: Optional[List[List[str]]] = None
     member_answers: Optional[List[List[Optional[str]]]] = None
+    # paged-KV accounting per model server (None when paged KV is off)
+    kv: Optional[Dict[str, KVStats]] = None

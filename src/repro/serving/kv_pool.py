@@ -1,0 +1,573 @@
+"""Paged KV-cache subsystem: ref-counted page pool, block tables, and
+prefix sharing between the probe and ensemble stages.
+
+Dense serving caches pay full-ensemble *memory* even when the router
+avoids full-ensemble *compute*: every wave allocates contiguous
+``prompt+new``-length caches padded to the batch max, and the probe's
+shared-prefix expansion physically copies each prefill N times
+(``tile_cache``). This module replaces that with page-granular
+allocation:
+
+* **PagePool** — a fixed pool of ``page_size``-token pages with
+  reference counts. Allocation, retain, and release are host-side and
+  deterministic; double frees and use-after-free raise typed errors
+  instead of corrupting block tables; exhaustion raises
+  ``PoolExhausted`` with the pool left intact.
+* **Block tables** — each sequence maps logical token positions to
+  pages via an int32 table row. The N probe samples of one prompt
+  *share* the read-only full prompt pages (one ref per owner) and only
+  hold private pages for the region decode writes — the partial
+  prompt-tail page is materialised per sample by a copy-on-write fork.
+* **PagedKVServer** — per-model serving state: the device page arrays
+  (``(L, P, page_size, KV, Dh)`` for K and V), the pool, a ref-counted
+  prompt-prefix cache (cross-request reuse of identical prompts), and
+  the wave orchestration the engine calls: ``probe_wave`` (N samples,
+  one prefill, shared prefix pages), ``reuse_decode`` (ensemble member
+  seeded from the probe's retained prompt pages — prefill skipped
+  entirely), and ``generate`` (paged single-sample waves for members
+  that cannot reuse).
+
+Bit-equivalence contract: the paged execution path produces tokens
+bit-identical to the dense path. The gathered page view sliced to the
+dense cache length feeds the *same* ``decode_attention`` math with the
+same shapes, stale bytes in recycled pages are masked before softmax
+(positions > pos go to the same -1e30 the dense path's zeros go to),
+and prefill/logit reuse only ever returns values the dense path would
+recompute bit-for-bit (same model, same prompt, batch-invariant
+configs — ``models.transformer.paged_supported`` gates the families
+where this holds). ``tests/harness/simulate.py --paged-kv`` checks the
+contract end to end on record hashes and artifact-chain heads.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.compaction import bucket_size
+
+
+# ----------------------------------------------------------------------
+# errors
+# ----------------------------------------------------------------------
+class PagePoolError(RuntimeError):
+    """Base class for page-pool accounting violations."""
+
+
+class PoolExhausted(PagePoolError):
+    """Allocation request exceeds the pool's free pages. The pool state
+    is unchanged: no partial allocation escapes."""
+
+
+class PageAccountingError(PagePoolError):
+    """Refcount violation: double free or retain of a free page."""
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` positions."""
+    return -(-int(n_tokens) // page_size) if n_tokens > 0 else 0
+
+
+# ----------------------------------------------------------------------
+# page pool
+# ----------------------------------------------------------------------
+class PagePool:
+    """Fixed pool of KV pages with reference counting.
+
+    Pure host-side bookkeeping (the device arrays live in
+    ``PagedKVServer``); every operation is deterministic — the free
+    list is LIFO, so identical call sequences produce identical page
+    ids, which the bit-equivalence harness relies on.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError("num_pages and page_size must be positive")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self._refs = np.zeros(self.num_pages, np.int32)
+        # LIFO free list, seeded so the first allocations are 0,1,2,...
+        self._free: List[int] = list(range(self.num_pages - 1, -1, -1))
+        self.highwater = 0
+        self.allocs_total = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def refcount(self, page: int) -> int:
+        return int(self._refs[page])
+
+    def alloc(self, n: int) -> np.ndarray:
+        """Allocate ``n`` pages (refcount 1 each). All-or-nothing:
+        raises ``PoolExhausted`` leaving the pool untouched."""
+        n = int(n)
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"requested {n} pages, {len(self._free)} free "
+                f"(pool {self.num_pages} x {self.page_size} tokens)")
+        ids = [self._free.pop() for _ in range(n)]
+        self._refs[ids] = 1
+        self.allocs_total += n
+        if self.pages_in_use > self.highwater:
+            self.highwater = self.pages_in_use
+        return np.asarray(ids, np.int32)
+
+    def retain(self, pages: Sequence[int]) -> None:
+        """Add one reference to each page (prefix sharing / COW fork)."""
+        for p in np.asarray(pages, np.int64).ravel():
+            if self._refs[p] <= 0:
+                raise PageAccountingError(
+                    f"retain of free page {int(p)}")
+            self._refs[p] += 1
+
+    def release(self, pages: Sequence[int]) -> None:
+        """Drop one reference from each page; pages hitting zero return
+        to the free list (LIFO)."""
+        for p in np.asarray(pages, np.int64).ravel():
+            if self._refs[p] <= 0:
+                raise PageAccountingError(
+                    f"double free of page {int(p)}")
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._free.append(int(p))
+
+
+# ----------------------------------------------------------------------
+# stats
+# ----------------------------------------------------------------------
+@dataclass
+class KVStats:
+    """Measured paged-KV accounting for one model's server."""
+    model: str = ""
+    page_size: int = 0
+    page_bytes: int = 0                 # bytes per page (all layers, K+V)
+    pool_pages: int = 0
+    pages_in_use: int = 0               # latest sample
+    pages_highwater: int = 0            # pool-lifetime peak
+    # peak pages *referenced by one probe wave* (shared prompt pages +
+    # canonical tails + sample-private pages) — the apples-to-apples
+    # counterpart of the dense tile_cache working set, excluding
+    # prefix-cache retention (a separate, evictable memory/compute
+    # trade reported through pages_in_use)
+    probe_pages_highwater: int = 0
+    prefill_tokens_computed: int = 0
+    prefill_tokens_reused_probe: int = 0    # probe -> ensemble seeding
+    prefill_tokens_reused_prefix: int = 0   # cross-request prompt reuse
+    cow_forks: int = 0                  # partial-tail pages materialised
+
+    @property
+    def prefill_tokens_reused(self) -> int:
+        return (self.prefill_tokens_reused_probe
+                + self.prefill_tokens_reused_prefix)
+
+    @property
+    def probe_highwater_bytes(self) -> int:
+        return self.probe_pages_highwater * self.page_bytes
+
+
+def dense_tile_slots(batch: int, n_samples: int, prompt_len: int,
+                     max_new_tokens: int) -> int:
+    """Token slots the dense ``tile_cache`` probe path materialises for
+    one wave: every sample row holds a full prompt+new cache."""
+    return batch * n_samples * (prompt_len + max_new_tokens)
+
+
+# ----------------------------------------------------------------------
+# prefix cache (cross-request reuse of identical prompts)
+# ----------------------------------------------------------------------
+@dataclass
+class _PrefixEntry:
+    shared: np.ndarray          # full prompt pages (read-only, cache ref)
+    tail: Optional[int]         # pristine partial prompt-tail page
+    logits0: np.ndarray         # (V,) last-position prefill logits
+
+
+# ----------------------------------------------------------------------
+# probe wave handle
+# ----------------------------------------------------------------------
+@dataclass
+class ProbeHandle:
+    """Per-wave retention of the probe's prompt pages, so ensemble
+    members sharing the probe's model can seed their prefill from them.
+    Rows are released the moment their route resolves (``resolve``);
+    ``close`` drops whatever is left."""
+    server: "PagedKVServer"
+    prompt_len: int
+    max_new_tokens: int
+    logits0: np.ndarray                    # (B, V) float32, host copy
+    shared: List[np.ndarray]               # per row: full prompt pages
+    tails: List[Optional[int]]             # per row: canonical tail page
+    live: np.ndarray                       # (B,) bool — handle refs held
+
+    @property
+    def batch(self) -> int:
+        return self.live.shape[0]
+
+    def _release_row(self, r: int) -> None:
+        if not self.live[r]:
+            return
+        self.server.pool.release(self.shared[r])
+        if self.tails[r] is not None:
+            self.server.pool.release([self.tails[r]])
+        self.live[r] = False
+
+    def resolve(self, keep_rows: Sequence[int]) -> None:
+        """Free every row's prompt pages except ``keep_rows`` (the rows
+        some ensemble member will still seed its prefill from)."""
+        keep = set(int(r) for r in keep_rows)
+        for r in range(self.batch):
+            if r not in keep:
+                self._release_row(r)
+        self.server._sample_usage()
+
+    def close(self) -> None:
+        for r in range(self.batch):
+            self._release_row(r)
+        self.server._sample_usage()
+
+
+# ----------------------------------------------------------------------
+# per-model paged serving state
+# ----------------------------------------------------------------------
+class PagedKVServer:
+    """Paged KV serving state for one model (one set of params).
+
+    Owns the device page arrays, the pool, and the prefix cache. The
+    engine creates one server per distinct ``params`` object, so an
+    ensemble member that *is* the probe model shares the probe's
+    server — which is what makes probe->ensemble prefill reuse sound
+    (KV caches are functions of params, not just configs).
+    """
+
+    def __init__(self, cfg: ModelConfig, *, page_size: int = 8,
+                 prefix_cache_entries: int = 32):
+        from repro.models.transformer import paged_supported
+        if not paged_supported(cfg):
+            raise ValueError(
+                f"config {cfg.name!r} is not paged-KV capable "
+                "(dense GQA, linear cache, non-MoE required)")
+        self.cfg = cfg
+        self.page_size = int(page_size)
+        self.prefix_cache_entries = int(prefix_cache_entries)
+        self.pool: Optional[PagePool] = None
+        self.k_pages = None
+        self.v_pages = None
+        self._scratch: Optional[np.ndarray] = None
+        self._prefix: "OrderedDict[bytes, _PrefixEntry]" = OrderedDict()
+        self._capacity_key: Optional[Tuple[int, int, int, int]] = None
+        itemsize = np.dtype(cfg.dtype).itemsize
+        self.stats = KVStats(
+            model=cfg.name, page_size=self.page_size,
+            page_bytes=(2 * cfg.num_layers * self.page_size
+                        * cfg.num_kv_heads * cfg.resolved_head_dim
+                        * itemsize))
+
+    # -- capacity ------------------------------------------------------
+    def _ensure_capacity(self, batch: int, prompt_len: int,
+                         n_samples: int, max_new_tokens: int) -> None:
+        """(Re)build the pool + device arrays when a wave's worst case
+        outgrows them. Only called at wave boundaries, when no handle
+        holds pages; rebuilding drops the prefix cache."""
+        key = (batch, prompt_len, n_samples, max_new_tokens)
+        if self._capacity_key is not None and self.pool is not None:
+            b0, s0, n0, m0 = self._capacity_key
+            if (batch <= b0 and prompt_len <= s0 and n_samples <= n0
+                    and max_new_tokens <= m0):
+                return
+            key = (max(batch, b0), max(prompt_len, s0),
+                   max(n_samples, n0), max(max_new_tokens, m0))
+        b, s, n, m = key
+        ps = self.page_size
+        nbp = pages_for(s, ps)
+        nb = pages_for(s + m, ps)
+        n_tail = nb - s // ps
+        need = (b * (nbp + n * n_tail)      # probe wave peak
+                + b * nb                    # one member wave (own prefill)
+                + self.prefix_cache_entries * nbp
+                + nbp)                      # scratch pages
+        self._rebuild(need, nbp, key)
+
+    def _rebuild(self, num_pages: int, scratch_pages: int,
+                 key: Tuple[int, int, int, int]) -> None:
+        import jax.numpy as jnp
+        if self.pool is not None:
+            self.drop_prefix_cache()
+            if self.pool.pages_in_use > scratch_pages:
+                raise PagePoolError(
+                    "cannot rebuild the page pool while pages are held")
+        cfg = self.cfg
+        self.pool = PagePool(num_pages, self.page_size)
+        dt = jnp.dtype(cfg.dtype)
+        shape = (cfg.num_layers, num_pages, self.page_size,
+                 cfg.num_kv_heads, cfg.resolved_head_dim)
+        self.k_pages = jnp.zeros(shape, dt)
+        self.v_pages = jnp.zeros(shape, dt)
+        # scratch pages soak up the prefill writes of bucket-padding
+        # rows; never referenced by any block table, so their contents
+        # are dead by construction
+        self._scratch = self.pool.alloc(scratch_pages)
+        self._capacity_key = key
+        self.stats.pool_pages = num_pages
+        self._sample_usage()
+
+    def drop_prefix_cache(self) -> None:
+        for entry in self._prefix.values():
+            self.pool.release(entry.shared)
+            if entry.tail is not None:
+                self.pool.release([entry.tail])
+        self._prefix.clear()
+
+    def _sample_usage(self) -> None:
+        if self.pool is not None:
+            self.stats.pages_in_use = self.pool.pages_in_use
+            self.stats.pages_highwater = self.pool.highwater
+
+    # -- prefix cache --------------------------------------------------
+    def _prefix_lookup(self, key: bytes) -> Optional[_PrefixEntry]:
+        if self.prefix_cache_entries <= 0:
+            return None
+        entry = self._prefix.get(key)
+        if entry is not None:
+            self._prefix[key] = self._prefix.pop(key)   # refresh LRU
+        return entry
+
+    def _prefix_insert(self, key: bytes, shared: np.ndarray,
+                       tail: Optional[int],
+                       logits0: np.ndarray) -> None:
+        if self.prefix_cache_entries <= 0:
+            return
+        old = self._prefix.pop(key, None)
+        if old is not None:
+            self.pool.release(old.shared)
+            if old.tail is not None:
+                self.pool.release([old.tail])
+        self.pool.retain(shared)
+        if tail is not None:
+            self.pool.retain([tail])
+        self._prefix[key] = _PrefixEntry(
+            shared=shared.copy(), tail=tail, logits0=logits0.copy())
+        while len(self._prefix) > self.prefix_cache_entries:
+            _, evicted = self._prefix.popitem(last=False)
+            self.pool.release(evicted.shared)
+            if evicted.tail is not None:
+                self.pool.release([evicted.tail])
+
+    # -- waves ---------------------------------------------------------
+    def probe_wave(self, params: dict, ids: np.ndarray, n_samples: int,
+                   *, max_new_tokens: int, temperature: float,
+                   key, eos_id: int, pad_id: int):
+        """N-sample probe decode with shared prefix pages.
+
+        One prefill per *distinct uncached* prompt; the N samples of a
+        prompt share its full prompt pages read-only and fork only the
+        partial tail page (COW). Returns ``(GenerateOutput,
+        ProbeHandle)`` — the handle retains each row's prompt pages for
+        ensemble prefill seeding until ``resolve``/``close``.
+        """
+        import jax.numpy as jnp
+        from repro.sampling import sampler as S
+
+        b, s = ids.shape
+        n = int(n_samples)
+        ps = self.page_size
+        self._ensure_capacity(b, s, n, max_new_tokens)
+        n_shared = s // ps
+        tail_tokens = s - n_shared * ps
+        nbp = pages_for(s, ps)
+        nb = pages_for(s + max_new_tokens, ps)
+        n_tail = nb - n_shared
+
+        # 1. prompt pages per row: prefix-cache hit -> retain the
+        # cached pages; miss -> allocate fresh ones (handle-owned).
+        # On any failure, release whatever this wave accumulated so an
+        # exhausted pool stays consistent instead of leaking refs.
+        shared_rows: List[np.ndarray] = []
+        tail_rows: List[Optional[int]] = []
+        miss: List[int] = []
+        hits: List[Optional[_PrefixEntry]] = []
+        try:
+            for r in range(b):
+                entry = self._prefix_lookup(ids[r].tobytes())
+                hits.append(entry)
+                if entry is not None:
+                    self.pool.retain(entry.shared)
+                    if entry.tail is not None:
+                        self.pool.retain([entry.tail])
+                    shared_rows.append(entry.shared.copy())
+                    tail_rows.append(entry.tail)
+                    self.stats.prefill_tokens_reused_prefix += s
+                else:
+                    pages = self.pool.alloc(nbp)
+                    shared_rows.append(pages[:n_shared])
+                    tail_rows.append(int(pages[n_shared])
+                                     if tail_tokens else None)
+                    miss.append(r)
+
+            # 2. one prefill over the uncached rows, gathered into a
+            # power-of-two bucket (padding rows replicate row 0 and
+            # write into scratch pages)
+            logits0 = np.zeros((b, self.cfg.vocab_size), np.float32)
+            if miss:
+                bucket = bucket_size(len(miss), cap=b)
+                rows_idx = miss + [miss[0]] * (bucket - len(miss))
+                pf_table = np.empty((bucket, nbp), np.int32)
+                for i, r in enumerate(rows_idx):
+                    if i < len(miss):
+                        row_pages = list(shared_rows[r])
+                        if tail_tokens:
+                            row_pages.append(tail_rows[r])
+                        pf_table[i] = row_pages
+                    else:
+                        pf_table[i] = self._scratch[:nbp]
+                lg, self.k_pages, self.v_pages = S.prefill_paged(
+                    self.cfg, params, jnp.asarray(ids[rows_idx]),
+                    self.k_pages, self.v_pages, jnp.asarray(pf_table))
+                lg = np.asarray(lg, np.float32)
+                for i, r in enumerate(miss):
+                    logits0[r] = lg[i]
+                # the bucket's padding rows compute real (discarded)
+                # prefill work — count what actually ran
+                self.stats.prefill_tokens_computed += bucket * s
+            for r, entry in enumerate(hits):
+                if entry is not None:
+                    logits0[r] = entry.logits0
+
+            # 3. publish the fresh rows to the prefix cache
+            for r in miss:
+                self._prefix_insert(ids[r].tobytes(), shared_rows[r],
+                                    tail_rows[r], logits0[r])
+        except BaseException:
+            for r in range(len(shared_rows)):
+                self.pool.release(shared_rows[r])
+                if tail_rows[r] is not None:
+                    self.pool.release([tail_rows[r]])
+            self._sample_usage()
+            raise
+
+        # the handle owns the prompt pages from here on: any failure
+        # below must close it (and drop the sample pages) so a raised
+        # decode cannot wedge the pool with orphaned refcounts
+        handle = ProbeHandle(
+            server=self, prompt_len=s, max_new_tokens=max_new_tokens,
+            logits0=logits0, shared=shared_rows, tails=tail_rows,
+            live=np.ones(b, bool))
+        sample_tails = None
+        try:
+            # 4. sample-private pages + COW fork of the partial tail
+            sample_tails = self.pool.alloc(b * n * n_tail).reshape(
+                b, n, n_tail)
+            self.stats.probe_pages_highwater = max(
+                self.stats.probe_pages_highwater,
+                b * (nbp + n * n_tail))
+            block_table = np.empty((b * n, nb), np.int32)
+            for r in range(b):
+                for j in range(n):
+                    block_table[r * n + j, :n_shared] = shared_rows[r]
+                    block_table[r * n + j, n_shared:] = sample_tails[r, j]
+            if tail_tokens:
+                src = np.repeat(
+                    np.asarray([tail_rows[r] for r in range(b)],
+                               np.int32), n)
+                dst = sample_tails[:, :, 0].reshape(-1)
+                self.k_pages, self.v_pages = S.fork_pages(
+                    self.k_pages, self.v_pages, jnp.asarray(src),
+                    jnp.asarray(dst))
+                self.stats.cow_forks += b * n
+
+            # 5. decode the expanded (B*N) wave over the shared pages
+            out, self.k_pages, self.v_pages = S.decode_paged(
+                self.cfg, params,
+                jnp.asarray(np.repeat(logits0, n, axis=0)),
+                self.k_pages, self.v_pages, jnp.asarray(block_table),
+                key, start_pos=s, max_new_tokens=max_new_tokens,
+                temperature=temperature, eos_id=eos_id, pad_id=pad_id)
+            # force tokens to host before the sample pages are recycled
+            out = type(out)(tokens=np.asarray(out.tokens),
+                            logprobs=np.asarray(out.logprobs),
+                            lengths=np.asarray(out.lengths))
+        except BaseException:
+            if sample_tails is not None:
+                self.pool.release(sample_tails.reshape(-1))
+            handle.close()
+            raise
+        self.pool.release(sample_tails.reshape(-1))
+        self._sample_usage()
+        return out, handle
+
+    def reuse_decode(self, params: dict, handle: ProbeHandle,
+                     rows: Sequence[int], *, max_new_tokens: int,
+                     temperature: float, key, eos_id: int,
+                     pad_id: int):
+        """Ensemble decode seeded from the probe's prompt pages:
+        prefill is skipped entirely — the rows' shared pages are read
+        in place, the canonical tail page is COW-forked per decode row,
+        and the prefill logits come from the probe's host snapshot.
+        Only sound when ``params`` is the probe's params (the engine
+        keys servers by params identity)."""
+        import jax.numpy as jnp
+        from repro.sampling import sampler as S
+
+        rows = [int(r) for r in rows]
+        s = handle.prompt_len
+        ps = self.page_size
+        n_shared = s // ps
+        tail_tokens = s - n_shared * ps
+        nb = pages_for(s + max_new_tokens, ps)
+        n_tail = nb - n_shared
+        for r in rows:
+            if not handle.live[r]:
+                raise PageAccountingError(
+                    f"reuse of row {r} after its pages were resolved")
+
+        nr = len(rows)
+        tails = self.pool.alloc(nr * n_tail).reshape(nr, n_tail)
+        try:
+            block_table = np.empty((nr, nb), np.int32)
+            for i, r in enumerate(rows):
+                block_table[i, :n_shared] = handle.shared[r]
+                block_table[i, n_shared:] = tails[i]
+            if tail_tokens:
+                src = np.asarray([handle.tails[r] for r in rows],
+                                 np.int32)
+                self.k_pages, self.v_pages = S.fork_pages(
+                    self.k_pages, self.v_pages, jnp.asarray(src),
+                    jnp.asarray(tails[:, 0]))
+                self.stats.cow_forks += nr
+            out, self.k_pages, self.v_pages = S.decode_paged(
+                self.cfg, params, jnp.asarray(handle.logits0[rows]),
+                self.k_pages, self.v_pages, jnp.asarray(block_table),
+                key, start_pos=s, max_new_tokens=max_new_tokens,
+                temperature=temperature, eos_id=eos_id, pad_id=pad_id)
+            out = type(out)(tokens=np.asarray(out.tokens),
+                            logprobs=np.asarray(out.logprobs),
+                            lengths=np.asarray(out.lengths))
+        finally:
+            self.pool.release(tails.reshape(-1))
+            self._sample_usage()
+        self.stats.prefill_tokens_reused_probe += s * nr
+        return out
+
+    def generate(self, params: dict, ids: np.ndarray, *,
+                 max_new_tokens: int, temperature: float, key,
+                 eos_id: int, pad_id: int):
+        """Paged single-sample generation (a probe wave with N=1 whose
+        prompt pages are released immediately): page-granular
+        allocation instead of batch-max padded dense caches, plus
+        cross-request prompt reuse through the prefix cache."""
+        out, handle = self.probe_wave(
+            params, ids, 1, max_new_tokens=max_new_tokens,
+            temperature=temperature, key=key, eos_id=eos_id,
+            pad_id=pad_id)
+        handle.close()
+        return out

@@ -51,6 +51,7 @@ from repro.core.sigma import (
     MODE_NAMES, route_batch, sigma as sigma_fn, sigma_batch)
 from repro.data.tasks import Task
 from repro.serving.compaction import CompactionPlan, plan_compaction
+from repro.serving.kv_pool import pages_for
 from repro.serving.metrics import PromCounters
 from repro.serving.queue import AdmissionQueue, MicroBatch, \
     MicroBatchPolicy, Request
@@ -133,6 +134,9 @@ class _ProbedBatch:
     # stage so the ensemble wave starts with its gather/bucket shapes
     # already known
     plan: Optional[CompactionPlan] = None
+    # prompt pages held past the route decision for probe->ensemble
+    # prefill seeding; released when this wave's ensemble completes
+    kv_escalated_pages: int = 0
 
 
 @dataclass
@@ -150,6 +154,15 @@ class SchedulerStats:
     ensemble_decode_rows_saved: int = 0   # full-batch masked rows elided
     probe_prefill_tokens: int = 0         # shared-prefix prefill tokens
     probe_prefill_tokens_saved: int = 0   # (N-1)x prompt tokens elided
+    # paged KV-cache budget planning (virtual, page units): prompt
+    # pages allocate once per cache-missed row (shared across the N
+    # probe samples), sample pages free after the probe decode,
+    # non-escalated rows free at the route decision, escalated rows'
+    # prompt pages live until their ensemble wave finishes
+    kv_pages_in_use: int = 0              # live pages, current
+    kv_pages_highwater: int = 0           # peak live pages
+    kv_pages_allocated: int = 0           # page allocations, total
+    kv_prefill_tokens_reused: int = 0     # probe pages seeding ensemble
     # deterministic virtual clock (the calibrated latency model)
     sequential_makespan_ms: float = 0.0   # sum of per-task latencies
     serial_batch_makespan_ms: float = 0.0  # batched, no overlap
@@ -200,7 +213,9 @@ class ContinuousBatchingScheduler:
                  policy: MicroBatchPolicy = MicroBatchPolicy(),
                  probe_cache_size: int = 512,
                  overlap: bool = True,
-                 device_routing: bool = True):
+                 device_routing: bool = True,
+                 kv_page_size: int = 8,
+                 kv_decode_tokens: int = 8):
         self.acfg = acfg
         self.probe = probe
         self.ensemble = ensemble
@@ -213,6 +228,10 @@ class ContinuousBatchingScheduler:
         self.cache = ProbeCache(probe_cache_size)
         self.overlap = overlap
         self.device_routing = device_routing
+        # virtual paged-KV budget model (the engine measures the real
+        # pool; the scheduler plans the same lifecycle in page units)
+        self.kv_page_size = kv_page_size
+        self.kv_decode_tokens = kv_decode_tokens
         self.metrics = PromCounters()
         self.stats = SchedulerStats()
 
@@ -364,6 +383,7 @@ class ContinuousBatchingScheduler:
             else:
                 self.metrics.inc("acar_sched_probe_cache_misses_total",
                                  help="probe waves decoded")
+        self._release_kv_pages(probed)
         return outcomes, wave_latency
 
     def _account_compaction(self, probed: _ProbedBatch) -> None:
@@ -388,6 +408,7 @@ class ContinuousBatchingScheduler:
                     (n - 1) * est,
                     help="probe prefill tokens elided by shared-prefix "
                          "expansion")
+        self._account_kv_pages(probed)
         plan = probed.plan
         if plan is None:
             return
@@ -421,6 +442,63 @@ class ContinuousBatchingScheduler:
                 bucket=str(mp.bucket),
                 help="escalated-row fill of the last decode wave in "
                      "each shape bucket")
+
+    def _account_kv_pages(self, probed: _ProbedBatch) -> None:
+        """Virtual paged-KV lifecycle for one wave: prompt pages
+        allocate once per cache-missed row (the N samples share them),
+        sample-private pages free right after the probe decode,
+        non-escalated rows free their prompt pages the moment the
+        route resolves, and escalated rows keep theirs until the
+        ensemble wave completes (``_release_kv_pages``) — seeding the
+        prefill of any ensemble member that is the probe model, which
+        is counted as reused prefill tokens."""
+        ps = self.kv_page_size
+        n = self.acfg.n_probe_samples
+        alloc = tails = esc_shared = resolved = reused = 0
+        for row in probed.rows:
+            if row.cache_hit:
+                continue         # served from the probe cache: no KV
+            e = row.request.est_tokens
+            nbp = pages_for(e, ps)
+            tail = pages_for(e + self.kv_decode_tokens, ps) - e // ps
+            alloc += nbp + n * tail
+            tails += n * tail
+            if row.mode == "single_agent":
+                resolved += nbp
+            else:
+                esc_shared += nbp
+                executed = models_for_mode(
+                    row.mode, self.ensemble_order,
+                    self.acfg.arena_lite_size)
+                if any(self.ensemble.get(m) is self.probe
+                       for m in executed):
+                    reused += e
+        st = self.stats
+        st.kv_pages_allocated += alloc
+        st.kv_pages_in_use += alloc
+        st.kv_pages_highwater = max(st.kv_pages_highwater,
+                                    st.kv_pages_in_use)
+        st.kv_pages_in_use -= tails + resolved
+        st.kv_prefill_tokens_reused += reused
+        probed.kv_escalated_pages = esc_shared
+        if reused:
+            self.metrics.inc(
+                "acar_sched_kv_prefill_tokens_reused_total", reused,
+                help="prompt prefill tokens ensemble members seed "
+                     "from retained probe pages")
+        self.metrics.set_gauge(
+            "acar_sched_kv_pages_in_use", st.kv_pages_in_use,
+            help="virtual KV pool pages live after wave planning")
+        self.metrics.set_gauge(
+            "acar_sched_kv_pages_highwater", st.kv_pages_highwater,
+            help="virtual KV pool pages-in-use peak")
+
+    def _release_kv_pages(self, probed: _ProbedBatch) -> None:
+        self.stats.kv_pages_in_use -= probed.kv_escalated_pages
+        probed.kv_escalated_pages = 0
+        self.metrics.set_gauge(
+            "acar_sched_kv_pages_in_use", self.stats.kv_pages_in_use,
+            help="virtual KV pool pages live after wave planning")
 
     # -- main loop -----------------------------------------------------
     def run_until_idle(self) -> List[TaskOutcome]:

@@ -20,12 +20,21 @@ Three pieces:
   checks per task: identical sigma, mode, final answer, per-member
   answers, and trace record hash — and globally: both artifact chains
   verify with byte-identical heads. Compaction must be an execution
-  strategy, not a semantic change.
+  strategy, not a semantic change;
+* a **paged-KV checker** (``--paged-kv``) — drives a duplicate-bearing
+  task stream through the real-model engine twice, once on the dense
+  ``tile_cache`` path and once on the paged KV subsystem (page pool +
+  block tables + ref-counted prefix sharing + probe->ensemble prefill
+  reuse), and applies the same per-task and audit-chain checks. The
+  ensemble mirrors the paper's arena: its third member *is* the probe
+  model, so probe prefill pages genuinely seed ensemble prefill.
+  Paging must be an allocation strategy, not a semantic change.
 
 Run standalone:
 
     PYTHONPATH=src:tests python tests/harness/simulate.py \
-        --tasks 200 --seed 0 --batch-size 8 [--engine-compaction]
+        --tasks 200 --seed 0 --batch-size 8 \
+        [--engine-compaction] [--paged-kv] [--paged-only]
 """
 from __future__ import annotations
 
@@ -309,6 +318,45 @@ def _engine_traces(run_id: str, tasks, res, member_names,
     return traces
 
 
+def _compare_engine_runs(tasks, res_a, res_b, member_names,
+                         workdir: Path, run_id: str,
+                         names: Tuple[str, str]):
+    """Field-by-field and audit-chain comparison of two
+    QueuedServeResults over the same task stream. Returns the five
+    mismatch lists plus both audits."""
+    store_a = ArtifactStore(workdir / f"{names[0]}.jsonl")
+    store_b = ArtifactStore(workdir / f"{names[1]}.jsonl")
+    traces_a = _engine_traces(run_id, tasks, res_a, member_names,
+                              store_a)
+    traces_b = _engine_traces(run_id, tasks, res_b, member_names,
+                              store_b)
+
+    sig_mm, mode_mm, ans_mm, mem_mm, hash_mm = [], [], [], [], []
+    for i, task in enumerate(tasks):
+        tid = task.task_id
+        if float(res_a.sigma[i]) != float(res_b.sigma[i]):
+            sig_mm.append(
+                f"{tid}: {res_a.sigma[i]} != {res_b.sigma[i]}")
+        if int(res_a.modes[i]) != int(res_b.modes[i]):
+            mode_mm.append(
+                f"{tid}: {res_a.modes[i]} != {res_b.modes[i]}")
+        if res_a.final_answers[i] != res_b.final_answers[i]:
+            ans_mm.append(
+                f"{tid}: {res_a.final_answers[i]!r} != "
+                f"{res_b.final_answers[i]!r}")
+        if res_a.member_answers[i] != res_b.member_answers[i]:
+            mem_mm.append(
+                f"{tid}: {res_a.member_answers[i]} != "
+                f"{res_b.member_answers[i]}")
+        if traces_a[i].record_hash() != traces_b[i].record_hash():
+            hash_mm.append(tid)
+
+    audit_a = ArtifactStore(workdir / f"{names[0]}.jsonl").audit()
+    audit_b = ArtifactStore(workdir / f"{names[1]}.jsonl").audit()
+    return (sig_mm, mode_mm, ans_mm, mem_mm, hash_mm, audit_a,
+            audit_b)
+
+
 def run_engine_compaction_equivalence(
         tasks=None, n_tasks: int = 16, seed: int = 0,
         batch_size: int = 8, max_new_tokens: int = 4,
@@ -345,35 +393,10 @@ def run_engine_compaction_equivalence(
     res_m = masked_eng.run_queued(tasks, policy)
 
     member_names = [m.name for m in compact_eng.ensemble]
-    store_c = ArtifactStore(workdir / "compacted.jsonl")
-    store_m = ArtifactStore(workdir / "masked.jsonl")
-    traces_c = _engine_traces("compact", tasks, res_c, member_names,
-                              store_c)
-    traces_m = _engine_traces("compact", tasks, res_m, member_names,
-                              store_m)
-
-    sig_mm, mode_mm, ans_mm, mem_mm, hash_mm = [], [], [], [], []
-    for i, task in enumerate(tasks):
-        tid = task.task_id
-        if float(res_c.sigma[i]) != float(res_m.sigma[i]):
-            sig_mm.append(
-                f"{tid}: {res_c.sigma[i]} != {res_m.sigma[i]}")
-        if int(res_c.modes[i]) != int(res_m.modes[i]):
-            mode_mm.append(
-                f"{tid}: {res_c.modes[i]} != {res_m.modes[i]}")
-        if res_c.final_answers[i] != res_m.final_answers[i]:
-            ans_mm.append(
-                f"{tid}: {res_c.final_answers[i]!r} != "
-                f"{res_m.final_answers[i]!r}")
-        if res_c.member_answers[i] != res_m.member_answers[i]:
-            mem_mm.append(
-                f"{tid}: {res_c.member_answers[i]} != "
-                f"{res_m.member_answers[i]}")
-        if traces_c[i].record_hash() != traces_m[i].record_hash():
-            hash_mm.append(tid)
-
-    audit_c = ArtifactStore(workdir / "compacted.jsonl").audit()
-    audit_m = ArtifactStore(workdir / "masked.jsonl").audit()
+    (sig_mm, mode_mm, ans_mm, mem_mm, hash_mm, audit_c,
+     audit_m) = _compare_engine_runs(
+        tasks, res_c, res_m, member_names, workdir, "compact",
+        ("compacted", "masked"))
     cs = res_c.compaction
     return EngineCompactionReport(
         n_tasks=len(tasks),
@@ -389,6 +412,158 @@ def run_engine_compaction_equivalence(
             cs.probe_prefill_reduction if cs else 1.0))
 
 
+# ----------------------------------------------------------------------
+# paged-KV equivalence (real JAX models, page pool vs dense caches)
+# ----------------------------------------------------------------------
+@dataclass
+class PagedKVReport:
+    n_tasks: int
+    sigma_mismatches: List[str]
+    mode_mismatches: List[str]
+    answer_mismatches: List[str]
+    member_mismatches: List[str]
+    hash_mismatches: List[str]
+    dense_chain_ok: bool
+    paged_chain_ok: bool
+    chain_heads_equal: bool
+    # measured paged-KV accounting (probe model's server)
+    kv_pages_highwater: int
+    probe_memory_reduction: float     # dense tile_cache bytes / paged
+    prefill_tokens_reused: int        # probe->ensemble + prefix cache
+    prefill_tokens_reused_probe: int  # probe->ensemble seeding only
+
+    @property
+    def ok(self) -> bool:
+        return (not self.sigma_mismatches
+                and not self.mode_mismatches
+                and not self.answer_mismatches
+                and not self.member_mismatches
+                and not self.hash_mismatches
+                and self.dense_chain_ok
+                and self.paged_chain_ok
+                and self.chain_heads_equal)
+
+    def summary(self) -> str:
+        return (f"tasks={self.n_tasks} "
+                f"sigma_mismatches={len(self.sigma_mismatches)} "
+                f"mode_mismatches={len(self.mode_mismatches)} "
+                f"answer_mismatches={len(self.answer_mismatches)} "
+                f"member_mismatches={len(self.member_mismatches)} "
+                f"hash_mismatches={len(self.hash_mismatches)} "
+                f"chains_ok={self.dense_chain_ok and self.paged_chain_ok} "
+                f"heads_equal={self.chain_heads_equal} "
+                f"kv_pages_hw={self.kv_pages_highwater} "
+                f"probe_mem_reduction="
+                f"{self.probe_memory_reduction:.2f}x "
+                f"prefill_reused={self.prefill_tokens_reused} "
+                f"=> {'EQUIVALENT' if self.ok else 'DIVERGENT'}")
+
+
+def paged_workload(n_tasks: int, seed: int = 0,
+                   duplicate_rate: float = 0.15) -> List[Task]:
+    """Uniform-prompt arithmetic stream with duplicate resubmissions —
+    duplicates exercise the cross-request prefix page cache the same
+    way ``generate_workload`` exercises the scheduler's probe cache."""
+    from repro.data.tasks import arithmetic_suite
+    pool = arithmetic_suite(max(16, n_tasks // 2), seed=seed)
+    rng = np.random.default_rng(seed + 0x9A6ED)
+    stream: List[Task] = []
+    for _ in range(n_tasks):
+        if stream and rng.random() < duplicate_rate:
+            stream.append(stream[int(rng.integers(len(stream)))])
+        else:
+            stream.append(pool[int(rng.integers(len(pool)))])
+    return stream
+
+
+def paged_zoo(seed: int = 0):
+    """Probe + three ensemble members, the third being the probe model
+    itself — mirroring the paper's arena (ARENA3 contains the probe),
+    so probe->ensemble prefill-page reuse is genuinely sound and
+    genuinely exercised."""
+    from repro.serving import ZooModel
+    zoo = tiny_zoo(3, seed=seed)
+    probe = zoo[0]
+    ensemble = [zoo[1], zoo[2],
+                ZooModel(name="m3-probe", cfg=probe.cfg,
+                         params=probe.params)]
+    return probe, ensemble
+
+
+def run_paged_kv_equivalence(
+        tasks=None, n_tasks: int = 200, seed: int = 0,
+        batch_size: int = 8, max_new_tokens: int = 4,
+        probe_temperature: float = 0.9,
+        duplicate_rate: float = 0.15,
+        workdir: Optional[Path] = None,
+        route_fn=None) -> PagedKVReport:
+    """Serve the same stream through the paged and the dense engine and
+    compare every judge-visible output plus the audit chain. Paging —
+    page pool, block tables, prefix sharing, COW forks, probe->ensemble
+    prefill seeding, the prompt prefix cache — must be an allocation
+    strategy, not a semantic change."""
+    from repro.configs.acar import ACARConfig
+    from repro.serving import (
+        BatchedACAREngine, MicroBatchPolicy, dense_tile_slots)
+
+    if workdir is None:
+        workdir = Path(tempfile.mkdtemp(prefix="acar-paged-"))
+    workdir = Path(workdir)
+    if tasks is None:
+        tasks = paged_workload(n_tasks, seed=seed,
+                               duplicate_rate=duplicate_rate)
+    tasks = list(tasks)
+
+    probe, ensemble = paged_zoo(seed=seed)
+    acfg = ACARConfig(probe_temperature=probe_temperature, seed=seed)
+    policy = MicroBatchPolicy(max_batch_size=batch_size,
+                              max_batch_tokens=1 << 20)
+
+    dense_eng = BatchedACAREngine(
+        acfg, probe, ensemble, max_new_tokens=max_new_tokens,
+        compact=True, shared_prefix=True, paged=False,
+        route_fn=route_fn)
+    paged_eng = BatchedACAREngine(
+        acfg, probe, ensemble, max_new_tokens=max_new_tokens,
+        compact=True, shared_prefix=True, paged=True,
+        route_fn=route_fn)
+    res_d = dense_eng.run_queued(tasks, policy)
+    res_p = paged_eng.run_queued(tasks, policy)
+
+    member_names = [m.name for m in ensemble]
+    (sig_mm, mode_mm, ans_mm, mem_mm, hash_mm, audit_d,
+     audit_p) = _compare_engine_runs(
+        tasks, res_d, res_p, member_names, workdir, "paged",
+        ("dense", "paged"))
+
+    kv = paged_eng.kv_stats()
+    probe_kv = kv[probe.name]
+    from repro.data import tokenizer as tok
+    s = tok.encode_aligned([tasks[0].text]).shape[1]
+    # dense probe high-water: tile_cache materialises B*N rows of
+    # (prompt+new) slots at the same per-token bytes the pages use
+    token_bytes = probe_kv.page_bytes / probe_kv.page_size
+    dense_bytes = dense_tile_slots(
+        batch_size, acfg.n_probe_samples, s, max_new_tokens) \
+        * token_bytes
+    paged_bytes = max(probe_kv.probe_highwater_bytes, 1)
+    reused = sum(st.prefill_tokens_reused for st in kv.values())
+    reused_probe = sum(st.prefill_tokens_reused_probe
+                       for st in kv.values())
+    return PagedKVReport(
+        n_tasks=len(tasks),
+        sigma_mismatches=sig_mm, mode_mismatches=mode_mm,
+        answer_mismatches=ans_mm, member_mismatches=mem_mm,
+        hash_mismatches=hash_mm,
+        dense_chain_ok=bool(audit_d["ok"]),
+        paged_chain_ok=bool(audit_p["ok"]),
+        chain_heads_equal=audit_d["head"] == audit_p["head"],
+        kv_pages_highwater=probe_kv.pages_highwater,
+        probe_memory_reduction=dense_bytes / paged_bytes,
+        prefill_tokens_reused=reused,
+        prefill_tokens_reused_probe=reused_probe)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tasks", type=int, default=200)
@@ -399,22 +574,37 @@ def main(argv=None) -> int:
     ap.add_argument("--engine-compaction", action="store_true",
                     help="also check compacted<->masked equivalence of "
                          "the real-model engine (16 tasks, tiny zoo)")
+    ap.add_argument("--paged-kv", action="store_true",
+                    help="also check paged<->dense KV-cache equivalence"
+                         " of the real-model engine over --tasks tasks")
+    ap.add_argument("--paged-only", action="store_true",
+                    help="run only the paged-KV check (implies "
+                         "--paged-kv; the fast CI job's mode)")
     args = ap.parse_args(argv)
 
-    stream = generate_workload(WorkloadConfig(
-        n_tasks=args.tasks, seed=args.seed,
-        duplicate_rate=args.duplicate_rate))
-    report, _, _ = run_equivalence(
-        stream, acfg=ACARConfig(seed=args.seed),
-        policy=MicroBatchPolicy(max_batch_size=args.batch_size),
-        overlap=not args.no_overlap)
-    print(report.summary())
-    ok = report.ok
-    if args.engine_compaction:
+    ok = True
+    if not args.paged_only:
+        stream = generate_workload(WorkloadConfig(
+            n_tasks=args.tasks, seed=args.seed,
+            duplicate_rate=args.duplicate_rate))
+        report, _, _ = run_equivalence(
+            stream, acfg=ACARConfig(seed=args.seed),
+            policy=MicroBatchPolicy(max_batch_size=args.batch_size),
+            overlap=not args.no_overlap)
+        print(report.summary())
+        ok = report.ok
+    if args.engine_compaction and not args.paged_only:
         creport = run_engine_compaction_equivalence(
             seed=args.seed, batch_size=args.batch_size)
         print(creport.summary())
         ok = ok and creport.ok
+    if args.paged_kv or args.paged_only:
+        preport = run_paged_kv_equivalence(
+            n_tasks=args.tasks, seed=args.seed,
+            batch_size=args.batch_size,
+            duplicate_rate=args.duplicate_rate)
+        print(preport.summary())
+        ok = ok and preport.ok
     return 0 if ok else 1
 
 

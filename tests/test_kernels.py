@@ -47,6 +47,51 @@ def test_decode_attention_sweep(b, h, kv, dk, s, blk, dtype):
         atol=tol_for(dtype), rtol=tol_for(dtype))
 
 
+@pytest.mark.parametrize("s,blk", [
+    (300, 128),      # 300 % 128 != 0 -> pad to 384, 3 blocks
+    (520, 512),      # just past one block -> pad to 1024
+    (129, 64),       # one token over -> pad to 192
+    (96, 128),       # shorter than a block -> single s-sized block
+])
+def test_decode_attention_odd_lengths_no_block_cliff(s, blk):
+    """Regression: cache lengths off the block grid used to collapse
+    the kernel to a single (s, head_dim) VMEM tile; they must instead
+    pad to the next block multiple and still match the oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(s + blk), 3)
+    q = jax.random.normal(ks[0], (2, 4, 64))
+    k = jax.random.normal(ks[1], (2, s, 2, 64))
+    v = jax.random.normal(ks[2], (2, s, 2, 64))
+    length = jnp.int32(s - 7)
+    out = decode_attention(q, k, v, length, block_s=blk,
+                           interpret=True)
+    want = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_odd_length_uses_multiple_blocks():
+    """The padded path must genuinely tile: with s > block_s and
+    s % block_s != 0 the grid sees ceil(s/block) blocks, not one
+    s-sized block (the VMEM-cliff shape)."""
+    from unittest import mock
+    import repro.kernels.decode_attention as da
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 4, 64))
+    k = jax.random.normal(ks[1], (1, 300, 2, 64))
+    v = jax.random.normal(ks[2], (1, 300, 2, 64))
+    grids = []
+    real_call = da.pl.pallas_call
+
+    def spy(kernel, *a, grid=None, **kw):
+        grids.append(grid)
+        return real_call(kernel, *a, grid=grid, **kw)
+
+    with mock.patch.object(da.pl, "pallas_call", side_effect=spy):
+        da.decode_attention.__wrapped__(q, k, v, jnp.int32(250),
+                                        block_s=128, interpret=True)
+    assert grids and grids[0][2] == 3      # 300 -> 384 = 3 x 128
+
+
 def test_decode_attention_respects_length():
     """Entries past `length` must not affect the output."""
     ks = jax.random.split(jax.random.PRNGKey(0), 4)

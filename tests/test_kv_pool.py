@@ -1,0 +1,154 @@
+"""Page-pool invariants (property tests).
+
+The paged KV subsystem's correctness rests on host-side accounting:
+refcounted alloc/retain/release round-trips must never double-free,
+pages-in-use must always equal the live sequences' page footprint,
+copy-on-write forks must never alias writable pages, and pool
+exhaustion must raise a clean typed error instead of corrupting block
+tables.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                    # pragma: no cover
+    from _propshim import given, settings
+    from _propshim import strategies as st
+
+from repro.serving.kv_pool import (
+    PageAccountingError, PagePool, PoolExhausted, pages_for)
+
+
+def test_pages_for():
+    assert pages_for(0, 8) == 0
+    assert pages_for(1, 8) == 1
+    assert pages_for(8, 8) == 1
+    assert pages_for(9, 8) == 2
+    assert pages_for(64, 8) == 8
+    assert pages_for(65, 8) == 9
+
+
+def test_alloc_release_roundtrip():
+    pool = PagePool(8, 4)
+    a = pool.alloc(3)
+    assert pool.pages_in_use == 3
+    assert sorted(a.tolist()) == [0, 1, 2]
+    pool.release(a)
+    assert pool.pages_in_use == 0
+    # released pages come back (LIFO), deterministically
+    b = pool.alloc(3)
+    assert pool.pages_in_use == 3
+    assert set(b.tolist()) == {0, 1, 2}
+
+
+def test_refcount_sharing():
+    pool = PagePool(4, 4)
+    a = pool.alloc(2)
+    pool.retain(a)            # a second owner (e.g. sample 2 of 2)
+    pool.release(a)           # first owner gone
+    assert pool.pages_in_use == 2      # still held by the second
+    pool.release(a)
+    assert pool.pages_in_use == 0
+
+
+def test_double_free_raises_typed_error():
+    pool = PagePool(4, 4)
+    a = pool.alloc(1)
+    pool.release(a)
+    with pytest.raises(PageAccountingError):
+        pool.release(a)
+    with pytest.raises(PageAccountingError):
+        pool.retain(a)        # use-after-free
+
+
+def test_exhaustion_clean_and_atomic():
+    pool = PagePool(4, 4)
+    a = pool.alloc(3)
+    before = pool.pages_in_use
+    with pytest.raises(PoolExhausted):
+        pool.alloc(2)         # only 1 free
+    # the failed allocation leaked nothing and corrupted nothing
+    assert pool.pages_in_use == before
+    b = pool.alloc(1)
+    assert pool.pages_in_use == 4
+    pool.release(a)
+    pool.release(b)
+    assert pool.pages_in_use == 0
+
+
+@settings(max_examples=40)
+@given(st.lists(st.integers(min_value=0, max_value=5),
+                min_size=1, max_size=30),
+       st.integers(min_value=1, max_value=4))
+def test_pages_in_use_equals_live_footprint(seq_lens, n_owners):
+    """Random sequences of alloc(+share)/release: the pool's
+    pages-in-use always equals the page footprint of the live
+    sequences, and full teardown returns the pool to empty."""
+    pool = PagePool(256, 4)
+    live = []                       # (pages, owners_remaining)
+    footprint = 0
+    for k in seq_lens:
+        pages = pool.alloc(k)
+        pool.retain(np.tile(pages, n_owners - 1))
+        live.append([pages, n_owners])
+        footprint += k
+        assert pool.pages_in_use == footprint
+        # randomly (deterministically: by parity) drop one owner of
+        # the oldest sequence
+        if len(live) % 2 == 0:
+            entry = live[0]
+            pool.release(entry[0])
+            entry[1] -= 1
+            if entry[1] == 0:
+                footprint -= entry[0].size
+                live.pop(0)
+            assert pool.pages_in_use == footprint
+    for pages, owners in live:
+        for _ in range(owners):
+            pool.release(pages)
+    assert pool.pages_in_use == 0
+    assert pool.highwater <= pool.num_pages
+
+
+@settings(max_examples=25)
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=24))
+def test_cow_fork_never_aliases(n_shared, n_samples, prompt_tail):
+    """The shared/fork layout the probe wave builds: shared prompt
+    pages are referenced by every sample's table, but each sample's
+    writable (tail/decode) pages are private — no two samples may
+    alias a writable page, and no writable page may be a shared one."""
+    pool = PagePool(256, 8)
+    shared = pool.alloc(n_shared)
+    pool.retain(np.tile(shared, n_samples - 1))
+    tails = [pool.alloc(pages_for(prompt_tail, 8))
+             for _ in range(n_samples)]
+    writable = np.concatenate(tails)
+    # writable pages are pairwise distinct and disjoint from shared
+    assert len(set(writable.tolist())) == writable.size
+    assert not set(writable.tolist()) & set(shared.tolist())
+    # shared pages carry one ref per sample; private pages exactly one
+    for p in shared:
+        assert pool.refcount(int(p)) == n_samples
+    for p in writable:
+        assert pool.refcount(int(p)) == 1
+    for t in tails:
+        pool.release(t)
+    for _ in range(n_samples):
+        pool.release(shared)
+    assert pool.pages_in_use == 0
+
+
+def test_alloc_is_deterministic():
+    """Identical op sequences yield identical page ids — block tables
+    must be reproducible for the bit-equivalence harness."""
+    def run():
+        pool = PagePool(32, 8)
+        a = pool.alloc(5)
+        pool.release(a[1:3])
+        b = pool.alloc(4)
+        return a.tolist(), b.tolist()
+    assert run() == run()

@@ -1,0 +1,183 @@
+"""Paged KV-cache generation: bit-equivalence with the dense paths.
+
+The paged subsystem is an allocation strategy, not a semantic change:
+``PagedKVServer.probe_wave`` must emit tokens bit-identical to
+``generate_samples`` (which tiles the prefill cache N times), and both
+``reuse_decode`` (prefill skipped, seeded from retained probe pages)
+and ``generate`` must match the dense ``generate`` — same tokens, same
+logprobs, same lengths, at greedy and sampled temperatures.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data import tokenizer as tok
+from repro.models import params as params_lib
+from repro.models.transformer import paged_supported
+from repro.sampling import generate, generate_samples
+from repro.serving.kv_pool import (
+    PagedKVServer, PoolExhausted, dense_tile_slots, pages_for)
+
+# JIT/compile-heavy: excluded from the fast inner loop (-m 'not slow')
+pytestmark = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("smollm-135m", reduced=True).replace(
+        vocab_size=tok.VOCAB_SIZE, dtype="float32",
+        tie_embeddings=True)
+    prm = params_lib.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, prm
+
+
+def _prompts(length=None):
+    texts = ["3 + 4 = ", "2 * 3 = ", "9 - 5 = ", "1 + 1 = "]
+    ids = tok.encode_aligned(texts)
+    if length is not None:
+        reps = -(-length // ids.shape[1])
+        ids = np.tile(ids, (1, reps))[:, :length]
+    return ids
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+@pytest.mark.parametrize("prompt_len", [9, 16, 21])
+def test_probe_wave_bit_equals_generate_samples(tiny_model,
+                                                temperature,
+                                                prompt_len):
+    """Across page-aligned (16) and straddling (9, 21) prompt lengths
+    the shared-prefix paged probe matches the tiled dense probe
+    bit-for-bit."""
+    cfg, prm = tiny_model
+    ids = _prompts(prompt_len)
+    n, m, key = 3, 6, jax.random.PRNGKey(7)
+    dense = generate_samples(cfg, prm, jnp.asarray(ids), n,
+                             max_new_tokens=m, temperature=temperature,
+                             key=key, eos_id=tok.EOS, pad_id=tok.PAD)
+    srv = PagedKVServer(cfg, page_size=8, prefix_cache_entries=8)
+    out, handle = srv.probe_wave(prm, ids, n, max_new_tokens=m,
+                                 temperature=temperature, key=key,
+                                 eos_id=tok.EOS, pad_id=tok.PAD)
+    handle.close()
+    np.testing.assert_array_equal(np.asarray(dense.tokens), out.tokens)
+    np.testing.assert_array_equal(np.asarray(dense.logprobs),
+                                  out.logprobs)
+    np.testing.assert_array_equal(np.asarray(dense.lengths),
+                                  out.lengths)
+
+
+def test_reuse_decode_bit_equals_generate(tiny_model):
+    """An ensemble member sharing the probe's params decodes from the
+    retained probe pages — no prefill — and must match the dense
+    ``generate`` over the same rows (duplicates included, as bucket
+    padding produces them)."""
+    cfg, prm = tiny_model
+    ids = _prompts()
+    key = jax.random.PRNGKey(3)
+    srv = PagedKVServer(cfg, page_size=8, prefix_cache_entries=8)
+    _, handle = srv.probe_wave(prm, ids, 3, max_new_tokens=6,
+                               temperature=0.9, key=key,
+                               eos_id=tok.EOS, pad_id=tok.PAD)
+    rows = [2, 0, 2]
+    mkey = jax.random.fold_in(key, 1001)
+    want = generate(cfg, prm, jnp.asarray(ids[rows]), max_new_tokens=6,
+                    temperature=0.0, key=mkey, eos_id=tok.EOS,
+                    pad_id=tok.PAD)
+    got = srv.reuse_decode(prm, handle, rows, max_new_tokens=6,
+                           temperature=0.0, key=mkey, eos_id=tok.EOS,
+                           pad_id=tok.PAD)
+    np.testing.assert_array_equal(np.asarray(want.tokens), got.tokens)
+    assert srv.stats.prefill_tokens_reused_probe == \
+        len(rows) * ids.shape[1]
+    handle.close()
+
+
+def test_resolve_frees_pages_and_blocks_reuse(tiny_model):
+    """resolve() frees non-kept rows immediately; reusing a resolved
+    row is an accounting error, not silent corruption."""
+    from repro.serving.kv_pool import PageAccountingError
+    cfg, prm = tiny_model
+    ids = _prompts()
+    srv = PagedKVServer(cfg, page_size=8, prefix_cache_entries=0)
+    _, handle = srv.probe_wave(prm, ids, 3, max_new_tokens=6,
+                               temperature=0.9,
+                               key=jax.random.PRNGKey(0),
+                               eos_id=tok.EOS, pad_id=tok.PAD)
+    in_use = srv.pool.pages_in_use
+    handle.resolve([1])
+    assert srv.pool.pages_in_use < in_use
+    with pytest.raises(PageAccountingError):
+        srv.reuse_decode(prm, handle, [0], max_new_tokens=6,
+                         temperature=0.0, key=jax.random.PRNGKey(1),
+                         eos_id=tok.EOS, pad_id=tok.PAD)
+    handle.close()
+    # only the permanent scratch pages remain
+    assert srv.pool.pages_in_use == srv._scratch.size
+
+
+def test_prefix_cache_hits_skip_prefill_bitwise(tiny_model):
+    """A second wave over the same prompts must hit the prefix cache
+    (no prefill tokens computed) and still emit identical bits."""
+    cfg, prm = tiny_model
+    ids = _prompts()
+    key = jax.random.PRNGKey(11)
+    srv = PagedKVServer(cfg, page_size=8, prefix_cache_entries=8)
+    out1, h1 = srv.probe_wave(prm, ids, 3, max_new_tokens=6,
+                              temperature=0.9, key=key,
+                              eos_id=tok.EOS, pad_id=tok.PAD)
+    h1.close()
+    computed = srv.stats.prefill_tokens_computed
+    out2, h2 = srv.probe_wave(prm, ids, 3, max_new_tokens=6,
+                              temperature=0.9, key=key,
+                              eos_id=tok.EOS, pad_id=tok.PAD)
+    h2.close()
+    assert srv.stats.prefill_tokens_computed == computed
+    assert srv.stats.prefill_tokens_reused_prefix == \
+        ids.shape[0] * ids.shape[1]
+    np.testing.assert_array_equal(out1.tokens, out2.tokens)
+
+
+def test_probe_memory_highwater_beats_tile_cache(tiny_model):
+    """With prompts long relative to decode, the shared-prefix paged
+    working set must be >= 2x smaller than tile_cache's B*N*(S+M)."""
+    cfg, prm = tiny_model
+    ids = _prompts(64)
+    b, s = ids.shape
+    n, m = 3, 8
+    srv = PagedKVServer(cfg, page_size=8, prefix_cache_entries=0)
+    _, handle = srv.probe_wave(prm, ids, n, max_new_tokens=m,
+                               temperature=0.0,
+                               key=jax.random.PRNGKey(0),
+                               eos_id=tok.EOS, pad_id=tok.PAD)
+    handle.close()
+    paged_slots = srv.stats.probe_pages_highwater * srv.page_size
+    assert paged_slots * 2 <= dense_tile_slots(b, n, s, m)
+
+
+def test_pool_exhaustion_is_typed_and_clean(tiny_model):
+    """Driving a server against a deliberately tiny pool raises
+    PoolExhausted; the pool accounting survives intact."""
+    cfg, prm = tiny_model
+    ids = _prompts()
+    srv = PagedKVServer(cfg, page_size=8, prefix_cache_entries=0)
+    # shrink the pool under the wave's worst case
+    srv._ensure_capacity(ids.shape[0], ids.shape[1], 3, 6)
+    srv._rebuild(4, pages_for(ids.shape[1], 8), srv._capacity_key)
+    before = srv.pool.pages_in_use
+    with pytest.raises(PoolExhausted):
+        srv.probe_wave(prm, ids, 3, max_new_tokens=6, temperature=0.0,
+                       key=jax.random.PRNGKey(0), eos_id=tok.EOS,
+                       pad_id=tok.PAD)
+    # the failed wave released everything it had accumulated: the
+    # pool is exactly as before (scratch only), not wedged
+    assert srv.pool.pages_in_use == before
+
+
+def test_paged_supported_gates():
+    assert paged_supported(get_config("smollm-135m", reduced=True))
+    assert not paged_supported(get_config("mixtral-8x22b",
+                                          reduced=True))     # MoE
+    assert not paged_supported(get_config("falcon-mamba-7b",
+                                          reduced=True))     # SSM
