@@ -7,10 +7,14 @@ decodes -> vectorised judge — the TPU-native formulation of Alg. 1.
 
 With ``--scheduler`` the request stream is admitted through the
 continuous-batching queue and served as micro-batches, printing the
-Prometheus-style scheduler counters at the end.
+Prometheus-style scheduler counters at the end. With ``--step-loop``
+it runs the step-level loop instead (streaming admission off
+``AdmissionQueue.ready()``, chunked prefill, mixed-phase decode steps,
+mid-stream retirement) — bit-identical answers, different execution.
 
     PYTHONPATH=src python examples/serve_acar.py [--tasks 32]
-        [--train-steps 300] [--scheduler] [--batch-size 8]
+        [--train-steps 300] [--scheduler | --step-loop]
+        [--batch-size 8]
 """
 import argparse
 
@@ -22,6 +26,7 @@ if __name__ == "__main__":
     ap.add_argument("--tasks", type=int, default=32)
     ap.add_argument("--train-steps", type=int, default=300)
     ap.add_argument("--scheduler", action="store_true")
+    ap.add_argument("--step-loop", action="store_true")
     ap.add_argument("--batch-size", type=int, default=8)
     args = ap.parse_args()
     argv = ["--tasks", str(args.tasks),
@@ -29,4 +34,6 @@ if __name__ == "__main__":
             "--batch-size", str(args.batch_size)]
     if args.scheduler:
         argv.append("--scheduler")
+    if args.step_loop:
+        argv.append("--step-loop")
     serve_main(argv)

@@ -11,6 +11,7 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro.kernels import chunked_prefill_attention as _cpa
 from repro.kernels import decode_attention as _da
 from repro.kernels import decode_attention_quant as _daq
 from repro.kernels import fused_swiglu as _fs
@@ -42,6 +43,18 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, lengths,
     return _pda.paged_decode_attention(q, k_pages, v_pages,
                                        block_table, lengths,
                                        interpret=bool(interpret))
+
+
+def chunked_prefill_attention(q, k_pages, v_pages, block_table,
+                              q_positions, *, prompt_len: int,
+                              interpret: Optional[bool] = None):
+    if interpret is None and not _on_tpu():
+        return ref.chunked_prefill_attention_ref(
+            q, k_pages, v_pages, block_table, q_positions,
+            prompt_len=prompt_len)
+    return _cpa.chunked_prefill_attention(
+        q, k_pages, v_pages, block_table, q_positions,
+        prompt_len=prompt_len, interpret=bool(interpret))
 
 
 def decode_attention_quant(q, k_codes, k_scale, v_codes, v_scale,

@@ -67,6 +67,42 @@ def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
     return out.reshape(b, h, v_cache.shape[-1]).astype(q.dtype)
 
 
+def chunked_prefill_attention_ref(q: jax.Array, k_pages: jax.Array,
+                                  v_pages: jax.Array,
+                                  block_table: jax.Array,
+                                  q_positions: jax.Array, *,
+                                  prompt_len: int) -> jax.Array:
+    """Chunked-prefill GQA attention over a paged KV cache.
+
+    q: (B, C, H, Dk) chunk queries at absolute positions
+    ``q_positions`` (B, C) — rows may sit at different prefill
+    depths; k_pages/v_pages: (P, page_size, KV, Dk/Dv); block_table:
+    (B, NB) int32 page ids. The chunk's own K/V must already be
+    written into the pages. Gathers each row's pages to the static
+    ``prompt_len`` and attends causally (key position <= query
+    position); math in f32. Returns (B, C, H, Dv).
+    """
+    b, c, h, dk = q.shape
+    page_size, kv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_table.shape[1]
+    g = h // kv
+    k_cache = k_pages[block_table].reshape(
+        b, nb * page_size, kv, dk)[:, :prompt_len]
+    v_cache = v_pages[block_table].reshape(
+        b, nb * page_size, kv, v_pages.shape[-1])[:, :prompt_len]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dk))
+    qr = q.reshape(b, c, kv, g, dk).astype(jnp.float32) * scale
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qr,
+                        k_cache.astype(jnp.float32))
+    valid = q_positions[:, :, None] >= \
+        jnp.arange(prompt_len)[None, None]                 # (B, C, S)
+    scores = jnp.where(valid[:, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, c, h, v_cache.shape[-1]).astype(q.dtype)
+
+
 def selective_scan_ref(x: jax.Array, dt: jax.Array, a_log: jax.Array,
                        b_in: jax.Array, c_in: jax.Array,
                        h0: Optional[jax.Array] = None

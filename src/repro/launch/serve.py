@@ -56,13 +56,22 @@ def serve(tasks: Sequence[Task], probe: ZooModel,
           ensemble: Sequence[ZooModel], acfg: ACARConfig,
           verbose: bool = True,
           scheduler: bool = False,
+          step_loop: bool = False,
           batch_size: int = 8) -> dict:
     """Serve tasks through the batched engine. With ``scheduler=True``
     the request stream flows through the admission queue and is served
     as micro-batches of at most ``batch_size`` (continuous-batching
-    path); otherwise the whole suite runs as one batch."""
+    path); with ``step_loop=True`` it runs the step-level loop
+    (streaming admission + chunked prefill + mixed-phase decode
+    steps — requires a paged-capable probe); otherwise the whole
+    suite runs as one batch."""
     engine = BatchedACAREngine(acfg, probe, ensemble)
-    if scheduler:
+    if step_loop:
+        from repro.serving.queue import MicroBatchPolicy
+        res = engine.run_stepped(
+            list(tasks), MicroBatchPolicy(max_batch_size=batch_size))
+        scheduler = True          # report the queued-shape extras
+    elif scheduler:
         from repro.serving.queue import MicroBatchPolicy
         res = engine.run_queued(
             list(tasks), MicroBatchPolicy(max_batch_size=batch_size))
@@ -105,6 +114,10 @@ def serve(tasks: Sequence[Task], probe: ZooModel,
                   f"{out['probe_prefill_reduction']:.2f}x fewer tokens")
         if scheduler:
             print(f"micro-batches     : {res.batch_sizes}")
+            if getattr(res, "step", None) is not None:
+                print(f"step loop         : {res.step.ticks} ticks, "
+                      f"{res.step.invocations} program launches, "
+                      f"{res.step.prefill_chunks} prefill chunks")
             print(res.metrics.render())
     return out
 
@@ -121,6 +134,10 @@ def main(argv=None):
     ap.add_argument("--scheduler", action="store_true",
                     help="serve via the admission queue as "
                          "micro-batches (continuous batching)")
+    ap.add_argument("--step-loop", action="store_true",
+                    help="serve via the step-level loop (streaming "
+                         "admission, chunked prefill, mixed-phase "
+                         "decode steps; needs a paged-capable probe)")
     ap.add_argument("--batch-size", type=int, default=8,
                     help="micro-batch size budget for --scheduler")
     args = ap.parse_args(argv)
@@ -134,7 +151,8 @@ def main(argv=None):
                       seed=args.seed)
     tasks = arithmetic_suite(args.tasks, seed=args.seed + 99)
     serve(tasks, probe, ensemble, acfg,
-          scheduler=args.scheduler, batch_size=args.batch_size)
+          scheduler=args.scheduler, step_loop=args.step_loop,
+          batch_size=args.batch_size)
 
 
 if __name__ == "__main__":

@@ -132,7 +132,11 @@ def decode_attention(q, k_cache, v_cache, k_positions, pos) -> jax.Array:
 
     q: (B,H,Dk); k_cache: (B,S,KV,Dk); v_cache: (B,S,KV,Dv);
     k_positions: (S,) int32 — absolute position held in each slot
-    (negative = empty); pos: scalar int32 current position.
+    (negative = empty); pos: scalar int32 current position, or (B,)
+    int32 per-row positions (the step-level serving loop decodes mixed
+    batches whose rows sit at different depths; per-row masking is the
+    only difference, so each row's output is bit-identical to the
+    scalar-pos call at that row's position).
     Returns (B,H,Dv).
     """
     b, h, dk = q.shape
@@ -147,8 +151,13 @@ def decode_attention(q, k_cache, v_cache, k_positions, pos) -> jax.Array:
     # cache lengths — see EXPERIMENTS.md SPerf C2).
     scores = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
                         preferred_element_type=jnp.float32)  # (B,KV,G,S)
-    valid = (k_positions >= 0) & (k_positions <= pos)
-    scores = jnp.where(valid[None, None, None], scores, _NEG_INF)
+    if jnp.ndim(pos) == 0:
+        valid = ((k_positions >= 0)
+                 & (k_positions <= pos))[None, None, None]
+    else:
+        valid = ((k_positions[None] >= 0)
+                 & (k_positions[None] <= pos[:, None]))[:, None, None]
+    scores = jnp.where(valid, scores, _NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", probs.astype(v_cache.dtype),
                      v_cache, preferred_element_type=jnp.float32)
@@ -321,8 +330,9 @@ def gqa_decode_paged(cfg: ModelConfig, p: dict, x_t: jax.Array,
 
     x_t: (B, d); k_pages/v_pages: (P, page_size, KV, Dh) — one layer's
     slice of the page pool; block_table: (B, NB) int32 page ids;
-    pos: scalar int32; cache_len: static dense-equivalent cache length
-    (prompt + max_new).
+    pos: scalar int32, or (B,) int32 per-row positions (step-level
+    serving mixes rows at different depths in one decode batch);
+    cache_len: static dense-equivalent cache length (prompt + max_new).
 
     Bit-equivalence contract: the gathered page view sliced to
     ``cache_len`` feeds the *same* ``decode_attention`` with the same
@@ -338,14 +348,21 @@ def gqa_decode_paged(cfg: ModelConfig, p: dict, x_t: jax.Array,
         b, cfg.num_heads, hd)
     k = jnp.einsum("bd,dh->bh", x_t, p["wk"]).reshape(b, kv, hd)
     v = jnp.einsum("bd,dh->bh", x_t, p["wv"]).reshape(b, kv, hd)
+    per_row = jnp.ndim(pos) == 1
     if cfg.use_rope:
-        pos_b = jnp.broadcast_to(pos, (1, 1))
+        pos_b = pos[:, None] if per_row else jnp.broadcast_to(
+            pos, (1, 1))
         q = apply_rope(q[:, None], pos_b, cfg.rope_theta)[:, 0]
         k = apply_rope(k[:, None], pos_b, cfg.rope_theta)[:, 0]
 
     ps = k_pages.shape[1]
-    page_ids = jnp.take(block_table, pos // ps, axis=1)      # (B,)
-    slot = pos % ps
+    if per_row:
+        page_ids = jnp.take_along_axis(
+            block_table, (pos // ps)[:, None], axis=1)[:, 0]  # (B,)
+        slot = pos % ps                                       # (B,)
+    else:
+        page_ids = jnp.take(block_table, pos // ps, axis=1)   # (B,)
+        slot = pos % ps
     k_pages = k_pages.at[page_ids, slot].set(
         k.astype(k_pages.dtype))
     v_pages = v_pages.at[page_ids, slot].set(
@@ -368,6 +385,82 @@ def gqa_decode_paged(cfg: ModelConfig, p: dict, x_t: jax.Array,
                                jnp.arange(cache_len), pos)
     out = out.reshape(b, cfg.num_heads * hd)
     y = jnp.einsum("bh,hd->bd", out, p["wo"])
+    return y, k_pages, v_pages
+
+
+def gqa_prefill_chunk_paged(cfg: ModelConfig, p: dict, x: jax.Array,
+                            k_pages: jax.Array, v_pages: jax.Array,
+                            block_table: jax.Array,
+                            start_pos: jax.Array, *, prompt_len: int
+                            ) -> Tuple[jax.Array, jax.Array,
+                                       jax.Array]:
+    """One layer's chunked-prefill GQA attention against paged KV.
+
+    x: (B, C, d) hidden states of each row's chunk covering absolute
+    positions [start_pos[b], start_pos[b] + C); start_pos: (B,) int32
+    *per-row* chunk offsets — traced, not static, so rows at different
+    prefill depths share one compiled program (the step loop batches
+    every row needing a chunk this tick into one launch);
+    k_pages/v_pages: (P, page_size, KV, Dh) one layer's page-pool
+    slice; block_table: (B, NB) page ids covering at least
+    ``prompt_len`` positions. Writes the chunk's rope'd K/V into the
+    pages, then attends the chunk queries over the gathered page view.
+    Returns (y (B, C, d), k_pages, v_pages).
+
+    Bit-equivalence contract: the key axis is always gathered to the
+    *full static* ``prompt_len`` — the same reduction length the
+    one-shot prefill's attention uses — never to ``start + C``.
+    Key-axis reductions (softmax normaliser, the PV contraction) are
+    only reproducible when their length matches: padding with masked
+    lanes is exact (masked scores are -1e30, their probabilities exact
+    zeros), but a *shorter* axis regroups the partial sums and drifts
+    by ulps. Slots past a row's ``start + C`` hold finite stale page
+    bytes and are causally masked, exactly like the one-shot path
+    masks the not-yet-attended suffix. (For ``prompt_len`` an exact
+    multiple of the flash block the one-shot path switches to the
+    blockwise-softmax kernel; chunked prefill keeps the plain masked
+    softmax, so its bit-contract holds for the non-blockwise regime —
+    every prompt below ``_FLASH_BLOCK`` tokens.)
+    """
+    b, c, _ = x.shape
+    hd = cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+    positions = start_pos[:, None] + jnp.arange(c)[None]   # (B, C)
+    q, k, v = gqa_project_qkv(cfg, p, x)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    # scatter the chunk's K/V into the pages first, so attention reads
+    # every key (prefix and self) from the same storage the decode
+    # steps will — and so the Pallas kernel path needs no concat
+    ps = k_pages.shape[1]
+    page_ids = jnp.take_along_axis(block_table, positions // ps,
+                                   axis=1)                 # (B, C)
+    slots = positions % ps
+    k_pages = k_pages.at[page_ids, slots].set(
+        k.astype(k_pages.dtype))
+    v_pages = v_pages.at[page_ids, slots].set(
+        v.astype(v_pages.dtype))
+
+    if cfg.use_pallas:
+        # TPU deployment: paged chunk-prefill kernel reads the pages in
+        # place. Off-TPU the op dispatches to the gather-based oracle.
+        from repro.kernels import ops
+        out = ops.chunked_prefill_attention(
+            q, k_pages, v_pages, block_table, positions,
+            prompt_len=prompt_len)
+    else:
+        nb = block_table.shape[1]
+        k_all = k_pages[block_table].reshape(
+            b, nb * ps, kv, hd)[:, :prompt_len]
+        v_all = v_pages[block_table].reshape(
+            b, nb * ps, kv, hd)[:, :prompt_len]
+        mask = positions[:, :, None] >= \
+            jnp.arange(prompt_len)[None, None]             # (B, C, S)
+        out = full_attention(q, k_all, v_all, mask)
+    out = out.reshape(b, c, cfg.num_heads * hd)
+    y = jnp.einsum("bsh,hd->bsd", out, p["wo"])
     return y, k_pages, v_pages
 
 

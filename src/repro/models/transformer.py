@@ -579,13 +579,70 @@ def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
     return _logits(cfg, params, x[:, -1]), k_pages, v_pages
 
 
+def prefill_chunk_paged(cfg: ModelConfig, params: dict,
+                        tokens: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block_table: jax.Array,
+                        start_pos: jax.Array, *, prompt_len: int,
+                        moe_shards: int = 1
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One chunk of a paged prompt prefill.
+
+    tokens: (B, C) — each row's prompt slice covering absolute
+    positions [start_pos[b], start_pos[b] + C); start_pos: (B,) int32
+    per-row offsets (traced — rows at different prefill depths share
+    one compiled program); block_table: (B, NB) page ids covering at
+    least ``prompt_len`` positions, with every chunk before a row's
+    ``start_pos`` already written by earlier calls. Returns
+    (last-chunk-position logits (B, V), k_pages, v_pages).
+
+    Bit-equivalence contract: running chunks [0,C), [C,2C), ... [.., S)
+    through this function yields K/V pages and final-position logits
+    bit-identical to one ``prefill_paged`` call over the whole prompt.
+    Per-token math (embedding, norms, MLP, output head) is position
+    independent; attention reads the prefix from the same pages the
+    one-shot path writes and always reduces over the full static
+    ``prompt_len`` key axis (see ``attn.gqa_prefill_chunk_paged``), so
+    no floating-point reduction regroups across chunk boundaries.
+    """
+    assert paged_supported(cfg), cfg.name
+    # the one-shot path switches to blockwise online softmax exactly
+    # when prompt_len is a multiple of the flash block (attention.py
+    # flash_attention); chunked prefill keeps the plain masked softmax
+    # and would silently drift by ulps there — fail loudly instead
+    assert (prompt_len <= attn._FLASH_BLOCK
+            or prompt_len % attn._FLASH_BLOCK != 0), (
+        f"chunked prefill is bit-exact only off the flash-block grid "
+        f"(prompt_len={prompt_len} is a multiple of "
+        f"{attn._FLASH_BLOCK}); use one-shot prefill_paged")
+    b, c = tokens.shape
+    x = _embed_inputs(cfg, params, tokens, None)
+
+    def body(x, xs):
+        lp, kp, vp = xs
+        h = norm_apply(cfg, lp["attn_norm"], x)
+        a, kp, vp = attn.gqa_prefill_chunk_paged(
+            cfg, lp["attn"], h, kp, vp, block_table, start_pos,
+            prompt_len=prompt_len)
+        x = x + a
+        h = norm_apply(cfg, lp["mlp_norm"], x)
+        y, _ = mlp_apply(cfg, lp["mlp"], h, moe_shards)
+        return x + y, (kp, vp)
+
+    x, (k_pages, v_pages) = stack_scan(
+        cfg, body, x, (params["layers"], k_pages, v_pages),
+        cfg.num_layers)
+    return _logits(cfg, params, x[:, -1]), k_pages, v_pages
+
+
 def decode_step_paged(cfg: ModelConfig, params: dict,
                       k_pages: jax.Array, v_pages: jax.Array,
                       block_table: jax.Array, token: jax.Array,
                       pos: jax.Array, *, cache_len: int
                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One decode step over the paged cache. token: (B,) int32;
-    pos: scalar int32; cache_len: static dense-equivalent cache length.
+    pos: scalar int32, or (B,) int32 per-row positions (the step-level
+    loop advances mixed batches whose rows sit at different depths);
+    cache_len: static dense-equivalent cache length.
     Writes each layer's K/V at ``pos`` into the row's block-table page
     and returns (logits, updated k_pages, updated v_pages)."""
     assert paged_supported(cfg), cfg.name

@@ -1,8 +1,11 @@
 from repro.sampling.sampler import (
-    GenerateOutput, batch_invariant, decode_paged, decode_text,
-    fork_pages, generate, generate_samples, prefill_paged,
-    sample_token, tile_cache)
+    GenerateOutput, batch_invariant, decode_paged, decode_step_rows,
+    decode_text, fork_pages, generate, generate_samples,
+    member_row_keys, prefill_chunk_paged, prefill_paged,
+    probe_row_keys, sample_token, sample_token_rows, tile_cache)
 
 __all__ = ["GenerateOutput", "batch_invariant", "decode_paged",
-           "decode_text", "fork_pages", "generate", "generate_samples",
-           "prefill_paged", "sample_token", "tile_cache"]
+           "decode_step_rows", "decode_text", "fork_pages", "generate",
+           "generate_samples", "member_row_keys", "prefill_chunk_paged",
+           "prefill_paged", "probe_row_keys", "sample_token",
+           "sample_token_rows", "tile_cache"]

@@ -43,6 +43,61 @@ def sample_token(logits: jax.Array, temperature: float,
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
+def sample_token_rows(logits: jax.Array, temperature: float,
+                      row_keys: jax.Array,
+                      steps: jax.Array) -> jax.Array:
+    """Batch-composition-invariant sampling: one private key stream
+    per row. logits: (B, V); row_keys: (B, 2) uint32 raw PRNG keys;
+    steps: scalar or (B,) int32 decode-step index per row. Row i draws
+    from categorical(fold_in(row_keys[i], steps[i]), logits[i]) — a
+    pure function of that row alone, so a row emits identical tokens
+    whatever batch it shares. ``sample_token`` draws the whole batch's
+    Gumbel noise from one key, which couples every row to the batch
+    shape — fine for lockstep waves, fatal for step-level batching.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    steps = jnp.broadcast_to(steps, (logits.shape[0],))
+
+    def draw(key, row, t):
+        return jax.random.categorical(jax.random.fold_in(key, t), row)
+
+    return jax.vmap(draw)(row_keys, scaled, steps).astype(jnp.int32)
+
+
+# row-key streams: disjoint tags keep probe and ensemble draws
+# independent even for the same admission index
+_PROBE_KEY_TAG = 0x5052_4f42      # "PROB"
+_MEMBER_KEY_TAG = 0x454d_4245     # "EMBE"
+
+
+def probe_row_keys(base_key: jax.Array, admission_indices,
+                   n_samples: int) -> jax.Array:
+    """Per-(task, sample) probe decode keys, (len(indices)*n, 2).
+
+    Row ``i*n + j`` is sample j of the task with admission index
+    ``admission_indices[i]`` — a stable identity shared by the wave
+    and step-level execution paths, which is what makes their sampled
+    tokens bit-identical under different batch compositions."""
+    idx = jnp.asarray(list(admission_indices), jnp.uint32)
+    tagged = jax.random.fold_in(base_key, _PROBE_KEY_TAG)
+    per_task = jax.vmap(jax.random.fold_in, (None, 0))(tagged, idx)
+    per_sample = jax.vmap(
+        lambda k: jax.vmap(jax.random.fold_in, (None, 0))(
+            k, jnp.arange(n_samples, dtype=jnp.uint32)))(per_task)
+    return per_sample.reshape(idx.shape[0] * n_samples, -1)
+
+
+def member_row_keys(base_key: jax.Array, admission_indices,
+                    member_idx: int) -> jax.Array:
+    """Per-task ensemble decode keys for one member, (len(indices), 2)."""
+    idx = jnp.asarray(list(admission_indices), jnp.uint32)
+    tagged = jax.random.fold_in(
+        jax.random.fold_in(base_key, _MEMBER_KEY_TAG), member_idx)
+    return jax.vmap(jax.random.fold_in, (None, 0))(tagged, idx)
+
+
 def batch_invariant(cfg: ModelConfig) -> bool:
     """True when one row's forward pass cannot depend on which other
     rows share the batch. Dense / SSM / hybrid stacks compute strictly
@@ -56,22 +111,30 @@ def batch_invariant(cfg: ModelConfig) -> bool:
 def _decode_scan(cfg: ModelConfig, params: dict, cache, logits0,
                  start_pos: int, batch: int, max_new_tokens: int,
                  temperature: float, key: jax.Array, eos_id: int,
-                 pad_id: int, decode_fn=None
+                 pad_id: int, decode_fn=None, row_keys=None
                  ) -> Tuple[GenerateOutput, object]:
     """Shared fixed-length decode loop over an existing prefill cache.
 
     ``decode_fn(cache, token, pos) -> (logits, cache)`` overrides the
     per-step transition — the paged path threads (k_pages, v_pages)
-    through it; the default is the dense ``T.decode_step``. Returns the
+    through it; the default is the dense ``T.decode_step``. With
+    ``row_keys`` ((B, 2) uint32), sampling switches to the per-row key
+    streams of ``sample_token_rows`` (step i of row r draws from
+    fold_in(row_keys[r], i)) — the batch-composition-invariant scheme
+    the step-level serving loop replays one step at a time. Returns the
     final cache alongside the output (dense callers drop it; the paged
     path must keep its updated pages)."""
     if decode_fn is None:
         def decode_fn(cache, token, pos):
             return T.decode_step(cfg, params, cache, token, pos)
 
-    def body(carry, step_key):
+    def body(carry, step_in):
         cache, logits, pos, done = carry
-        tok = sample_token(logits, temperature, step_key)
+        if row_keys is None:
+            tok = sample_token(logits, temperature, step_in)
+        else:
+            tok = sample_token_rows(logits, temperature, row_keys,
+                                    step_in)
         logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
         tok_logp = jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
         emit = jnp.where(done, pad_id, tok)
@@ -80,11 +143,12 @@ def _decode_scan(cfg: ModelConfig, params: dict, cache, logits0,
         return ((cache, next_logits, pos + 1, new_done),
                 (emit, jnp.where(done, 0.0, tok_logp), ~done))
 
-    keys = jax.random.split(key, max_new_tokens)
+    steps = jnp.arange(max_new_tokens) if row_keys is not None \
+        else jax.random.split(key, max_new_tokens)
     init = (cache, logits0, jnp.int32(start_pos),
             jnp.zeros((batch,), bool))
     (cache, _, _, _), (toks, logps, live) = jax.lax.scan(body, init,
-                                                         keys)
+                                                         steps)
     toks = toks.T                      # (B, max_new)
     logps = logps.T
     # a row emits a real token (possibly EOS, possibly one that merely
@@ -103,9 +167,12 @@ def generate(cfg: ModelConfig, params: dict, prompt_tokens: jax.Array,
              *, max_new_tokens: int, temperature: float = 0.0,
              key: Optional[jax.Array] = None, eos_id: int = -1,
              pad_id: int = 0,
-             frontend_embeds: Optional[jax.Array] = None
+             frontend_embeds: Optional[jax.Array] = None,
+             row_keys: Optional[jax.Array] = None
              ) -> GenerateOutput:
-    """prompt_tokens: (B, S) int32 — fixed-length prompts."""
+    """prompt_tokens: (B, S) int32 — fixed-length prompts.
+    ``row_keys`` ((B, 2) uint32) switches sampling to per-row key
+    streams (batch-composition invariant; see ``sample_token_rows``)."""
     b, s = prompt_tokens.shape
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -114,7 +181,7 @@ def generate(cfg: ModelConfig, params: dict, prompt_tokens: jax.Array,
                                frontend_embeds, cache_len=total)
     out, _ = _decode_scan(cfg, params, cache, logits0, s, b,
                           max_new_tokens, temperature, key, eos_id,
-                          pad_id)
+                          pad_id, row_keys=row_keys)
     return out
 
 
@@ -152,7 +219,8 @@ def generate_samples(cfg: ModelConfig, params: dict,
                      max_new_tokens: int, temperature: float = 0.0,
                      key: Optional[jax.Array] = None, eos_id: int = -1,
                      pad_id: int = 0,
-                     frontend_embeds: Optional[jax.Array] = None
+                     frontend_embeds: Optional[jax.Array] = None,
+                     row_keys: Optional[jax.Array] = None
                      ) -> GenerateOutput:
     """N samples per prompt with a single shared-prefix prefill.
 
@@ -173,7 +241,7 @@ def generate_samples(cfg: ModelConfig, params: dict,
     logits0 = jnp.repeat(logits0, n, axis=0)
     out, _ = _decode_scan(cfg, params, cache, logits0, s, b * n,
                           max_new_tokens, temperature, key, eos_id,
-                          pad_id)
+                          pad_id, row_keys=row_keys)
     return out
 
 
@@ -216,7 +284,8 @@ def decode_paged(cfg: ModelConfig, params: dict, logits0: jax.Array,
                  block_table: jax.Array, key: jax.Array, *,
                  start_pos: int, max_new_tokens: int,
                  temperature: float = 0.0, eos_id: int = -1,
-                 pad_id: int = 0):
+                 pad_id: int = 0,
+                 row_keys: Optional[jax.Array] = None):
     """Fixed-length decode over a paged cache, from prefill logits.
 
     logits0: (B, V) last-prompt-position logits (freshly computed or
@@ -241,8 +310,63 @@ def decode_paged(cfg: ModelConfig, params: dict, logits0: jax.Array,
     out, (k_pages, v_pages) = _decode_scan(
         cfg, params, (k_pages, v_pages), logits0, start_pos, b,
         max_new_tokens, temperature, key, eos_id, pad_id,
-        decode_fn=decode_fn)
+        decode_fn=decode_fn, row_keys=row_keys)
     return out, k_pages, v_pages
+
+
+# ----------------------------------------------------------------------
+# step-level programs (serving/step_loop.py drives these one logical
+# tick at a time: mixed batches, per-row positions and key streams)
+# ----------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "prompt_len"))
+def prefill_chunk_paged(cfg: ModelConfig, params: dict,
+                        tokens: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block_table: jax.Array,
+                        start_pos: jax.Array, *, prompt_len: int):
+    """One prompt chunk appended to the paged cache. tokens: (B, C)
+    covering absolute positions [start_pos[b], start_pos[b] + C) per
+    row — start offsets are traced, so mixed-depth rows share one
+    compiled program; block_table: (B, NB). Returns (chunk-final
+    logits (B, V), k_pages, v_pages); bit-identical composition with
+    ``prefill_paged`` — see ``models.transformer.prefill_chunk_paged``.
+    """
+    return T.prefill_chunk_paged(cfg, params, tokens, k_pages,
+                                 v_pages, block_table, start_pos,
+                                 prompt_len=prompt_len)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "cache_len", "temperature", "eos_id",
+                     "pad_id"))
+def decode_step_rows(cfg: ModelConfig, params: dict,
+                     logits: jax.Array, k_pages: jax.Array,
+                     v_pages: jax.Array, block_table: jax.Array,
+                     pos: jax.Array, row_keys: jax.Array,
+                     steps: jax.Array, done: jax.Array, *,
+                     cache_len: int, temperature: float,
+                     eos_id: int, pad_id: int):
+    """One decode step for a mixed batch of rows.
+
+    logits: (B, V) each row's pending next-token logits; pos: (B,)
+    per-row write position; steps: (B,) per-row decode-step index;
+    done: (B,) rows already past EOS. Mirrors one iteration of
+    ``_decode_scan``'s body exactly (same sampling, logprob, emit and
+    done arithmetic), so replaying it step-by-step over any batch
+    composition emits the same per-row tokens the fixed-length scan
+    does. Returns (emit, logprob, live, new_done, next_logits,
+    k_pages, v_pages)."""
+    tok = sample_token_rows(logits, temperature, row_keys, steps)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    tok_logp = jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
+    emit = jnp.where(done, pad_id, tok)
+    new_done = done | (tok == eos_id)
+    next_logits, k_pages, v_pages = T.decode_step_paged(
+        cfg, params, k_pages, v_pages, block_table, emit, pos,
+        cache_len=cache_len)
+    return (emit, jnp.where(done, 0.0, tok_logp), ~done, new_done,
+            next_logits, k_pages, v_pages)
 
 
 def decode_text(tokens, detok) -> list:

@@ -13,7 +13,9 @@ from repro.serving.metrics import PromCounters
 from repro.serving.queue import (
     AdmissionQueue, MicroBatch, MicroBatchPolicy, Request)
 from repro.serving.scheduler import (
-    ContinuousBatchingScheduler, ProbeCache, SchedulerStats)
+    ContinuousBatchingScheduler, ProbeCache, SchedulerStats,
+    StepPlanner)
+from repro.serving.step_loop import StepLoopRunner, StepStats
 
 __all__ = [
     "AdmissionQueue", "BatchedACAREngine", "BatchResult",
@@ -22,6 +24,7 @@ __all__ = [
     "MicroBatchPolicy", "PageAccountingError", "PagePool",
     "PagePoolError", "PagedKVServer", "PoolExhausted", "ProbeCache",
     "ProbeHandle", "PromCounters", "QueuedServeResult", "Request",
-    "SchedulerStats", "ZooModel", "bucket_size", "dense_tile_slots",
-    "intern_answers", "judge_batch", "pages_for", "plan_compaction",
+    "SchedulerStats", "StepLoopRunner", "StepPlanner", "StepStats",
+    "ZooModel", "bucket_size", "dense_tile_slots", "intern_answers",
+    "judge_batch", "pages_for", "plan_compaction",
 ]

@@ -49,10 +49,13 @@ from repro.core.sigma import (
 from repro.data import tokenizer as tok
 from repro.data.tasks import Task
 from repro.models.transformer import paged_supported
-from repro.sampling import batch_invariant, generate, generate_samples
+from repro.sampling import (
+    batch_invariant, generate, generate_samples, member_row_keys,
+    probe_row_keys)
 from repro.serving.compaction import (
     CompactionStats, plan_compaction)
-from repro.serving.kv_pool import KVStats, PagedKVServer, ProbeHandle
+from repro.serving.kv_pool import (
+    KVStats, PagedKVServer, PoolExhausted, ProbeHandle)
 from repro.serving.metrics import PromCounters
 from repro.serving.queue import AdmissionQueue, MicroBatchPolicy
 
@@ -159,6 +162,19 @@ class BatchedACAREngine:
         self._kv_servers: Dict[int, PagedKVServer] = {}
         self._kv_emitted: Dict[Tuple[str, str], int] = {}
         self.route_fn = route_fn or route_batch
+        # a route_fn may take (sigma, admission_indices) so forced-mode
+        # benchmarks stay deterministic under out-of-order (step-level)
+        # route resolution; plain sigma-only callables keep working
+        import inspect
+        try:
+            n_params = len([
+                p for p in inspect.signature(
+                    self.route_fn).parameters.values()
+                if p.kind in (p.POSITIONAL_ONLY,
+                              p.POSITIONAL_OR_KEYWORD)])
+        except (TypeError, ValueError):
+            n_params = 1
+        self._route_takes_indices = n_params >= 2
 
     # -- paged KV servers ----------------------------------------------
     def _kv_server(self, zm: ZooModel) -> Optional[PagedKVServer]:
@@ -191,8 +207,17 @@ class BatchedACAREngine:
     def _decode_texts(self, out_tokens) -> List[str]:
         return [tok.decode(row) for row in np.asarray(out_tokens)]
 
+    def route_modes(self, sig, admission_indices) -> jax.Array:
+        """Invoke route_fn, passing admission indices when it wants
+        them (forced-rate benchmarks key modes off task identity so
+        wave and step execution force the same routes)."""
+        if self._route_takes_indices:
+            return self.route_fn(sig, list(admission_indices))
+        return self.route_fn(sig)
+
     def _probe_decode(self, ids: np.ndarray, key: jax.Array,
-                      stats: CompactionStats) -> List[str]:
+                      stats: CompactionStats,
+                      row_keys=None) -> List[str]:
         """N-sample probe decode; prefers the shared-prefix path."""
         b, s = ids.shape
         n = self.acfg.n_probe_samples
@@ -202,7 +227,8 @@ class BatchedACAREngine:
                 self.probe.cfg, self.probe.params, jnp.asarray(ids), n,
                 max_new_tokens=self.max_new_tokens,
                 temperature=self.acfg.probe_temperature,
-                key=key, eos_id=tok.EOS, pad_id=tok.PAD)
+                key=key, eos_id=tok.EOS, pad_id=tok.PAD,
+                row_keys=row_keys)
             saved = b * (n - 1) * s
             stats.probe_prefill_tokens_saved += saved
             stats.probe_prefill_flops_saved += \
@@ -215,25 +241,34 @@ class BatchedACAREngine:
                 jnp.asarray(np.repeat(ids, n, axis=0)),
                 max_new_tokens=self.max_new_tokens,
                 temperature=self.acfg.probe_temperature,
-                key=key, eos_id=tok.EOS, pad_id=tok.PAD)
+                key=key, eos_id=tok.EOS, pad_id=tok.PAD,
+                row_keys=row_keys)
         return self._decode_texts(out.tokens)
 
     def _member_decode(self, zm: ZooModel,
                        srv_m: Optional[PagedKVServer],
-                       sub_ids: np.ndarray, mkey: jax.Array):
+                       sub_ids: np.ndarray, mkey: jax.Array,
+                       row_keys=None):
         """One ensemble member decode over ``sub_ids`` rows: paged
         when the member's config supports it, dense otherwise —
-        bit-identical either way."""
+        bit-identical either way. A paged decode that exhausts its
+        pool even after cost-aware prefix eviction falls back to the
+        dense path (same bits) instead of failing the wave."""
         if srv_m is not None:
-            return srv_m.generate(
-                zm.params, sub_ids,
-                max_new_tokens=self.max_new_tokens,
-                temperature=self.acfg.ensemble_temperature,
-                key=mkey, eos_id=tok.EOS, pad_id=tok.PAD)
+            try:
+                return srv_m.generate(
+                    zm.params, sub_ids,
+                    max_new_tokens=self.max_new_tokens,
+                    temperature=self.acfg.ensemble_temperature,
+                    key=mkey, eos_id=tok.EOS, pad_id=tok.PAD,
+                    row_keys=row_keys)
+            except PoolExhausted:
+                pass
         return generate(zm.cfg, zm.params, jnp.asarray(sub_ids),
                         max_new_tokens=self.max_new_tokens,
                         temperature=self.acfg.ensemble_temperature,
-                        key=mkey, eos_id=tok.EOS, pad_id=tok.PAD)
+                        key=mkey, eos_id=tok.EOS, pad_id=tok.PAD,
+                        row_keys=row_keys)
 
     def _member_compactable(self, zm: ZooModel) -> bool:
         """Compaction must not perturb the decoded rows: greedy decode
@@ -245,7 +280,8 @@ class BatchedACAREngine:
 
     def _probe_decode_paged(self, ids: np.ndarray, key: jax.Array,
                             stats: CompactionStats,
-                            kv_srv: PagedKVServer
+                            kv_srv: PagedKVServer,
+                            row_keys=None
                             ) -> Tuple[List[str], ProbeHandle]:
         """Paged N-sample probe: one prefill per uncached prompt, the
         samples share read-only prefix pages (kv_pool COW fork), and
@@ -260,7 +296,7 @@ class BatchedACAREngine:
             self.probe.params, ids, n,
             max_new_tokens=self.max_new_tokens,
             temperature=self.acfg.probe_temperature, key=key,
-            eos_id=tok.EOS, pad_id=tok.PAD)
+            eos_id=tok.EOS, pad_id=tok.PAD, row_keys=row_keys)
         computed = kv_srv.stats.prefill_tokens_computed - computed0
         saved = b * n * s - computed
         stats.probe_prefill_tokens += computed
@@ -269,21 +305,38 @@ class BatchedACAREngine:
             2.0 * self.probe.cfg.active_param_count() * saved
         return self._decode_texts(out.tokens), handle
 
-    def run_batch(self, tasks: Sequence[Task]) -> BatchResult:
+    def run_batch(self, tasks: Sequence[Task],
+                  start_index: int = 0) -> BatchResult:
+        """One wave over ``tasks``. ``start_index`` is the admission
+        index of the first row — the stable per-task identity that
+        seeds every row's sampling key stream, so a task emits the
+        same tokens whether it is served in this wave, a different
+        wave, or the step-level loop."""
         t0 = time.perf_counter()
         b = len(tasks)
         n = self.acfg.n_probe_samples
         ids = tok.encode_aligned([t.text for t in tasks])
         key = jax.random.PRNGKey(self.acfg.seed)
+        admission = list(range(start_index, start_index + b))
+        probe_keys = probe_row_keys(key, admission, n)
         stats = CompactionStats(batch=b)
         kv_srv = self._kv_server(self.probe) if self.shared_prefix \
             else None
         handle: Optional[ProbeHandle] = None
         if kv_srv is not None:
-            texts, handle = self._probe_decode_paged(ids, key, stats,
-                                                     kv_srv)
+            try:
+                texts, handle = self._probe_decode_paged(
+                    ids, key, stats, kv_srv, row_keys=probe_keys)
+            except PoolExhausted:
+                # cost-aware eviction could not free enough pages:
+                # serve the wave on the dense path (same bits) rather
+                # than failing it
+                kv_srv = None
+                texts = self._probe_decode(ids, key, stats,
+                                           row_keys=probe_keys)
         else:
-            texts = self._probe_decode(ids, key, stats)
+            texts = self._probe_decode(ids, key, stats,
+                                       row_keys=probe_keys)
         try:
             answers = [extract(texts[i * n + j], tasks[i].kind)
                        for i in range(b) for j in range(n)]
@@ -293,7 +346,7 @@ class BatchedACAREngine:
             answer_ids = intern_answers(answers, id_table).reshape(b, n)
 
             sig = sigma_batch(jnp.asarray(answer_ids))
-            modes = self.route_fn(sig)
+            modes = self.route_modes(sig, admission)
             probe_major = majority_vote_batch(jnp.asarray(answer_ids))
 
             # ensemble decodes over the escalated subset: gather sigma>0
@@ -330,6 +383,8 @@ class BatchedACAREngine:
                 srv_m = self._kv_server(zm)
                 if self._member_compactable(zm) and mp.bucket < b:
                     rows = mp.padded_rows()
+                    mrk = member_row_keys(
+                        key, [start_index + int(r) for r in rows], mi)
                     if (handle is not None
                             and self._kv_reuse_member(zm, kv_srv)):
                         # seed from the probe's retained prompt pages:
@@ -338,10 +393,12 @@ class BatchedACAREngine:
                             self.probe.params, handle, rows.tolist(),
                             max_new_tokens=self.max_new_tokens,
                             temperature=self.acfg.ensemble_temperature,
-                            key=mkey, eos_id=tok.EOS, pad_id=tok.PAD)
+                            key=mkey, eos_id=tok.EOS, pad_id=tok.PAD,
+                            row_keys=mrk)
                     else:
                         mout = self._member_decode(zm, srv_m,
-                                                   ids[rows], mkey)
+                                                   ids[rows], mkey,
+                                                   row_keys=mrk)
                     sub_texts = self._decode_texts(mout.tokens)
                     for j, r in enumerate(mp.rows):
                         a = extract(sub_texts[j], tasks[r].kind)
@@ -349,7 +406,9 @@ class BatchedACAREngine:
                         member_answers[r][mi] = a
                     decoded_rows = mp.bucket
                 else:
-                    mout = self._member_decode(zm, srv_m, ids, mkey)
+                    mout = self._member_decode(
+                        zm, srv_m, ids, mkey,
+                        row_keys=member_row_keys(key, admission, mi))
                     mtexts = self._decode_texts(mout.tokens)
                     for r in mp.rows:
                         a = extract(mtexts[r], tasks[r].kind)
@@ -368,7 +427,7 @@ class BatchedACAREngine:
             final_ids = judge_batch(member_ids, probe_major, modes)
             rev = {v: k for k, v in id_table.items()}
             final_answers = [rev[int(i)] for i in np.asarray(final_ids)]
-            saved = int(np.sum(3 - np.where(
+            saved = int(np.sum(len(self.ensemble) - np.where(
                 modes_np == 0, 0,
                 np.where(modes_np == 1, self.acfg.arena_lite_size,
                          len(self.ensemble)))))
@@ -406,7 +465,9 @@ class BatchedACAREngine:
         batch_results: List[BatchResult] = []
         batch_sizes: List[int] = []
         for batch in queue.drain_batches():
-            res = self.run_batch([r.task for r in batch.requests])
+            res = self.run_batch(
+                [r.task for r in batch.requests],
+                start_index=batch.requests[0].admission_index)
             batch_results.append(res)
             batch_sizes.append(len(batch))
             metrics.inc("acar_engine_batches_total",
@@ -477,6 +538,62 @@ class BatchedACAREngine:
                             for m in (r.member_answers or [])],
             kv=self.kv_stats() or None)
 
+    # ------------------------------------------------------------------
+    # step-level continuous batching entry point
+    # ------------------------------------------------------------------
+    def run_stepped(self, tasks: Sequence[Task],
+                    policy: MicroBatchPolicy = MicroBatchPolicy(), *,
+                    chunk_tokens: int = 8,
+                    max_active_rows: Optional[int] = None
+                    ) -> "QueuedServeResult":
+        """Serve a request stream through the step-level loop: rows
+        admitted from ``AdmissionQueue.ready()`` the moment the page
+        budget opens, prompts prefilled in ``chunk_tokens`` chunks,
+        probe/ensemble decodes advanced one token per logical tick
+        over mixed bucketed batches, finished rows retired (pages
+        freed) mid-stream. Emits exactly the per-task outputs
+        ``run_queued`` emits — bit-identical sigma, modes, probe
+        texts, member answers and final answers — in admission order
+        (``tests/harness/simulate.py --step-loop`` enforces this)."""
+        from repro.serving.scheduler import StepPlanner
+        from repro.serving.step_loop import StepLoopRunner
+        t0 = time.perf_counter()
+        queue = AdmissionQueue(policy)
+        for t in tasks:
+            queue.submit(t)
+        planner = StepPlanner(
+            chunk_tokens=chunk_tokens,
+            max_active_rows=max_active_rows or policy.max_batch_size)
+        metrics = PromCounters()
+        runner = StepLoopRunner(self, queue, planner, metrics)
+        step_stats = runner.run()
+        self._emit_kv_metrics(metrics)
+
+        rows = [runner.done_rows[i] for i in range(len(tasks))]
+        saved = sum(
+            len(self.ensemble) - sum(
+                1 for mi in range(len(self.ensemble))
+                if r.mode >= (1 if mi < self.acfg.arena_lite_size
+                              else 2))
+            for r in rows)
+        admit_ticks: Dict[int, int] = {}
+        for a, (_, adm, _) in sorted(step_stats.timeline.items()):
+            admit_ticks[adm] = admit_ticks.get(adm, 0) + 1
+        return QueuedServeResult(
+            sigma=np.asarray([r.sigma for r in rows], np.float32),
+            modes=np.asarray([r.mode for r in rows], np.int32),
+            final_answers=[r.final_answer for r in rows],
+            batch_sizes=[v for _, v in sorted(admit_ticks.items())],
+            ensemble_calls_saved=saved,
+            wall_ms=(time.perf_counter() - t0) * 1e3,
+            metrics=metrics,
+            probe_texts=[r.probe_texts for r in rows],
+            member_answers=[r.member_answers or
+                            [None] * len(self.ensemble)
+                            for r in rows],
+            kv=self.kv_stats() or None,
+            step=step_stats)
+
     def _emit_kv_metrics(self, metrics: PromCounters) -> None:
         """Per-batch paged-KV exposition: pool gauges plus monotonic
         prefill-reuse counters (deltas since the last emission, so
@@ -520,3 +637,5 @@ class QueuedServeResult:
     member_answers: Optional[List[List[Optional[str]]]] = None
     # paged-KV accounting per model server (None when paged KV is off)
     kv: Optional[Dict[str, KVStats]] = None
+    # step-loop accounting (None for wave-lockstep execution)
+    step: Optional[object] = None

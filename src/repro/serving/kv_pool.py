@@ -165,6 +165,8 @@ class KVStats:
     prefill_tokens_reused_probe: int = 0    # probe -> ensemble seeding
     prefill_tokens_reused_prefix: int = 0   # cross-request prompt reuse
     cow_forks: int = 0                  # partial-tail pages materialised
+    prefill_chunks: int = 0             # chunked-prefill calls issued
+    prefix_evictions: int = 0           # cost-aware cache evictions
 
     @property
     def prefill_tokens_reused(self) -> int:
@@ -191,6 +193,24 @@ class _PrefixEntry:
     shared: np.ndarray          # full prompt pages (read-only, cache ref)
     tail: Optional[int]         # pristine partial prompt-tail page
     logits0: np.ndarray         # (V,) last-position prefill logits
+    tokens: int = 0             # prompt tokens a hit saves recomputing
+    hits: int = 0               # hits since insertion
+    seq: int = 0                # insertion order (deterministic ties)
+
+    @property
+    def pages_held(self) -> int:
+        return int(self.shared.size) + (1 if self.tail is not None
+                                        else 0)
+
+    @property
+    def score(self) -> float:
+        """Cost-aware retention value: prefill tokens saved per page
+        held. A hit saves ``tokens`` of prefill; un-hit entries carry
+        one optimistic expected hit so fresh prompts are not evicted
+        before they can prove themselves. Pure LRU evicts a hot long
+        prompt to keep a cold short one — this ranks by what eviction
+        actually costs."""
+        return self.tokens * (self.hits + 1) / max(self.pages_held, 1)
 
 
 # ----------------------------------------------------------------------
@@ -265,6 +285,7 @@ class PagedKVServer:
         self.v_pages = None
         self._scratch: Optional[np.ndarray] = None
         self._prefix: "OrderedDict[bytes, _PrefixEntry]" = OrderedDict()
+        self._prefix_seq = 0
         self._capacity_key: Optional[Tuple[int, int, int, int]] = None
         itemsize = np.dtype(cfg.dtype).itemsize
         self.stats = KVStats(
@@ -303,7 +324,13 @@ class PagedKVServer:
         import jax.numpy as jnp
         if self.pool is not None:
             self.drop_prefix_cache()
-            if self.pool.pages_in_use > scratch_pages:
+            # only the OLD scratch pages may remain held — they are
+            # discarded with the old pool; user pages must be gone
+            # (comparing against the NEW scratch size would spuriously
+            # reject rebuilds that shrink the scratch region)
+            old_scratch = self._scratch.size \
+                if self._scratch is not None else 0
+            if self.pool.pages_in_use > old_scratch:
                 raise PagePoolError(
                     "cannot rebuild the page pool while pages are held")
         cfg = self.cfg
@@ -339,41 +366,81 @@ class PagedKVServer:
             return None
         entry = self._prefix.get(key)
         if entry is not None:
-            self._prefix[key] = self._prefix.pop(key)   # refresh LRU
+            entry.hits += 1
         return entry
+
+    def _release_entry(self, entry: _PrefixEntry) -> None:
+        self.pool.release(entry.shared)
+        if entry.tail is not None:
+            self.pool.release([entry.tail])
+
+    def _evict_one(self) -> bool:
+        """Evict the lowest-value cache entry (prefill-tokens-saved
+        per page held; insertion order breaks ties deterministically).
+        Returns False when the cache is empty."""
+        if not self._prefix:
+            return False
+        worst = min(self._prefix,
+                    key=lambda k: (self._prefix[k].score,
+                                   self._prefix[k].seq))
+        self._release_entry(self._prefix.pop(worst))
+        self.stats.prefix_evictions += 1
+        return True
+
+    def evict_prefix(self, pages_needed: int) -> int:
+        """Cost-aware eviction until at least ``pages_needed`` pages
+        are free (or the cache is empty). Returns the free-page count.
+        The engine's evict-and-retry loop calls this on
+        ``PoolExhausted`` instead of failing the wave."""
+        while self.pool.free_pages < pages_needed and self._evict_one():
+            pass
+        self._sample_usage()
+        return self.pool.free_pages
+
+    def _alloc_retry(self, n: int) -> np.ndarray:
+        """Pool allocation with the evict-and-retry loop: on
+        exhaustion, shed prefix-cache entries (cheapest value per page
+        first) and retry; ``PoolExhausted`` only escapes once the
+        cache is empty and the pages genuinely do not exist."""
+        try:
+            return self.pool.alloc(n)
+        except PoolExhausted:
+            if self.evict_prefix(n) < n:
+                raise
+            return self.pool.alloc(n)
 
     def _prefix_insert(self, key: bytes, shared: np.ndarray,
                        tail: Optional[int],
-                       logits0: np.ndarray) -> None:
+                       logits0: np.ndarray, tokens: int = 0) -> None:
         if self.prefix_cache_entries <= 0:
             return
         old = self._prefix.pop(key, None)
         if old is not None:
-            self.pool.release(old.shared)
-            if old.tail is not None:
-                self.pool.release([old.tail])
+            self._release_entry(old)
         self.pool.retain(shared)
         if tail is not None:
             self.pool.retain([tail])
         self._prefix[key] = _PrefixEntry(
-            shared=shared.copy(), tail=tail, logits0=logits0.copy())
+            shared=shared.copy(), tail=tail, logits0=logits0.copy(),
+            tokens=tokens, seq=self._prefix_seq)
+        self._prefix_seq += 1
         while len(self._prefix) > self.prefix_cache_entries:
-            _, evicted = self._prefix.popitem(last=False)
-            self.pool.release(evicted.shared)
-            if evicted.tail is not None:
-                self.pool.release([evicted.tail])
+            self._evict_one()
 
     # -- waves ---------------------------------------------------------
     def probe_wave(self, params: dict, ids: np.ndarray, n_samples: int,
                    *, max_new_tokens: int, temperature: float,
-                   key, eos_id: int, pad_id: int):
+                   key, eos_id: int, pad_id: int, row_keys=None):
         """N-sample probe decode with shared prefix pages.
 
         One prefill per *distinct uncached* prompt; the N samples of a
         prompt share its full prompt pages read-only and fork only the
-        partial tail page (COW). Returns ``(GenerateOutput,
-        ProbeHandle)`` — the handle retains each row's prompt pages for
-        ensemble prefill seeding until ``resolve``/``close``.
+        partial tail page (COW). ``row_keys`` ((B*N, 2) uint32) opts
+        into per-row sampling key streams (batch-composition
+        invariant — required for step-loop equivalence). Returns
+        ``(GenerateOutput, ProbeHandle)`` — the handle retains each
+        row's prompt pages for ensemble prefill seeding until
+        ``resolve``/``close``.
         """
         import jax.numpy as jnp
         from repro.sampling import sampler as S
@@ -408,7 +475,7 @@ class PagedKVServer:
                     tail_rows.append(entry.tail)
                     self.stats.prefill_tokens_reused_prefix += s
                 else:
-                    pages = self.pool.alloc(nbp)
+                    pages = self._alloc_retry(nbp)
                     shared_rows.append(pages[:n_shared])
                     tail_rows.append(int(pages[n_shared])
                                      if tail_tokens else None)
@@ -446,7 +513,8 @@ class PagedKVServer:
             # 3. publish the fresh rows to the prefix cache
             for r in miss:
                 self._prefix_insert(ids[r].tobytes(), shared_rows[r],
-                                    tail_rows[r], logits0[r])
+                                    tail_rows[r], logits0[r],
+                                    tokens=s)
         except BaseException:
             for r in range(len(shared_rows)):
                 self.pool.release(shared_rows[r])
@@ -465,7 +533,7 @@ class PagedKVServer:
         sample_tails = None
         try:
             # 4. sample-private pages + COW fork of the partial tail
-            sample_tails = self.pool.alloc(b * n * n_tail).reshape(
+            sample_tails = self._alloc_retry(b * n * n_tail).reshape(
                 b, n, n_tail)
             self.stats.probe_pages_highwater = max(
                 self.stats.probe_pages_highwater,
@@ -491,7 +559,9 @@ class PagedKVServer:
                 jnp.asarray(np.repeat(logits0, n, axis=0)),
                 self.k_pages, self.v_pages, jnp.asarray(block_table),
                 key, start_pos=s, max_new_tokens=max_new_tokens,
-                temperature=temperature, eos_id=eos_id, pad_id=pad_id)
+                temperature=temperature, eos_id=eos_id, pad_id=pad_id,
+                row_keys=None if row_keys is None
+                else jnp.asarray(row_keys))
             # force tokens to host before the sample pages are recycled
             out = type(out)(tokens=np.asarray(out.tokens),
                             logprobs=np.asarray(out.logprobs),
@@ -508,7 +578,7 @@ class PagedKVServer:
     def reuse_decode(self, params: dict, handle: ProbeHandle,
                      rows: Sequence[int], *, max_new_tokens: int,
                      temperature: float, key, eos_id: int,
-                     pad_id: int):
+                     pad_id: int, row_keys=None):
         """Ensemble decode seeded from the probe's prompt pages:
         prefill is skipped entirely — the rows' shared pages are read
         in place, the canonical tail page is COW-forked per decode row,
@@ -531,7 +601,7 @@ class PagedKVServer:
                     f"reuse of row {r} after its pages were resolved")
 
         nr = len(rows)
-        tails = self.pool.alloc(nr * n_tail).reshape(nr, n_tail)
+        tails = self._alloc_retry(nr * n_tail).reshape(nr, n_tail)
         try:
             block_table = np.empty((nr, nb), np.int32)
             for i, r in enumerate(rows):
@@ -548,7 +618,9 @@ class PagedKVServer:
                 self.cfg, params, jnp.asarray(handle.logits0[rows]),
                 self.k_pages, self.v_pages, jnp.asarray(block_table),
                 key, start_pos=s, max_new_tokens=max_new_tokens,
-                temperature=temperature, eos_id=eos_id, pad_id=pad_id)
+                temperature=temperature, eos_id=eos_id, pad_id=pad_id,
+                row_keys=None if row_keys is None
+                else jnp.asarray(row_keys))
             out = type(out)(tokens=np.asarray(out.tokens),
                             logprobs=np.asarray(out.logprobs),
                             lengths=np.asarray(out.lengths))
@@ -560,7 +632,7 @@ class PagedKVServer:
 
     def generate(self, params: dict, ids: np.ndarray, *,
                  max_new_tokens: int, temperature: float, key,
-                 eos_id: int, pad_id: int):
+                 eos_id: int, pad_id: int, row_keys=None):
         """Paged single-sample generation (a probe wave with N=1 whose
         prompt pages are released immediately): page-granular
         allocation instead of batch-max padded dense caches, plus
@@ -568,6 +640,43 @@ class PagedKVServer:
         out, handle = self.probe_wave(
             params, ids, 1, max_new_tokens=max_new_tokens,
             temperature=temperature, key=key, eos_id=eos_id,
-            pad_id=pad_id)
+            pad_id=pad_id, row_keys=row_keys)
         handle.close()
         return out
+
+    # -- step-level serving support ------------------------------------
+    def stream_row_pages(self, prompt_len: int, lanes_per_row: int,
+                         max_new_tokens: int) -> int:
+        """Worst-case pages one step-loop row holds on this server:
+        shared prompt pages plus one private decode tail per lane
+        (probe samples and seeded ensemble decodes alike)."""
+        ps = self.page_size
+        nbp = pages_for(prompt_len, ps)
+        n_tail = pages_for(prompt_len + max_new_tokens, ps) \
+            - prompt_len // ps
+        return nbp + lanes_per_row * n_tail
+
+    def ensure_capacity_stream(self, max_rows: int, prompt_len: int,
+                               lanes_per_row: int,
+                               max_new_tokens: int) -> None:
+        """Size the pool for the step-level loop's steady state:
+        ``max_rows`` rows concurrently resident, each holding its
+        shared prompt pages and ``lanes_per_row`` private decode
+        tails — plus the prefix cache and a scratch region wide enough
+        for a *full* (prompt+decode) pad-row block table. Must run
+        before any pages are held (the step loop calls it at admission
+        of the first row)."""
+        ps = self.page_size
+        nbp = pages_for(prompt_len, ps)
+        nb = pages_for(prompt_len + max_new_tokens, ps)
+        need = (max_rows * self.stream_row_pages(
+                    prompt_len, lanes_per_row, max_new_tokens)
+                + self.prefix_cache_entries * nbp
+                + nb)                                # scratch pages
+        key = (max_rows, prompt_len, lanes_per_row, max_new_tokens)
+        if (self._capacity_key is not None and self.pool is not None
+                and self.pool.num_pages >= need
+                and self._scratch is not None
+                and self._scratch.size >= nb):
+            return
+        self._rebuild(need, nb, key)

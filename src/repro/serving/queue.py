@@ -117,6 +117,21 @@ class AdmissionQueue:
         return now - self._pending[0].arrival_time \
             >= self.policy.max_wait_ticks
 
+    def peek(self) -> Optional[Request]:
+        """Oldest pending request (not yet admitted), or None."""
+        return self._pending[0] if self._pending else None
+
+    def pop(self) -> Request:
+        """Admit the single oldest pending request (FIFO). Admission
+        indices are assigned from the same monotone counter
+        ``form_batch`` uses, so row numbering is identical whether a
+        stream is served wave-wise or one row at a time — the
+        step-level loop's sampling key streams depend on that."""
+        req = self._pending.popleft()
+        req.admission_index = self._admitted
+        self._admitted += 1
+        return req
+
     def form_batch(self, now: Optional[int] = None
                    ) -> Optional[MicroBatch]:
         """Admit the next micro-batch (FIFO) under the size/token
@@ -134,21 +149,43 @@ class AdmissionQueue:
         tokens = 0
         while self._pending and len(batch) < pol.max_batch_size:
             head = self._pending[0]
+            if head.arrival_time > now:
+                break               # not yet arrived at this tick
             if batch.requests and \
                     tokens + head.est_tokens > pol.max_batch_tokens:
                 break
-            req = self._pending.popleft()
-            req.admission_index = self._admitted
+            req = self.pop()
             req.batch_id = batch.batch_id
-            self._admitted += 1
             tokens += req.est_tokens
             batch.requests.append(req)
         self._batches_formed += 1
         return batch
 
+    def next_ready_at(self) -> Optional[int]:
+        """Earliest tick at which ``ready`` will fire for the current
+        pending set: when the size budget fills (the arrival of the
+        batch-size-th request) or when the oldest request's wait
+        budget expires — whichever comes first."""
+        if not self._pending:
+            return None
+        timeout = self._pending[0].arrival_time \
+            + self.policy.max_wait_ticks
+        if len(self._pending) >= self.policy.max_batch_size:
+            fill = self._pending[
+                self.policy.max_batch_size - 1].arrival_time
+            return min(fill, timeout)
+        return timeout
+
     def drain_batches(self) -> List[MicroBatch]:
-        """Form micro-batches until the queue is empty."""
+        """Form micro-batches until the queue is empty, with
+        ``ready()`` as the single admission trigger: the clock jumps
+        to each batch's fill-or-timeout instant before it forms, so a
+        drain is exactly the batch sequence a streaming loop ticking
+        through the same arrivals would admit."""
         out = []
+        now = self._tick
         while self._pending:
-            out.append(self.form_batch())
+            now = max(now, self.next_ready_at())
+            assert self.ready(now)
+            out.append(self.form_batch(now))
         return out

@@ -50,7 +50,8 @@ from repro.core.routing import majority_vote, models_for_mode
 from repro.core.sigma import (
     MODE_NAMES, route_batch, sigma as sigma_fn, sigma_batch)
 from repro.data.tasks import Task
-from repro.serving.compaction import CompactionPlan, plan_compaction
+from repro.serving.compaction import (
+    CompactionPlan, bucket_size, plan_compaction)
 from repro.serving.kv_pool import pages_for
 from repro.serving.metrics import PromCounters
 from repro.serving.queue import AdmissionQueue, MicroBatch, \
@@ -106,6 +107,54 @@ class ProbeCache:
 
     def __len__(self) -> int:
         return len(self._data)
+
+
+# ----------------------------------------------------------------------
+# step planner (step-level continuous batching policy)
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class StepPlanner:
+    """Per-step scheduling policy for the step-level serving loop
+    (serving/step_loop.py executes it over the real-model engine).
+
+    The wave scheduler plans whole micro-batches; the step planner
+    makes three smaller decisions every logical tick, layered on the
+    same ``CompactionPlan``/bucket machinery:
+
+    * **admission** — a queued request joins the active set only when
+      the fill-or-timeout trigger (``AdmissionQueue.ready``) has fired,
+      the active-row cap has room, and the page budget is open: the
+      row's worst-case page need (prompt pages + sample/decode tails)
+      must fit in the pool's free pages net of what already-admitted
+      rows may still allocate. Reservation-based admission is what
+      makes mid-stream retirement safe: a row that got in can always
+      finish.
+    * **chunk sizing** — prompts prefill in fixed ``chunk_tokens``
+      slices (the last chunk takes the remainder), bounding the
+      per-step prefill working set regardless of prompt length.
+    * **bucket selection** — each step's mixed decode/prefill groups
+      pad to power-of-two row buckets (``bucket_size``), so XLA
+      compiles at most log2(rows)+1 shapes per (server, phase) instead
+      of one per occupancy.
+    """
+    chunk_tokens: int = 8
+    max_active_rows: int = 8
+
+    def chunk_span(self, pos: int, prompt_len: int) -> int:
+        """Tokens the next prefill step of a row at ``pos`` covers."""
+        return min(self.chunk_tokens, prompt_len - pos)
+
+    def chunk_count(self, prompt_len: int) -> int:
+        """Prefill steps (virtual-clock units) a whole prompt costs."""
+        return -(-prompt_len // self.chunk_tokens)
+
+    def decode_bucket(self, rows: int, cap: Optional[int] = None) -> int:
+        return bucket_size(rows, cap)
+
+    def may_admit(self, active_rows: int, free_pages: int,
+                  reserved_pages: int, row_need: int) -> bool:
+        return (active_rows < self.max_active_rows
+                and free_pages - reserved_pages >= row_need)
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,727 @@
+"""Step-level continuous batching for the ACAR serving engine.
+
+The wave engine (serving/engine.py ``run_batch``/``run_queued``) is
+lockstep: a micro-batch prefills in one shot, probe-decodes as one
+fixed-length scan, and every ensemble wave stalls the batch until its
+slowest member finishes — tail latency and the KV-page high-water are
+set by the worst row, not by the router. This module replaces the
+lockstep with an iteration-level loop: one logical tick advances a
+*mixed* set of rows where each row is independently in
+
+    prefill-chunk -> probe-decode -> route-pending -> ensemble-decode
+                                                          -> done
+
+Rows are admitted from ``AdmissionQueue.ready()`` the moment the page
+budget opens (``StepPlanner.may_admit``), long prompts prefill in
+fixed-size chunks appended to the paged KV pool
+(``sampler.prefill_chunk_paged``), decodes of any phase mix into one
+bucketed ``decode_step_rows`` program per (server, temperature), and a
+finished row retires — and frees its pages — mid-stream, without
+waiting for its batch.
+
+Determinism / auditability: the loop is bit-equivalent to the wave
+engine, proven the same way PRs 1-3 proved their refactors
+(``tests/harness/simulate.py --step-loop``: identical record hashes
+and artifact-chain heads over a duplicate-bearing 200-task stream).
+Three properties carry the proof:
+
+* chunked prefill composes bit-identically with one-shot prefill
+  (fixed key-axis reduction length — see
+  ``models.transformer.prefill_chunk_paged``);
+* sampling uses per-row key streams (``sample_token_rows``) keyed by
+  admission index, so a row's draws are independent of which rows
+  share its step batch — the wave path uses the same streams;
+* every host decision (grouping, bucketing, admission, retirement)
+  is a deterministic function of the admission order.
+
+The virtual clock: one unit is one device-program launch (a bucketed
+decode step, or one prefill chunk of ``chunk_tokens`` tokens). Each
+model server is its own executor — ACAR's ensemble members are
+independent services in the paper's deployment, and the wave engine
+keeping them idle while it drains one member at a time is precisely
+the lockstep cost this loop removes — so a tick advances the clock by
+the *maximum* programs any single server launched, while programs on
+the same server serialize. ``benchmarks/serving_bench.py`` charges
+the simulated wave-lockstep timeline in the same units (its stages
+are serial by construction: sum of per-stage program counts), so
+step-vs-wave latency comparisons are apples to apples.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.extract import extract
+from repro.core.sigma import majority_vote_batch, sigma_batch
+from repro.data import tokenizer as tok
+from repro.sampling import sampler as S
+from repro.serving.kv_pool import (
+    PagedKVServer, PagePoolError, pages_for)
+from repro.serving.metrics import PromCounters
+from repro.serving.queue import AdmissionQueue, Request
+from repro.serving.scheduler import StepPlanner
+
+PHASES = ("prefill", "probe_decode", "route_pending",
+          "ensemble_decode", "done")
+
+
+# ----------------------------------------------------------------------
+# per-row state
+# ----------------------------------------------------------------------
+@dataclass
+class _Lane:
+    """One decode stream: a probe sample or one member's answer."""
+    block_table: np.ndarray            # (NB,) page ids
+    row_key: np.ndarray                # (2,) uint32 sampling stream
+    logits: np.ndarray                 # (V,) pending next-token logits
+    tag: int = 0                       # deterministic within-row order
+    steps: int = 0
+    done: bool = False
+    tokens: List[int] = field(default_factory=list)
+    length: int = 0                    # live (pre-EOS) steps
+
+    def harvest(self, max_new: int, pad_id: int) -> np.ndarray:
+        out = np.full(max_new, pad_id, np.int32)
+        out[:len(self.tokens)] = self.tokens
+        return out
+
+
+@dataclass
+class _MemberExec:
+    """One (row, member) ensemble execution."""
+    member: int
+    server: Optional[PagedKVServer]
+    reuse: bool                        # seeded from the row's pages
+    prefill_pos: int = 0
+    from_cache: bool = False
+    shared: Optional[np.ndarray] = None   # own prompt pages (non-reuse)
+    tail: Optional[int] = None
+    logits0: Optional[np.ndarray] = None
+    tails: Optional[np.ndarray] = None    # decode tail pages
+    lane: Optional[_Lane] = None
+    answer: Optional[str] = None
+
+
+@dataclass
+class _Row:
+    request: Request
+    ids: np.ndarray                    # (S,) prompt token ids
+    phase: str = "prefill"
+    # probe-server prompt pages
+    shared: Optional[np.ndarray] = None
+    tail: Optional[int] = None
+    from_cache: bool = False
+    prefill_pos: int = 0
+    logits0: Optional[np.ndarray] = None
+    sample_tails: Optional[np.ndarray] = None     # (N, n_tail)
+    lanes: List[_Lane] = field(default_factory=list)
+    probe_texts: Optional[List[str]] = None
+    probe_answers: Optional[List[str]] = None
+    sigma: float = 0.0
+    mode: int = 0
+    members: List[_MemberExec] = field(default_factory=list)
+    member_answers: Optional[List[Optional[str]]] = None
+    final_answer: Optional[str] = None
+    admitted_at: int = 0
+    retired_at: int = 0
+    reserved: int = 0                  # probe-server pages still owed
+
+    @property
+    def admission(self) -> int:
+        return self.request.admission_index
+
+    @property
+    def s(self) -> int:
+        return int(self.ids.shape[0])
+
+
+@dataclass
+class StepStats:
+    """Step-loop accounting (virtual clock in program-launch units)."""
+    ticks: int = 0
+    invocations: int = 0               # device programs launched
+    admissions: int = 0
+    prefill_chunks: int = 0
+    retired: int = 0
+    # per admission index: (arrival_tick, admitted_tick, retired_tick)
+    timeline: Dict[int, Tuple[int, int, int]] = field(
+        default_factory=dict)
+
+    def latencies(self) -> np.ndarray:
+        """Virtual-clock task latency (retire - arrival) per task."""
+        return np.asarray([t[2] - t[0]
+                           for t in self.timeline.values()], float)
+
+
+class StepLoopRunner:
+    """Executes the step-level loop over a ``BatchedACAREngine``'s
+    models and paged-KV servers. One-shot: construct, ``run``."""
+
+    def __init__(self, engine, queue: AdmissionQueue,
+                 planner: StepPlanner,
+                 metrics: Optional[PromCounters] = None):
+        self.eng = engine
+        self.queue = queue
+        self.planner = planner
+        self.metrics = metrics if metrics is not None else PromCounters()
+        self.stats = StepStats()
+        self.acfg = engine.acfg
+        self.n = engine.acfg.n_probe_samples
+        self.max_new = engine.max_new_tokens
+        self.base_key = jax.random.PRNGKey(engine.acfg.seed)
+        self.probe_srv: PagedKVServer = engine._kv_server(engine.probe)
+        if self.probe_srv is None:
+            raise ValueError(
+                "run_stepped requires a paged-capable probe model "
+                "(models.transformer.paged_supported)")
+        # one ensure_capacity_stream per distinct server; twin members
+        # (same params as the probe) decode on the probe's server, so
+        # its per-row worst case carries their seeded decode tails too
+        self._servers: List[PagedKVServer] = [self.probe_srv]
+        self._twins = 0
+        for zm in engine.ensemble:
+            srv = engine._kv_server(zm)
+            if srv is self.probe_srv and zm is not engine.probe:
+                self._twins += 1
+            elif srv is not None and srv not in self._servers:
+                self._servers.append(srv)
+        self._reserved = 0                 # pages admitted rows may yet take
+        self.active: List[_Row] = []
+        self.done_rows: Dict[int, _Row] = {}
+        self.now = 0
+        # per-tick virtual-clock charges for work outside the grouped
+        # device programs (dense-fallback members run whole
+        # generations on their own executor)
+        self._tick_extra: Dict[object, int] = {}
+        self._routed_this_tick = 0
+
+    # -- geometry ------------------------------------------------------
+    def _geometry(self, s: int):
+        ps = self.probe_srv.page_size
+        n_shared = s // ps
+        nbp = pages_for(s, ps)
+        nb = pages_for(s + self.max_new, ps)
+        return ps, n_shared, nbp, nb, nb - n_shared
+
+    def _row_need(self, s: int) -> int:
+        """Worst-case probe-server pages one row may still allocate."""
+        return self.probe_srv.stream_row_pages(
+            s, self.n + max(self._twins, 1), self.max_new)
+
+    def _unreserve(self, row: _Row, pages: int) -> None:
+        pages = min(pages, row.reserved)
+        row.reserved -= pages
+        self._reserved -= pages
+
+    # -- admission -----------------------------------------------------
+    def _admit_ready(self) -> None:
+        while len(self.queue) and self.queue.ready(self.now):
+            head = self.queue.peek()
+            if head.arrival_time > self.now:
+                break
+            ids = tok.encode_aligned([head.task.text])[0]
+            s = int(ids.shape[0])
+            try:
+                self.probe_srv.ensure_capacity_stream(
+                    self.planner.max_active_rows, s,
+                    self.n + max(self._twins, 1), self.max_new)
+                for srv in self._servers[1:]:
+                    srv.ensure_capacity_stream(
+                        self.planner.max_active_rows, s, 1,
+                        self.max_new)
+            except PagePoolError:
+                # a longer prompt needs a bigger pool, which can only
+                # rebuild while no pages are held: defer admission
+                # until the active rows drain instead of failing the
+                # stream (progress is guaranteed — retirement frees
+                # pages every tick, and an idle pool always rebuilds)
+                if self.active:
+                    break
+                raise
+            if not self.planner.may_admit(
+                    len(self.active), self.probe_srv.pool.free_pages,
+                    self._reserved, self._row_need(s)):
+                break
+            req = self.queue.pop()
+            row = _Row(request=req, ids=ids, admitted_at=self.now,
+                       reserved=self._row_need(s))
+            self._reserved += row.reserved
+            self.stats.timeline[row.admission] = (
+                req.arrival_time, self.now, -1)
+            self._begin_prefill(row)
+            self.active.append(row)
+            self.stats.admissions += 1
+            self.metrics.inc("acar_step_admissions_total",
+                             help="rows admitted into the step loop")
+
+    def _begin_prefill(self, row: _Row) -> None:
+        srv = self.probe_srv
+        s = row.s
+        ps, n_shared, nbp, _, _ = self._geometry(s)
+        entry = srv._prefix_lookup(row.ids.tobytes())
+        if entry is not None:
+            srv.pool.retain(entry.shared)
+            if entry.tail is not None:
+                srv.pool.retain([entry.tail])
+            row.shared = entry.shared.copy()
+            row.tail = entry.tail
+            row.logits0 = entry.logits0.copy()
+            row.from_cache = True
+            row.prefill_pos = s
+            srv.stats.prefill_tokens_reused_prefix += s
+            self._unreserve(row, nbp)
+            self._begin_probe_decode(row)
+            return
+        pages = srv._alloc_retry(nbp)
+        row.shared = pages[:n_shared]
+        row.tail = int(pages[n_shared]) if s % ps else None
+        self._unreserve(row, nbp)
+
+    def _begin_probe_decode(self, row: _Row) -> None:
+        srv = self.probe_srv
+        s = row.s
+        ps, n_shared, _, nb, n_tail = self._geometry(s)
+        row.sample_tails = srv._alloc_retry(
+            self.n * n_tail).reshape(self.n, n_tail)
+        self._unreserve(row, self.n * n_tail)
+        keys = np.asarray(S.probe_row_keys(
+            self.base_key, [row.admission], self.n))
+        for j in range(self.n):
+            table = np.empty(nb, np.int32)
+            table[:n_shared] = row.shared
+            table[n_shared:] = row.sample_tails[j]
+            row.lanes.append(_Lane(block_table=table, row_key=keys[j],
+                                   logits=row.logits0.copy(), tag=j))
+        if s % ps:
+            self._fork(srv, [row.tail] * self.n,
+                       row.sample_tails[:, 0].tolist())
+            srv.stats.cow_forks += self.n
+        row.phase = "probe_decode"
+        srv._sample_usage()
+
+    # -- page plumbing -------------------------------------------------
+    @staticmethod
+    def _fork(srv: PagedKVServer, src: Sequence[int],
+              dst: Sequence[int]) -> None:
+        import jax.numpy as jnp
+        srv.k_pages, srv.v_pages = S.fork_pages(
+            srv.k_pages, srv.v_pages,
+            jnp.asarray(np.asarray(src, np.int32)),
+            jnp.asarray(np.asarray(dst, np.int32)))
+
+    def _release_prompt(self, srv: PagedKVServer, row_or_mx) -> None:
+        if row_or_mx.shared is not None:
+            srv.pool.release(row_or_mx.shared)
+            if row_or_mx.tail is not None:
+                srv.pool.release([row_or_mx.tail])
+            row_or_mx.shared = None
+            row_or_mx.tail = None
+        srv._sample_usage()
+
+    # -- prefill step --------------------------------------------------
+    def _prefill_groups(self):
+        """Group rows/member-execs needing a prefill chunk by
+        (server, chunk_len, prompt_len). Per-row start offsets are
+        *traced* in the chunk program, so rows at different prefill
+        depths — freshly admitted rows next to members that escalated
+        ticks ago — share one device launch."""
+        groups: Dict[tuple, list] = {}
+        for row in self.active:
+            if row.phase == "prefill":
+                c = self.planner.chunk_span(row.prefill_pos, row.s)
+                key = (id(self.probe_srv), c, row.s)
+                groups.setdefault(key, []).append(
+                    (self.probe_srv, row, None))
+            elif row.phase == "ensemble_decode":
+                for mx in row.members:
+                    if (mx.answer is None and not mx.reuse
+                            and mx.lane is None and not mx.from_cache
+                            and mx.prefill_pos < row.s):
+                        c = self.planner.chunk_span(mx.prefill_pos,
+                                                    row.s)
+                        key = (id(mx.server), c, row.s)
+                        groups.setdefault(key, []).append(
+                            (mx.server, row, mx))
+        return groups
+
+    def _run_prefill_group(self, key, items) -> None:
+        import jax.numpy as jnp
+        _, c, s = key
+        srv = items[0][0]
+        ps = srv.page_size
+        nbp = pages_for(s, ps)
+        rows = sorted(items, key=lambda it: it[1].admission)
+        bucket = self.planner.decode_bucket(len(rows))
+        tokens = np.empty((bucket, c), np.int32)
+        tables = np.empty((bucket, nbp), np.int32)
+        starts = np.zeros(bucket, np.int32)
+        for i in range(bucket):
+            srv_i, row, mx = rows[min(i, len(rows) - 1)]
+            target = mx if mx is not None else row
+            starts[i] = target.prefill_pos
+            tokens[i] = row.ids[starts[i]:starts[i] + c]
+            if i < len(rows):
+                tables[i, :target.shared.size] = target.shared
+                if target.tail is not None:
+                    tables[i, -1] = target.tail
+            else:
+                tables[i] = srv._scratch[:nbp]
+        zm = self._server_model(srv)
+        lg, srv.k_pages, srv.v_pages = S.prefill_chunk_paged(
+            zm.cfg, zm.params, jnp.asarray(tokens), srv.k_pages,
+            srv.v_pages, jnp.asarray(tables), jnp.asarray(starts),
+            prompt_len=s)
+        srv.stats.prefill_tokens_computed += bucket * c
+        srv.stats.prefill_chunks += 1
+        self.stats.prefill_chunks += 1
+        self.metrics.inc("acar_prefill_chunks_total",
+                         model=srv.stats.model,
+                         help="chunked-prefill device programs run")
+        lg = np.asarray(lg, np.float32)
+        for i, (srv_i, row, mx) in enumerate(rows):
+            target = mx if mx is not None else row
+            target.prefill_pos = int(starts[i]) + c
+            if target.prefill_pos == s:
+                target.logits0 = lg[i]
+                # publish to the server's prefix cache (cost-aware
+                # eviction keys off tokens-saved-per-page)
+                srv._prefix_insert(row.ids.tobytes(), target.shared,
+                                   target.tail, lg[i], tokens=s)
+
+    def _server_model(self, srv: PagedKVServer):
+        if srv is self.probe_srv:
+            return self.eng.probe
+        for zm in self.eng.ensemble:
+            if self.eng._kv_server(zm) is srv:
+                return zm
+        raise KeyError("server has no model")
+
+    # -- decode step ---------------------------------------------------
+    def _decode_groups(self):
+        """Group live lanes by (server, temperature, cache_len)."""
+        groups: Dict[tuple, list] = {}
+        for row in self.active:
+            cache_len = row.s + self.max_new
+            if row.phase == "probe_decode":
+                for lane in row.lanes:
+                    if not lane.done and lane.steps < self.max_new:
+                        key = (id(self.probe_srv),
+                               self.acfg.probe_temperature, cache_len)
+                        groups.setdefault(key, []).append(
+                            (self.probe_srv, row, lane))
+            elif row.phase == "ensemble_decode":
+                for mx in row.members:
+                    lane = mx.lane
+                    if (lane is not None and not lane.done
+                            and lane.steps < self.max_new):
+                        srv = self.probe_srv if mx.reuse else mx.server
+                        key = (id(srv),
+                               self.acfg.ensemble_temperature,
+                               cache_len)
+                        groups.setdefault(key, []).append(
+                            (srv, row, lane))
+        return groups
+
+    def _run_decode_group(self, key, items) -> None:
+        import jax.numpy as jnp
+        _, temperature, cache_len = key
+        srv = items[0][0]
+        nb = pages_for(cache_len, srv.page_size)
+        lanes = [it[2] for it in sorted(
+            items, key=lambda it: (it[1].admission, it[2].tag))]
+        bucket = self.planner.decode_bucket(len(lanes))
+        k = len(lanes)
+        logits = np.empty((bucket, lanes[0].logits.shape[0]),
+                          np.float32)
+        tables = np.empty((bucket, nb), np.int32)
+        pos = np.empty(bucket, np.int32)
+        keys = np.empty((bucket, 2), np.uint32)
+        steps = np.empty(bucket, np.int32)
+        done = np.zeros(bucket, bool)
+        for i in range(bucket):
+            lane = lanes[min(i, k - 1)]
+            logits[i] = lane.logits
+            tables[i] = lane.block_table if i < k else srv._scratch[:nb]
+            pos[i] = cache_len - self.max_new + lane.steps
+            keys[i] = lane.row_key
+            steps[i] = lane.steps
+            done[i] = i >= k          # pad rows emit pads into scratch
+        zm = self._server_model(srv)
+        (emit, _logp, _live, new_done, next_logits, srv.k_pages,
+         srv.v_pages) = S.decode_step_rows(
+            zm.cfg, zm.params, jnp.asarray(logits), srv.k_pages,
+            srv.v_pages, jnp.asarray(tables), jnp.asarray(pos),
+            jnp.asarray(keys), jnp.asarray(steps), jnp.asarray(done),
+            cache_len=cache_len, temperature=temperature,
+            eos_id=tok.EOS, pad_id=tok.PAD)
+        emit = np.asarray(emit)
+        new_done = np.asarray(new_done)
+        next_logits = np.asarray(next_logits, np.float32)
+        for i, lane in enumerate(lanes):
+            lane.tokens.append(int(emit[i]))
+            lane.length += 1
+            lane.steps += 1
+            lane.done = bool(new_done[i])
+            lane.logits = next_logits[i]
+        self.metrics.set_gauge(
+            "acar_step_bucket_occupancy", k / bucket,
+            server=srv.stats.model, bucket=str(bucket),
+            help="live-lane fill of the last step-decode bucket")
+
+    # -- phase transitions ---------------------------------------------
+    def _promote(self) -> None:
+        """Host-side transitions after this tick's device work."""
+        # prefill finished -> probe decode
+        for row in self.active:
+            if row.phase == "prefill" and row.prefill_pos == row.s:
+                self._begin_probe_decode(row)
+        # probe decode finished -> route
+        resolved = [row for row in self.active
+                    if row.phase == "probe_decode"
+                    and all(l.done or l.steps >= self.max_new
+                            for l in row.lanes)]
+        if resolved:
+            self._route(sorted(resolved, key=lambda r: r.admission))
+        # member prefill finished or cache hit -> member decode lanes
+        for row in self.active:
+            if row.phase != "ensemble_decode":
+                continue
+            for mx in row.members:
+                if (mx.lane is None and mx.answer is None
+                        and not mx.reuse and mx.logits0 is not None):
+                    self._begin_member_decode(row, mx)
+            self._finish_members(row)
+
+    def _route(self, rows: List[_Row]) -> None:
+        import jax.numpy as jnp
+        from repro.serving.engine import intern_answers
+        srv = self.probe_srv
+        n = self.n
+        self._routed_this_tick += len(rows)
+        for row in rows:
+            texts = [tok.decode(l.harvest(self.max_new, tok.PAD))
+                     for l in row.lanes]
+            row.probe_texts = texts
+            row.probe_answers = [
+                extract(t, row.request.task.kind) for t in texts]
+            srv.pool.release(row.sample_tails.reshape(-1))
+            row.sample_tails = None
+            row.lanes = []
+        srv._sample_usage()
+        # per-row interning namespaces: sigma/majority/judge are
+        # within-row functions, invariant to interning order
+        ids = np.stack([intern_answers(row.probe_answers)
+                        for row in rows]).reshape(len(rows), n)
+        sig = sigma_batch(jnp.asarray(ids))
+        modes = np.asarray(self.eng.route_modes(
+            sig, [r.admission for r in rows]))
+        for i, row in enumerate(rows):
+            row.sigma = float(np.asarray(sig)[i])
+            row.mode = int(modes[i])
+            row.member_answers = [None] * len(self.eng.ensemble)
+            self._spawn_members(row)
+
+    def _member_needed(self, mode: int, mi: int) -> bool:
+        return mode >= (1 if mi < self.acfg.arena_lite_size else 2)
+
+    def _spawn_members(self, row: _Row) -> None:
+        eng = self.eng
+        needed = [mi for mi in range(len(eng.ensemble))
+                  if self._member_needed(row.mode, mi)]
+        if not needed:
+            self._release_prompt(self.probe_srv, row)
+            self._judge(row)       # mode 0: final = probe majority
+            self._retire(row)
+            return
+
+        row.phase = "ensemble_decode"
+        for mi in needed:
+            zm = eng.ensemble[mi]
+            srv_m = eng._kv_server(zm)
+            reuse = (eng._kv_reuse_member(zm, self.probe_srv)
+                     and eng._member_compactable(zm))
+            mx = _MemberExec(member=mi, server=srv_m, reuse=reuse)
+            row.members.append(mx)
+            if reuse:
+                self._begin_member_decode(row, mx)
+            elif srv_m is not None:
+                entry = srv_m._prefix_lookup(row.ids.tobytes())
+                if entry is not None:
+                    srv_m.pool.retain(entry.shared)
+                    if entry.tail is not None:
+                        srv_m.pool.retain([entry.tail])
+                    mx.shared = entry.shared.copy()
+                    mx.tail = entry.tail
+                    mx.logits0 = entry.logits0.copy()
+                    mx.from_cache = True
+                    mx.prefill_pos = row.s
+                    srv_m.stats.prefill_tokens_reused_prefix += row.s
+                    self._begin_member_decode(row, mx)
+                else:
+                    ps, n_shared, nbp, _, _ = self._geometry(row.s)
+                    pages = srv_m._alloc_retry(nbp)
+                    mx.shared = pages[:n_shared]
+                    mx.tail = int(pages[n_shared]) if row.s % ps \
+                        else None
+            else:
+                # non-paged member: dense one-shot fallback (still
+                # row-keyed, so tokens match the wave path's dense
+                # member decode bit-for-bit)
+                self._dense_member(row, mx, zm)
+        if not any(mx.reuse for mx in row.members):
+            # no member seeds from the probe's pages: free them the
+            # moment the route resolves, like the wave handle does
+            self._release_prompt(self.probe_srv, row)
+        self._finish_members(row)
+
+    def _begin_member_decode(self, row: _Row, mx: _MemberExec) -> None:
+        srv = self.probe_srv if mx.reuse else mx.server
+        s = row.s
+        ps, n_shared, _, nb, n_tail = self._geometry(s)
+        tails = srv._alloc_retry(n_tail)
+        if mx.reuse:
+            self._unreserve(row, n_tail)
+        mx.tails = tails
+        table = np.empty(nb, np.int32)
+        shared = row.shared if mx.reuse else mx.shared
+        canon_tail = row.tail if mx.reuse else mx.tail
+        table[:n_shared] = shared
+        table[n_shared:] = tails
+        if s % ps:
+            self._fork(srv, [canon_tail], [int(tails[0])])
+            srv.stats.cow_forks += 1
+        key = np.asarray(S.member_row_keys(
+            self.base_key, [row.admission], mx.member))[0]
+        logits0 = row.logits0 if mx.reuse else mx.logits0
+        mx.lane = _Lane(block_table=table, row_key=key,
+                        logits=logits0.copy(), tag=100 + mx.member)
+        if mx.reuse:
+            srv.stats.prefill_tokens_reused_probe += s
+
+    def _dense_member(self, row: _Row, mx: _MemberExec, zm) -> None:
+        import jax.numpy as jnp
+        rk = S.member_row_keys(self.base_key, [row.admission],
+                               mx.member)
+        out = S.generate(
+            zm.cfg, zm.params, jnp.asarray(row.ids[None]),
+            max_new_tokens=self.max_new,
+            temperature=self.acfg.ensemble_temperature,
+            key=jax.random.fold_in(self.base_key, 1000 + mx.member),
+            eos_id=tok.EOS, pad_id=tok.PAD, row_keys=jnp.asarray(rk))
+        text = tok.decode(np.asarray(out.tokens)[0])
+        mx.answer = extract(text, row.request.task.kind)
+        # the whole prefill + decode ran as one dense program on this
+        # member's executor: charge it to the virtual clock in the
+        # same units the chunked/stepped paths pay
+        cost = self.planner.chunk_count(row.s) + self.max_new
+        key = ("dense", mx.member)
+        self._tick_extra[key] = self._tick_extra.get(key, 0) + cost
+
+    def _finish_members(self, row: _Row) -> None:
+        srv = self.probe_srv
+        for mx in row.members:
+            lane = mx.lane
+            if (mx.answer is None and lane is not None
+                    and (lane.done or lane.steps >= self.max_new)):
+                text = tok.decode(lane.harvest(self.max_new, tok.PAD))
+                mx.answer = extract(text, row.request.task.kind)
+                dsrv = srv if mx.reuse else mx.server
+                dsrv.pool.release(mx.tails)
+                mx.tails = None
+                mx.lane = None
+                if not mx.reuse and mx.shared is not None:
+                    self._release_prompt(dsrv, mx)
+        if all(mx.answer is not None for mx in row.members):
+            for mx in row.members:
+                row.member_answers[mx.member] = mx.answer
+            self._release_prompt(srv, row)
+            self._judge(row)
+            self._retire(row)
+
+    def _judge(self, row: _Row) -> None:
+        import jax.numpy as jnp
+        from repro.serving.engine import intern_answers, judge_batch
+        table: Dict[str, int] = {}
+        probe_ids = intern_answers(row.probe_answers,
+                                   table).reshape(1, self.n)
+        col = np.full(len(self.eng.ensemble), -1, np.int32)
+        for mi, a in enumerate(row.member_answers):
+            if a is not None:
+                col[mi] = table.setdefault(a, len(table))
+        final = judge_batch(
+            jnp.asarray(col[None]),
+            majority_vote_batch(jnp.asarray(probe_ids)),
+            jnp.asarray([row.mode], np.int32))
+        rev = {v: k for k, v in table.items()}
+        row.final_answer = rev[int(np.asarray(final)[0])]
+
+    def _retire(self, row: _Row) -> None:
+        self._unreserve(row, row.reserved)
+        row.phase = "done"
+        row.retired_at = self.now
+        arr, adm, _ = self.stats.timeline[row.admission]
+        self.stats.timeline[row.admission] = (arr, adm, self.now)
+        self.stats.retired += 1
+        self.done_rows[row.admission] = row
+
+    # -- main loop -----------------------------------------------------
+    def _emit_phase_gauges(self) -> None:
+        counts = {p: 0 for p in PHASES}
+        for row in self.active:
+            counts[row.phase] += 1
+        counts["done"] = self.stats.retired
+        # route-pending is transient within a tick (routing resolves
+        # on the host the same step probe decode finishes): report
+        # the rows that passed through it this step
+        counts["route_pending"] = self._routed_this_tick
+        for phase, v in counts.items():
+            self.metrics.set_gauge(
+                "acar_step_rows_active", v, phase=phase,
+                help="rows per lifecycle phase at the last step "
+                     "(route_pending: resolved within this step)")
+
+    def run(self) -> StepStats:
+        while len(self.queue) or self.active:
+            self._admit_ready()
+            per_server: Dict[object, int] = {}
+            self._tick_extra = {}
+            self._routed_this_tick = 0
+            for key, items in sorted(self._prefill_groups().items(),
+                                     key=lambda kv: kv[0][1:]):
+                self._run_prefill_group(key, items)
+                per_server[key[0]] = per_server.get(key[0], 0) + 1
+            for key, items in sorted(self._decode_groups().items(),
+                                     key=lambda kv: (kv[0][1],
+                                                     kv[0][2])):
+                self._run_decode_group(key, items)
+                per_server[key[0]] = per_server.get(key[0], 0) + 1
+            self._promote()
+            # dense-fallback members ran whole generations on their
+            # own executors during promotion
+            for key, cost in self._tick_extra.items():
+                per_server[key] = per_server.get(key, 0) + cost
+            self.active = [r for r in self.active if r.phase != "done"]
+            self._emit_phase_gauges()
+            # servers are independent executors: the tick takes as
+            # long as its busiest server; same-server programs
+            # serialize. Idle ticks launch nothing (invocations stay
+            # honest) but time still passes.
+            tick_cost = max(per_server.values(), default=0)
+            self.stats.ticks += 1
+            self.stats.invocations += sum(per_server.values())
+            self.now += max(1, tick_cost)
+            if tick_cost == 0 and not self.active and len(self.queue):
+                # idle: jump the virtual clock to the next admission
+                # event (a future arrival, or the oldest request's
+                # fill-or-timeout instant)
+                head = self.queue.peek()
+                if head.arrival_time > self.now:
+                    self.now = head.arrival_time
+                elif not self.queue.ready(self.now):
+                    nxt = self.queue.next_ready_at()
+                    if nxt is not None:
+                        self.now = max(self.now, nxt)
+        return self.stats

@@ -152,3 +152,90 @@ def test_alloc_is_deterministic():
         b = pool.alloc(4)
         return a.tolist(), b.tolist()
     assert run() == run()
+
+
+# ----------------------------------------------------------------------
+# cost-aware prefix-cache eviction (tokens-saved-per-page scoring)
+# ----------------------------------------------------------------------
+def _tiny_server(prefix_entries=8):
+    from repro.configs.registry import get_config
+    from repro.data import tokenizer as tok
+    from repro.serving.kv_pool import PagedKVServer
+    cfg = get_config("smollm-135m", reduced=True).replace(
+        vocab_size=tok.VOCAB_SIZE, dtype="float32",
+        tie_embeddings=True)
+    srv = PagedKVServer(cfg, page_size=8,
+                        prefix_cache_entries=prefix_entries)
+    srv.ensure_capacity_stream(2, 32, 2, 8)
+    return srv
+
+
+def _insert(srv, key, n_pages, tokens, hits=0):
+    pages = srv.pool.alloc(n_pages)
+    srv._prefix_insert(key, pages, None,
+                       np.zeros(4, np.float32), tokens=tokens)
+    srv.pool.release(pages)            # cache ref remains
+    for _ in range(hits):
+        srv._prefix_lookup(key)
+
+
+def test_eviction_is_cost_aware_not_lru():
+    """A recently-inserted low-value entry (few tokens saved per page)
+    is evicted before an older, hotter, denser one — the opposite of
+    pure LRU."""
+    srv = _tiny_server()
+    _insert(srv, b"hot-long", 2, tokens=16, hits=3)   # 16*4/2 = 32/page
+    _insert(srv, b"cold-wide", 4, tokens=8, hits=0)   # 8*1/4 = 2/page
+    assert srv._evict_one()
+    assert b"hot-long" in srv._prefix
+    assert b"cold-wide" not in srv._prefix
+    assert srv.stats.prefix_evictions == 1
+
+
+def test_eviction_tie_break_deterministic():
+    """Equal scores evict in insertion order (oldest first)."""
+    srv = _tiny_server()
+    _insert(srv, b"a", 2, tokens=16)
+    _insert(srv, b"b", 2, tokens=16)
+    srv._evict_one()
+    assert b"a" not in srv._prefix and b"b" in srv._prefix
+
+
+def test_evict_prefix_frees_requested_pages():
+    srv = _tiny_server()
+    free0 = srv.pool.free_pages
+    for i in range(4):
+        _insert(srv, bytes([i]), 3, tokens=24)
+    assert srv.pool.free_pages == free0 - 12
+    got = srv.evict_prefix(free0 - 6)
+    assert got >= free0 - 6
+    assert len(srv._prefix) == 2
+
+
+def test_alloc_retry_evicts_then_raises_clean():
+    """_alloc_retry sheds cache entries on exhaustion and only raises
+    once the cache is empty and the pages genuinely do not exist."""
+    srv = _tiny_server()
+    free0 = srv.pool.free_pages
+    # cache holds most of the pool; a big allocation must reclaim it
+    for i in range(4):
+        _insert(srv, bytes([i]), free0 // 5, tokens=8)
+    big = srv._alloc_retry(free0 - 2)
+    assert big.size == free0 - 2
+    srv.pool.release(big)
+    with pytest.raises(PoolExhausted):
+        srv._alloc_retry(srv.pool.num_pages + 1)
+    # pool intact: scratch only
+    assert srv.pool.pages_in_use == srv._scratch.size
+
+
+def test_prefix_insert_capacity_still_bounded():
+    """The entry-count bound still holds; overflow evicts by score."""
+    srv = _tiny_server(prefix_entries=3)
+    _insert(srv, b"dense", 1, tokens=32, hits=2)      # best
+    _insert(srv, b"mid", 2, tokens=16)
+    _insert(srv, b"sparse", 4, tokens=4)              # worst
+    _insert(srv, b"new", 2, tokens=16)
+    assert len(srv._prefix) == 3
+    assert b"sparse" not in srv._prefix
+    assert b"dense" in srv._prefix
