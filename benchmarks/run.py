@@ -15,7 +15,8 @@ def main() -> None:
     from benchmarks import (
         ablation_probe, attribution_bench, figures, kernels_micro,
         roofline, table1_overall, table2_retrieval)
-    from benchmarks import scheduler_bench, serving_bench
+    from benchmarks import (
+        scheduler_bench, serving_bench, sharding_bench)
 
     sections = [
         ("table1_overall (paper Table 1, Figs 2/3)", table1_overall),
@@ -31,6 +32,10 @@ def main() -> None:
          serving_bench),
         ("scheduler_bench (continuous batching vs sequential)",
          scheduler_bench),
+        # needs >= 4 devices (run standalone: it forces the host
+        # device count itself; here it reports the skip cleanly)
+        ("sharding_bench (mesh-sharded step loop vs single device)",
+         sharding_bench),
     ]
     csv_lines = []
     for title, mod in sections:

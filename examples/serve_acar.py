@@ -11,15 +11,16 @@ Prometheus-style scheduler counters at the end. With ``--step-loop``
 it runs the step-level loop instead (streaming admission off
 ``AdmissionQueue.ready()``, chunked prefill, mixed-phase decode steps,
 mid-stream retirement) — bit-identical answers, different execution.
+With ``--shards N`` the step loop runs on a data-sharded serving mesh
+(per-shard paged KV pools, least-loaded placement, one shard_map'd
+program per tick) — still bit-identical answers; this example forces
+the host device count so it works on a plain CPU.
 
     PYTHONPATH=src python examples/serve_acar.py [--tasks 32]
-        [--train-steps 300] [--scheduler | --step-loop]
+        [--train-steps 300] [--scheduler | --step-loop | --shards 4]
         [--batch-size 8]
 """
 import argparse
-
-from repro.launch.serve import main as serve_main
-
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -27,8 +28,15 @@ if __name__ == "__main__":
     ap.add_argument("--train-steps", type=int, default=300)
     ap.add_argument("--scheduler", action="store_true")
     ap.add_argument("--step-loop", action="store_true")
+    ap.add_argument("--shards", type=int, default=None)
     ap.add_argument("--batch-size", type=int, default=8)
     args = ap.parse_args()
+    if args.shards:
+        # must happen before the first jax backend init (merges into
+        # any user-set XLA_FLAGS; an existing count wins)
+        from repro.xla_flags import force_host_device_count
+        force_host_device_count(args.shards)
+    from repro.launch.serve import main as serve_main
     argv = ["--tasks", str(args.tasks),
             "--train-steps", str(args.train_steps),
             "--batch-size", str(args.batch_size)]
@@ -36,4 +44,6 @@ if __name__ == "__main__":
         argv.append("--scheduler")
     if args.step_loop:
         argv.append("--step-loop")
+    if args.shards:
+        argv.extend(["--shards", str(args.shards)])
     serve_main(argv)

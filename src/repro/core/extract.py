@@ -93,3 +93,29 @@ def extract(response: str, kind: str,
     if fn is None:
         return extract_reasoning(response)
     return fn(response)
+
+
+def extract_batch(responses, kinds,
+                  canonicalize_code: bool = False) -> list:
+    """Extract a whole tick's worth of responses in one call.
+
+    Element-wise identical to ``[extract(r, k) for r, k in zip(...)]``
+    — extraction is a pure per-response function, so batching is purely
+    an execution strategy (the step-level serving loop collects every
+    row routing in the same tick here instead of calling ``extract``
+    once per row). Duplicate (response, kind) pairs — N probe samples
+    that decoded the same text, duplicate-bearing request streams —
+    are extracted once and shared.
+    """
+    if len(responses) != len(kinds):
+        raise ValueError(
+            f"{len(responses)} responses vs {len(kinds)} kinds")
+    memo: dict = {}
+    out = []
+    for r, k in zip(responses, kinds):
+        key = (r, k)
+        if key not in memo:
+            memo[key] = extract(r, k,
+                                canonicalize_code=canonicalize_code)
+        out.append(memo[key])
+    return out

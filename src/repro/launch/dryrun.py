@@ -1,9 +1,11 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import (including
-# repro.*): jax locks the device count on first initialisation, and the
-# production meshes below need 512 placeholder host devices. Nothing
-# else in the repo sets this flag — smoke tests and benches see 1 CPU.
+from repro.xla_flags import force_host_device_count
+force_host_device_count(512)
+# The two lines above MUST run before any jax-touching import: jax
+# locks the device count on first initialisation, and the production
+# meshes below need 512 placeholder host devices. The helper *merges*
+# into any user-exported XLA_FLAGS (preserving their other flags and
+# their own device-count override) instead of clobbering the variable.
+# Smoke tests and benches see 1 CPU — nothing else sets this flag.
 """Multi-pod dry-run: lower + compile every (architecture x input
 shape) on the production meshes and extract roofline inputs.
 

@@ -37,6 +37,27 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return Mesh(dev, axes)
 
 
+def make_serving_mesh(data: Optional[int] = None) -> Mesh:
+    """1-D ("data",) request-parallel mesh for the sharded serving
+    subsystem: each shard owns a slice of the paged KV pool and decodes
+    its resident rows; there is no model parallelism on this mesh (a
+    "model" axis for tensor-parallel ensemble members is a ROADMAP
+    follow-up). ``data=None`` takes every visible device. On CPU, run
+    under ``--xla_force_host_platform_device_count=N`` (see
+    ``repro.xla_flags.force_host_device_count``) to get N shards."""
+    devices = jax.devices()
+    n = len(devices) if data is None else int(data)
+    if n < 1:
+        raise ValueError("serving mesh needs at least one shard")
+    if len(devices) < n:
+        raise RuntimeError(
+            f"serving mesh data={n} needs {n} devices, have "
+            f"{len(devices)} — on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before jax "
+            "initialises (repro.xla_flags.force_host_device_count)")
+    return Mesh(np.asarray(devices[:n]), ("data",))
+
+
 def make_smoke_mesh(model: int = 1) -> Mesh:
     """1xN mesh over however many devices exist (tests/examples)."""
     devices = jax.devices()

@@ -1,6 +1,7 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# Must run before any other import — see launch/dryrun.py.
+from repro.xla_flags import force_host_device_count
+force_host_device_count(512)
+# Must run before any jax-touching import — see launch/dryrun.py
+# (merges into user-set XLA_FLAGS instead of clobbering them).
 """§Perf hillclimb runner: named (arch, shape, rules, config-transform)
 variants, lowered on the single-pod production mesh, recorded to
 experiments/perf/<variant>.json with the same cost extraction as the

@@ -57,19 +57,23 @@ def serve(tasks: Sequence[Task], probe: ZooModel,
           verbose: bool = True,
           scheduler: bool = False,
           step_loop: bool = False,
-          batch_size: int = 8) -> dict:
+          batch_size: int = 8,
+          data_shards: Optional[int] = None) -> dict:
     """Serve tasks through the batched engine. With ``scheduler=True``
     the request stream flows through the admission queue and is served
     as micro-batches of at most ``batch_size`` (continuous-batching
     path); with ``step_loop=True`` it runs the step-level loop
     (streaming admission + chunked prefill + mixed-phase decode
-    steps — requires a paged-capable probe); otherwise the whole
-    suite runs as one batch."""
+    steps — requires a paged-capable probe); ``data_shards`` runs that
+    loop on a sharded serving mesh (per-shard paged KV pools, needs
+    that many visible devices); otherwise the whole suite runs as one
+    batch."""
     engine = BatchedACAREngine(acfg, probe, ensemble)
-    if step_loop:
+    if step_loop or data_shards is not None:
         from repro.serving.queue import MicroBatchPolicy
         res = engine.run_stepped(
-            list(tasks), MicroBatchPolicy(max_batch_size=batch_size))
+            list(tasks), MicroBatchPolicy(max_batch_size=batch_size),
+            data_shards=data_shards)
         scheduler = True          # report the queued-shape extras
     elif scheduler:
         from repro.serving.queue import MicroBatchPolicy
@@ -138,6 +142,12 @@ def main(argv=None):
                     help="serve via the step-level loop (streaming "
                          "admission, chunked prefill, mixed-phase "
                          "decode steps; needs a paged-capable probe)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="run the step loop on a data-sharded serving "
+                         "mesh with this many shards (implies "
+                         "--step-loop; needs that many devices — on "
+                         "CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count)")
     ap.add_argument("--batch-size", type=int, default=8,
                     help="micro-batch size budget for --scheduler")
     args = ap.parse_args(argv)
@@ -152,7 +162,7 @@ def main(argv=None):
     tasks = arithmetic_suite(args.tasks, seed=args.seed + 99)
     serve(tasks, probe, ensemble, acfg,
           scheduler=args.scheduler, step_loop=args.step_loop,
-          batch_size=args.batch_size)
+          batch_size=args.batch_size, data_shards=args.shards)
 
 
 if __name__ == "__main__":

@@ -336,6 +336,27 @@ def prefill_chunk_paged(cfg: ModelConfig, params: dict,
                                  prompt_len=prompt_len)
 
 
+def _decode_step_rows_impl(cfg: ModelConfig, params: dict,
+                           logits: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_table: jax.Array,
+                           pos: jax.Array, row_keys: jax.Array,
+                           steps: jax.Array, done: jax.Array, *,
+                           cache_len: int, temperature: float,
+                           eos_id: int, pad_id: int):
+    """Unjitted body of ``decode_step_rows`` — shared with the
+    shard_map'd variant so both paths run identical math."""
+    tok = sample_token_rows(logits, temperature, row_keys, steps)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    tok_logp = jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
+    emit = jnp.where(done, pad_id, tok)
+    new_done = done | (tok == eos_id)
+    next_logits, k_pages, v_pages = T.decode_step_paged(
+        cfg, params, k_pages, v_pages, block_table, emit, pos,
+        cache_len=cache_len)
+    return (emit, jnp.where(done, 0.0, tok_logp), ~done, new_done,
+            next_logits, k_pages, v_pages)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "cache_len", "temperature", "eos_id",
@@ -357,16 +378,101 @@ def decode_step_rows(cfg: ModelConfig, params: dict,
     composition emits the same per-row tokens the fixed-length scan
     does. Returns (emit, logprob, live, new_done, next_logits,
     k_pages, v_pages)."""
-    tok = sample_token_rows(logits, temperature, row_keys, steps)
-    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-    tok_logp = jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
-    emit = jnp.where(done, pad_id, tok)
-    new_done = done | (tok == eos_id)
-    next_logits, k_pages, v_pages = T.decode_step_paged(
-        cfg, params, k_pages, v_pages, block_table, emit, pos,
-        cache_len=cache_len)
-    return (emit, jnp.where(done, 0.0, tok_logp), ~done, new_done,
-            next_logits, k_pages, v_pages)
+    return _decode_step_rows_impl(
+        cfg, params, logits, k_pages, v_pages, block_table, pos,
+        row_keys, steps, done, cache_len=cache_len,
+        temperature=temperature, eos_id=eos_id, pad_id=pad_id)
+
+
+# ----------------------------------------------------------------------
+# mesh-sharded step programs (serving/mesh.py drives these: one
+# shard_map'd launch advances every shard's bucket simultaneously)
+# ----------------------------------------------------------------------
+def _shard_map(body, mesh, n_in, n_out):
+    """shard_map over the serving mesh's ("data",) axis: every operand
+    and result maps its leading shard axis; the body sees leading-1
+    per-shard slices."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(),) + (P("data"),) * n_in,
+                     out_specs=(P("data"),) * n_out,
+                     check_rep=False)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "prompt_len", "mesh"))
+def prefill_chunk_paged_sharded(cfg: ModelConfig, params: dict,
+                                tokens: jax.Array, k_pages: jax.Array,
+                                v_pages: jax.Array,
+                                block_table: jax.Array,
+                                start_pos: jax.Array, *,
+                                prompt_len: int, mesh):
+    """``prefill_chunk_paged`` across every shard of a ("data",)
+    serving mesh in one launch. All array operands carry a leading
+    ``n_shards`` axis (tokens: (n_sh, B, C); pages: (n_sh, L, P, page,
+    KV, Dh); tables: (n_sh, B, NBp); start_pos: (n_sh, B)); params are
+    replicated. Each shard's slice runs the exact single-device chunk
+    program, so per-row results are bit-identical to unsharded
+    execution — sharding is placement, not math."""
+
+    def body(p, tk, kp, vp, table, starts):
+        lg, kp1, vp1 = T.prefill_chunk_paged(
+            cfg, p, tk[0], kp[0], vp[0], table[0], starts[0],
+            prompt_len=prompt_len)
+        return lg[None], kp1[None], vp1[None]
+
+    return _shard_map(body, mesh, 5, 3)(
+        params, tokens, k_pages, v_pages, block_table, start_pos)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "cache_len", "temperature", "eos_id",
+                     "pad_id", "mesh"))
+def decode_step_rows_sharded(cfg: ModelConfig, params: dict,
+                             logits: jax.Array, k_pages: jax.Array,
+                             v_pages: jax.Array,
+                             block_table: jax.Array, pos: jax.Array,
+                             row_keys: jax.Array, steps: jax.Array,
+                             done: jax.Array, *, cache_len: int,
+                             temperature: float, eos_id: int,
+                             pad_id: int, mesh):
+    """``decode_step_rows`` across every shard of a ("data",) serving
+    mesh in one launch (leading ``n_shards`` axis on every array
+    operand; params replicated). Runs ``_decode_step_rows_impl`` —
+    the identical per-row math — on each shard's slice, so a row
+    emits the same token whatever shard hosts it."""
+
+    def body(p, lg, kp, vp, table, pos_, keys, steps_, done_):
+        out = _decode_step_rows_impl(
+            cfg, p, lg[0], kp[0], vp[0], table[0], pos_[0], keys[0],
+            steps_[0], done_[0], cache_len=cache_len,
+            temperature=temperature, eos_id=eos_id, pad_id=pad_id)
+        return tuple(o[None] for o in out)
+
+    return _shard_map(body, mesh, 8, 7)(
+        params, logits, k_pages, v_pages, block_table, pos, row_keys,
+        steps, done)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def fork_pages_sharded(k_pages: jax.Array, v_pages: jax.Array,
+                       src: jax.Array, dst: jax.Array, *, mesh):
+    """Per-shard ``fork_pages`` in one launch. src/dst: (n_sh, K)
+    shard-local page ids; shards with nothing to fork pass
+    ``src == dst`` self-copies (the identity write), so one shard's
+    COW fork never stalls on the others."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def body(kp, vp, s, d):
+        kp1, vp1 = fork_pages(kp[0], vp[0], s[0], d[0])
+        return kp1[None], vp1[None]
+
+    return shard_map(body, mesh=mesh, in_specs=(P("data"),) * 4,
+                     out_specs=(P("data"),) * 2,
+                     check_rep=False)(k_pages, v_pages, src, dst)
 
 
 def decode_text(tokens, detok) -> list:

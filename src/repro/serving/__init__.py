@@ -9,13 +9,15 @@ from repro.serving.kv_pool import (
     KVStats, PageAccountingError, PagePool, PagePoolError,
     PagedKVServer, PoolExhausted, ProbeHandle, dense_tile_slots,
     pages_for)
+from repro.serving.mesh import ServingMesh, ShardedPagedKVServer
 from repro.serving.metrics import PromCounters
 from repro.serving.queue import (
     AdmissionQueue, MicroBatch, MicroBatchPolicy, Request)
 from repro.serving.scheduler import (
     ContinuousBatchingScheduler, ProbeCache, SchedulerStats,
     StepPlanner)
-from repro.serving.step_loop import StepLoopRunner, StepStats
+from repro.serving.step_loop import (
+    ShardedStepLoopRunner, StepLoopRunner, StepStats)
 
 __all__ = [
     "AdmissionQueue", "BatchedACAREngine", "BatchResult",
@@ -24,7 +26,8 @@ __all__ = [
     "MicroBatchPolicy", "PageAccountingError", "PagePool",
     "PagePoolError", "PagedKVServer", "PoolExhausted", "ProbeCache",
     "ProbeHandle", "PromCounters", "QueuedServeResult", "Request",
-    "SchedulerStats", "StepLoopRunner", "StepPlanner", "StepStats",
-    "ZooModel", "bucket_size", "dense_tile_slots", "intern_answers",
-    "judge_batch", "pages_for", "plan_compaction",
+    "SchedulerStats", "ServingMesh", "ShardedPagedKVServer",
+    "ShardedStepLoopRunner", "StepLoopRunner", "StepPlanner",
+    "StepStats", "ZooModel", "bucket_size", "dense_tile_slots",
+    "intern_answers", "judge_batch", "pages_for", "plan_compaction",
 ]

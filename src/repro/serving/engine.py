@@ -544,7 +544,8 @@ class BatchedACAREngine:
     def run_stepped(self, tasks: Sequence[Task],
                     policy: MicroBatchPolicy = MicroBatchPolicy(), *,
                     chunk_tokens: int = 8,
-                    max_active_rows: Optional[int] = None
+                    max_active_rows: Optional[int] = None,
+                    data_shards: Optional[int] = None
                     ) -> "QueuedServeResult":
         """Serve a request stream through the step-level loop: rows
         admitted from ``AdmissionQueue.ready()`` the moment the page
@@ -554,9 +555,18 @@ class BatchedACAREngine:
         freed) mid-stream. Emits exactly the per-task outputs
         ``run_queued`` emits — bit-identical sigma, modes, probe
         texts, member answers and final answers — in admission order
-        (``tests/harness/simulate.py --step-loop`` enforces this)."""
+        (``tests/harness/simulate.py --step-loop`` enforces this).
+
+        ``data_shards`` switches to the mesh-sharded loop
+        (serving/mesh.py): rows placed on the least-loaded shard of a
+        ("data",) device mesh, per-shard page pools, one shard_map'd
+        program per tick — still bit-identical per task
+        (``simulate.py --sharded``), with ``max_active_rows``
+        interpreted per shard. Needs ``data_shards`` visible devices
+        (on CPU: ``--xla_force_host_platform_device_count``)."""
         from repro.serving.scheduler import StepPlanner
-        from repro.serving.step_loop import StepLoopRunner
+        from repro.serving.step_loop import (
+            ShardedStepLoopRunner, StepLoopRunner)
         t0 = time.perf_counter()
         queue = AdmissionQueue(policy)
         for t in tasks:
@@ -565,9 +575,18 @@ class BatchedACAREngine:
             chunk_tokens=chunk_tokens,
             max_active_rows=max_active_rows or policy.max_batch_size)
         metrics = PromCounters()
-        runner = StepLoopRunner(self, queue, planner, metrics)
+        if data_shards is None:
+            runner = StepLoopRunner(self, queue, planner, metrics)
+        else:
+            from repro.serving.mesh import ServingMesh
+            runner = ShardedStepLoopRunner(
+                self, queue, planner, ServingMesh(data=data_shards),
+                metrics)
         step_stats = runner.run()
-        self._emit_kv_metrics(metrics)
+        # the sharded runner's servers live outside self._kv_servers:
+        # emit the pool gauges / reuse counters from whichever set
+        # actually served the run (plain runner: the engine's own)
+        self._emit_kv_metrics(metrics, kv=runner.kv_stats())
 
         rows = [runner.done_rows[i] for i in range(len(tasks))]
         saved = sum(
@@ -591,15 +610,21 @@ class BatchedACAREngine:
             member_answers=[r.member_answers or
                             [None] * len(self.ensemble)
                             for r in rows],
-            kv=self.kv_stats() or None,
+            kv=runner.kv_stats() or None,
             step=step_stats)
 
-    def _emit_kv_metrics(self, metrics: PromCounters) -> None:
+    def _emit_kv_metrics(self, metrics: PromCounters,
+                         kv: Optional[Dict[str, KVStats]] = None
+                         ) -> None:
         """Per-batch paged-KV exposition: pool gauges plus monotonic
         prefill-reuse counters (deltas since the last emission, so
-        repeated run_queued calls on one engine stay cumulative)."""
-        for srv in self._kv_servers.values():
-            st = srv.stats
+        repeated run_queued calls on one engine stay cumulative).
+        ``kv`` overrides the stats source — the sharded step loop's
+        servers are runner-owned (aggregated per model), not in
+        ``self._kv_servers``."""
+        stats = kv.values() if kv is not None else \
+            [srv.stats for srv in self._kv_servers.values()]
+        for st in stats:
             metrics.set_gauge(
                 "acar_kv_pages_in_use", st.pages_in_use,
                 model=st.model,

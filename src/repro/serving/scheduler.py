@@ -136,6 +136,14 @@ class StepPlanner:
       pad to power-of-two row buckets (``bucket_size``), so XLA
       compiles at most log2(rows)+1 shapes per (server, phase) instead
       of one per occupancy.
+    * **shard placement** — on a sharded mesh (serving/mesh.py),
+      ``place_shard`` puts an admitted row on the least-loaded shard
+      by free pages net of outstanding reservations (ties break to the
+      lowest shard index, deterministically); ``max_active_rows`` is
+      then a *per-shard* cap, so aggregate concurrency scales with the
+      mesh. Placement is pure load balancing: per-row sampling keys
+      are derived from the global admission index, so the shard a row
+      lands on can never change its tokens.
     """
     chunk_tokens: int = 8
     max_active_rows: int = 8
@@ -155,6 +163,27 @@ class StepPlanner:
                   reserved_pages: int, row_need: int) -> bool:
         return (active_rows < self.max_active_rows
                 and free_pages - reserved_pages >= row_need)
+
+    def place_shard(self, active_rows: Sequence[int],
+                    free_pages: Sequence[int],
+                    reserved_pages: Sequence[int],
+                    row_need: int) -> Optional[int]:
+        """Least-loaded shard placement (free-pages-weighted): among
+        shards that can admit (per-shard row cap and page budget, the
+        exact ``may_admit`` predicate), pick the one with the most
+        free pages net of its outstanding reservations; ties break to
+        the lowest shard index. Returns None when no shard can admit
+        — the caller defers the row until retirements free budget."""
+        best = None
+        best_headroom = -1
+        for k in range(len(free_pages)):
+            if not self.may_admit(active_rows[k], free_pages[k],
+                                  reserved_pages[k], row_need):
+                continue
+            headroom = free_pages[k] - reserved_pages[k]
+            if headroom > best_headroom:
+                best, best_headroom = k, headroom
+        return best
 
 
 # ----------------------------------------------------------------------

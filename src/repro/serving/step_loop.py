@@ -54,7 +54,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.core.extract import extract
+from repro.core.extract import extract, extract_batch
 from repro.core.sigma import majority_vote_batch, sigma_batch
 from repro.data import tokenizer as tok
 from repro.sampling import sampler as S
@@ -128,6 +128,7 @@ class _Row:
     admitted_at: int = 0
     retired_at: int = 0
     reserved: int = 0                  # probe-server pages still owed
+    shard: int = 0                     # mesh shard hosting this row
 
     @property
     def admission(self) -> int:
@@ -172,11 +173,29 @@ class StepLoopRunner:
         self.n = engine.acfg.n_probe_samples
         self.max_new = engine.max_new_tokens
         self.base_key = jax.random.PRNGKey(engine.acfg.seed)
+        self._init_servers()
+        self._reserved = 0                 # pages admitted rows may yet take
+        self.active: List[_Row] = []
+        self.done_rows: Dict[int, _Row] = {}
+        self.now = 0
+        # per-tick virtual-clock charges for work outside the grouped
+        # device programs (dense-fallback members run whole
+        # generations on their own executor)
+        self._tick_extra: Dict[object, int] = {}
+        self._routed_this_tick = 0
+
+    def _init_servers(self) -> None:
+        """Resolve the paged servers the loop allocates against. The
+        sharded runner overrides this to build mesh-partitioned
+        servers; everything downstream goes through the per-row
+        ``_probe_server``/``_member_server`` hooks."""
+        engine = self.eng
         self.probe_srv: PagedKVServer = engine._kv_server(engine.probe)
         if self.probe_srv is None:
             raise ValueError(
                 "run_stepped requires a paged-capable probe model "
                 "(models.transformer.paged_supported)")
+        self.page_size = self.probe_srv.page_size
         # one ensure_capacity_stream per distinct server; twin members
         # (same params as the probe) decode on the probe's server, so
         # its per-row worst case carries their seeded decode tails too
@@ -188,19 +207,31 @@ class StepLoopRunner:
                 self._twins += 1
             elif srv is not None and srv not in self._servers:
                 self._servers.append(srv)
-        self._reserved = 0                 # pages admitted rows may yet take
-        self.active: List[_Row] = []
-        self.done_rows: Dict[int, _Row] = {}
-        self.now = 0
-        # per-tick virtual-clock charges for work outside the grouped
-        # device programs (dense-fallback members run whole
-        # generations on their own executor)
-        self._tick_extra: Dict[object, int] = {}
-        self._routed_this_tick = 0
+
+    # -- placement hooks (the sharded runner overrides these) ----------
+    def _probe_server(self, row: _Row) -> PagedKVServer:
+        """The probe-model server hosting ``row``'s pages."""
+        return self.probe_srv
+
+    def _member_server(self, zm, row: _Row) -> Optional[PagedKVServer]:
+        """The server a (row, member) execution allocates against."""
+        return self.eng._kv_server(zm)
+
+    def _reuse_member(self, zm, row: _Row) -> bool:
+        """Whether this member seeds its decode from the row's probe
+        pages (twin params + compactable decode)."""
+        return (self.eng._kv_reuse_member(zm, self.probe_srv)
+                and self.eng._member_compactable(zm))
+
+    def _group_key(self, srv) -> int:
+        """Executor identity for device-program grouping and the
+        virtual clock; the sharded runner collapses a server's shard
+        views into one executor (one shard_map launch serves all)."""
+        return id(srv)
 
     # -- geometry ------------------------------------------------------
     def _geometry(self, s: int):
-        ps = self.probe_srv.page_size
+        ps = self.page_size
         n_shared = s // ps
         nbp = pages_for(s, ps)
         nb = pages_for(s + self.max_new, ps)
@@ -258,7 +289,7 @@ class StepLoopRunner:
                              help="rows admitted into the step loop")
 
     def _begin_prefill(self, row: _Row) -> None:
-        srv = self.probe_srv
+        srv = self._probe_server(row)
         s = row.s
         ps, n_shared, nbp, _, _ = self._geometry(s)
         entry = srv._prefix_lookup(row.ids.tobytes())
@@ -281,7 +312,7 @@ class StepLoopRunner:
         self._unreserve(row, nbp)
 
     def _begin_probe_decode(self, row: _Row) -> None:
-        srv = self.probe_srv
+        srv = self._probe_server(row)
         s = row.s
         ps, n_shared, _, nb, n_tail = self._geometry(s)
         row.sample_tails = srv._alloc_retry(
@@ -303,8 +334,7 @@ class StepLoopRunner:
         srv._sample_usage()
 
     # -- page plumbing -------------------------------------------------
-    @staticmethod
-    def _fork(srv: PagedKVServer, src: Sequence[int],
+    def _fork(self, srv: PagedKVServer, src: Sequence[int],
               dst: Sequence[int]) -> None:
         import jax.numpy as jnp
         srv.k_pages, srv.v_pages = S.fork_pages(
@@ -331,10 +361,10 @@ class StepLoopRunner:
         groups: Dict[tuple, list] = {}
         for row in self.active:
             if row.phase == "prefill":
+                srv = self._probe_server(row)
                 c = self.planner.chunk_span(row.prefill_pos, row.s)
-                key = (id(self.probe_srv), c, row.s)
-                groups.setdefault(key, []).append(
-                    (self.probe_srv, row, None))
+                key = (self._group_key(srv), c, row.s)
+                groups.setdefault(key, []).append((srv, row, None))
             elif row.phase == "ensemble_decode":
                 for mx in row.members:
                     if (mx.answer is None and not mx.reuse
@@ -342,7 +372,7 @@ class StepLoopRunner:
                             and mx.prefill_pos < row.s):
                         c = self.planner.chunk_span(mx.prefill_pos,
                                                     row.s)
-                        key = (id(mx.server), c, row.s)
+                        key = (self._group_key(mx.server), c, row.s)
                         groups.setdefault(key, []).append(
                             (mx.server, row, mx))
         return groups
@@ -406,19 +436,21 @@ class StepLoopRunner:
         for row in self.active:
             cache_len = row.s + self.max_new
             if row.phase == "probe_decode":
+                srv = self._probe_server(row)
                 for lane in row.lanes:
                     if not lane.done and lane.steps < self.max_new:
-                        key = (id(self.probe_srv),
+                        key = (self._group_key(srv),
                                self.acfg.probe_temperature, cache_len)
                         groups.setdefault(key, []).append(
-                            (self.probe_srv, row, lane))
+                            (srv, row, lane))
             elif row.phase == "ensemble_decode":
                 for mx in row.members:
                     lane = mx.lane
                     if (lane is not None and not lane.done
                             and lane.steps < self.max_new):
-                        srv = self.probe_srv if mx.reuse else mx.server
-                        key = (id(srv),
+                        srv = self._probe_server(row) if mx.reuse \
+                            else mx.server
+                        key = (self._group_key(srv),
                                self.acfg.ensemble_temperature,
                                cache_len)
                         groups.setdefault(key, []).append(
@@ -498,19 +530,30 @@ class StepLoopRunner:
     def _route(self, rows: List[_Row]) -> None:
         import jax.numpy as jnp
         from repro.serving.engine import intern_answers
-        srv = self.probe_srv
         n = self.n
         self._routed_this_tick += len(rows)
+        # batched route-time extract: decode + extract every row
+        # routing this tick in one call (duplicate probe texts are
+        # extracted once) — element-wise identical to the old per-row
+        # extract loop, so sigma/modes/answers cannot move
+        texts_all: List[str] = []
+        kinds_all: List[str] = []
         for row in rows:
             texts = [tok.decode(l.harvest(self.max_new, tok.PAD))
                      for l in row.lanes]
             row.probe_texts = texts
-            row.probe_answers = [
-                extract(t, row.request.task.kind) for t in texts]
+            texts_all.extend(texts)
+            kinds_all.extend([row.request.task.kind] * len(texts))
+        answers_all = extract_batch(texts_all, kinds_all)
+        off = 0
+        for row in rows:
+            row.probe_answers = answers_all[off:off + len(row.lanes)]
+            off += len(row.lanes)
+            srv = self._probe_server(row)
             srv.pool.release(row.sample_tails.reshape(-1))
             row.sample_tails = None
             row.lanes = []
-        srv._sample_usage()
+            srv._sample_usage()
         # per-row interning namespaces: sigma/majority/judge are
         # within-row functions, invariant to interning order
         ids = np.stack([intern_answers(row.probe_answers)
@@ -532,7 +575,7 @@ class StepLoopRunner:
         needed = [mi for mi in range(len(eng.ensemble))
                   if self._member_needed(row.mode, mi)]
         if not needed:
-            self._release_prompt(self.probe_srv, row)
+            self._release_prompt(self._probe_server(row), row)
             self._judge(row)       # mode 0: final = probe majority
             self._retire(row)
             return
@@ -540,9 +583,8 @@ class StepLoopRunner:
         row.phase = "ensemble_decode"
         for mi in needed:
             zm = eng.ensemble[mi]
-            srv_m = eng._kv_server(zm)
-            reuse = (eng._kv_reuse_member(zm, self.probe_srv)
-                     and eng._member_compactable(zm))
+            srv_m = self._member_server(zm, row)
+            reuse = self._reuse_member(zm, row)
             mx = _MemberExec(member=mi, server=srv_m, reuse=reuse)
             row.members.append(mx)
             if reuse:
@@ -574,11 +616,11 @@ class StepLoopRunner:
         if not any(mx.reuse for mx in row.members):
             # no member seeds from the probe's pages: free them the
             # moment the route resolves, like the wave handle does
-            self._release_prompt(self.probe_srv, row)
+            self._release_prompt(self._probe_server(row), row)
         self._finish_members(row)
 
     def _begin_member_decode(self, row: _Row, mx: _MemberExec) -> None:
-        srv = self.probe_srv if mx.reuse else mx.server
+        srv = self._probe_server(row) if mx.reuse else mx.server
         s = row.s
         ps, n_shared, _, nb, n_tail = self._geometry(s)
         tails = srv._alloc_retry(n_tail)
@@ -621,7 +663,7 @@ class StepLoopRunner:
         self._tick_extra[key] = self._tick_extra.get(key, 0) + cost
 
     def _finish_members(self, row: _Row) -> None:
-        srv = self.probe_srv
+        srv = self._probe_server(row)
         for mx in row.members:
             lane = mx.lane
             if (mx.answer is None and lane is not None
@@ -666,6 +708,10 @@ class StepLoopRunner:
         self.stats.timeline[row.admission] = (arr, adm, self.now)
         self.stats.retired += 1
         self.done_rows[row.admission] = row
+
+    def kv_stats(self):
+        """Measured paged-KV accounting per model for this run."""
+        return self.eng.kv_stats()
 
     # -- main loop -----------------------------------------------------
     def _emit_phase_gauges(self) -> None:
@@ -725,3 +771,311 @@ class StepLoopRunner:
                     if nxt is not None:
                         self.now = max(self.now, nxt)
         return self.stats
+
+
+# ----------------------------------------------------------------------
+# mesh-sharded step loop (serving/mesh.py per-shard page pools)
+# ----------------------------------------------------------------------
+class ShardedStepLoopRunner(StepLoopRunner):
+    """Step-level loop over a ``ServingMesh``: rows are placed on the
+    least-loaded shard at admission (``StepPlanner.place_shard``),
+    every shard keeps its own page pool / block tables / free list /
+    prefix cache (``ShardedPagedKVServer``), and each tick's prefill
+    and decode groups run as *one* shard_map'd program spanning every
+    shard simultaneously (``sampler.decode_step_rows_sharded`` /
+    ``prefill_chunk_paged_sharded``) — per-shard buckets, vector pos,
+    per-row key streams keyed by global admission index. Only the emit
+    and done bits (plus next-token logits for the lane state) come
+    back to the host each tick; route-time extracts are batched per
+    tick.
+
+    Bit-equivalence with the single-device loop holds because every
+    per-row computation is placement-independent: sampling keys derive
+    from the global admission index, attention reads only the row's
+    own shard-local pages, and all host decisions are deterministic
+    functions of the admission order. ``tests/harness/simulate.py
+    --sharded`` proves it on record hashes and artifact-chain heads.
+
+    ``planner.max_active_rows`` is the *per-shard* cap here, so
+    aggregate concurrency — and aggregate KV page capacity — scale
+    with the mesh (``benchmarks/sharding_bench.py`` gates both).
+    """
+
+    def __init__(self, engine, queue: AdmissionQueue,
+                 planner: StepPlanner, smesh,
+                 metrics: Optional[PromCounters] = None):
+        self.smesh = smesh
+        super().__init__(engine, queue, planner, metrics)
+
+    # -- server topology -----------------------------------------------
+    def _init_servers(self) -> None:
+        from repro.models.transformer import paged_supported
+        eng = self.eng
+        if not paged_supported(eng.probe.cfg):
+            raise ValueError(
+                "sharded serving requires a paged-capable probe model "
+                "(models.transformer.paged_supported)")
+        self._sharded: Dict[int, object] = {}      # id(params) -> server
+        self._model_by_group: Dict[int, object] = {}
+        self._params_repl: Dict[int, dict] = {}
+        self.probe_sharded = self._sharded_server(eng.probe)
+        self._member_sharded: List[object] = []
+        self._twins = 0
+        for zm in eng.ensemble:
+            if not paged_supported(zm.cfg):
+                continue                       # dense one-shot fallback
+            if zm.params is eng.probe.params:
+                if zm is not eng.probe:
+                    self._twins += 1
+            else:
+                srv = self._sharded_server(zm)
+                if srv not in self._member_sharded:
+                    self._member_sharded.append(srv)
+        self.page_size = self.probe_sharded.page_size
+        # shard-0 view: page geometry only — allocation always goes
+        # through the per-row _probe_server/_member_server hooks
+        self.probe_srv = self.probe_sharded.shards[0]
+        self._servers = [self.probe_srv]
+        n = self.smesh.n_shards
+        self._shard_active = [0] * n
+        self._shard_reserved = [0] * n
+
+    def _sharded_server(self, zm):
+        from repro.serving.mesh import ShardedPagedKVServer
+        key = id(zm.params)
+        srv = self._sharded.get(key)
+        if srv is None:
+            srv = ShardedPagedKVServer(
+                zm.cfg, self.smesh, page_size=self.eng.kv_page_size,
+                prefix_cache_entries=self.eng.kv_prefix_cache)
+            srv.set_model_name(zm.name)
+            self._sharded[key] = srv
+            self._model_by_group[id(srv)] = zm
+            self._params_repl[id(srv)] = self.smesh.replicate(zm.params)
+        return srv
+
+    # -- placement hooks -----------------------------------------------
+    def _probe_server(self, row: _Row):
+        return self.probe_sharded.shards[row.shard]
+
+    def _member_server(self, zm, row: _Row):
+        from repro.models.transformer import paged_supported
+        if not paged_supported(zm.cfg):
+            return None
+        return self._sharded_server(zm).shards[row.shard]
+
+    def _reuse_member(self, zm, row: _Row) -> bool:
+        eng = self.eng
+        return (zm.cfg == eng.probe.cfg
+                and zm.params is eng.probe.params
+                and eng._member_compactable(zm))
+
+    def _group_key(self, srv) -> int:
+        return id(srv.parent)
+
+    def _server_model(self, srv):
+        return self._model_by_group[id(srv.parent)]
+
+    # -- reservations / retirement (shard-local) -----------------------
+    def _unreserve(self, row: _Row, pages: int) -> None:
+        pages = min(pages, row.reserved)
+        row.reserved -= pages
+        self._shard_reserved[row.shard] -= pages
+
+    def _retire(self, row: _Row) -> None:
+        self._shard_active[row.shard] -= 1
+        super()._retire(row)
+
+    # -- admission: least-loaded shard placement -----------------------
+    def _admit_ready(self) -> None:
+        while len(self.queue) and self.queue.ready(self.now):
+            head = self.queue.peek()
+            if head.arrival_time > self.now:
+                break
+            ids = tok.encode_aligned([head.task.text])[0]
+            s = int(ids.shape[0])
+            try:
+                self.probe_sharded.ensure_capacity_stream(
+                    self.planner.max_active_rows, s,
+                    self.n + max(self._twins, 1), self.max_new)
+                for srv in self._member_sharded:
+                    srv.ensure_capacity_stream(
+                        self.planner.max_active_rows, s, 1,
+                        self.max_new)
+            except PagePoolError:
+                # a longer prompt needs bigger per-shard pools, which
+                # only rebuild while no shard holds pages: defer until
+                # the active rows drain (see StepLoopRunner)
+                if self.active:
+                    break
+                raise
+            need = self._row_need(s)
+            shard = self.planner.place_shard(
+                self._shard_active,
+                [sv.pool.free_pages
+                 for sv in self.probe_sharded.shards],
+                self._shard_reserved, need)
+            if shard is None:
+                break
+            req = self.queue.pop()
+            row = _Row(request=req, ids=ids, admitted_at=self.now,
+                       reserved=need, shard=shard)
+            self._shard_reserved[shard] += need
+            self._shard_active[shard] += 1
+            self.stats.timeline[row.admission] = (
+                req.arrival_time, self.now, -1)
+            self._begin_prefill(row)
+            self.active.append(row)
+            self.stats.admissions += 1
+            self.metrics.inc("acar_step_admissions_total",
+                             help="rows admitted into the step loop")
+            self.metrics.inc("acar_shard_placements_total",
+                             shard=str(shard),
+                             help="rows placed per mesh shard")
+
+    # -- page plumbing: per-shard COW forks in one launch --------------
+    def _fork(self, srv, src: Sequence[int],
+              dst: Sequence[int]) -> None:
+        parent = srv.parent
+        src_a = parent.pad_fork_ids(len(src))
+        dst_a = src_a.copy()
+        src_a[srv.index] = src
+        dst_a[srv.index] = dst
+        parent.k_pages, parent.v_pages = S.fork_pages_sharded(
+            parent.k_pages, parent.v_pages, src_a, dst_a,
+            mesh=self.smesh.mesh)
+
+    # -- device programs: one shard_map'd launch per group -------------
+    def _run_prefill_group(self, key, items) -> None:
+        _, c, s = key
+        parent = items[0][0].parent
+        nsh = parent.n_shards
+        nbp = pages_for(s, self.page_size)
+        per: List[list] = [[] for _ in range(nsh)]
+        for srv, row, mx in items:
+            per[srv.index].append((srv, row, mx))
+        for k in range(nsh):
+            per[k].sort(key=lambda it: it[1].admission)
+        bucket = self.planner.decode_bucket(
+            max(len(p) for p in per))
+        tokens = np.zeros((nsh, bucket, c), np.int32)
+        tables = np.empty((nsh, bucket, nbp), np.int32)
+        starts = np.zeros((nsh, bucket), np.int32)
+        for k in range(nsh):
+            scratch = parent.shards[k]._scratch[:nbp]
+            for i in range(bucket):
+                if i < len(per[k]):
+                    _, row, mx = per[k][i]
+                    target = mx if mx is not None else row
+                    starts[k, i] = target.prefill_pos
+                    tokens[k, i] = row.ids[
+                        starts[k, i]:starts[k, i] + c]
+                    tables[k, i, :target.shared.size] = target.shared
+                    if target.tail is not None:
+                        tables[k, i, -1] = target.tail
+                else:
+                    # pad rows prefill zeros into scratch pages
+                    tables[k, i] = scratch
+        zm = self._model_by_group[id(parent)]
+        prm = self._params_repl[id(parent)]
+        lg, parent.k_pages, parent.v_pages = \
+            S.prefill_chunk_paged_sharded(
+                zm.cfg, prm, tokens, parent.k_pages, parent.v_pages,
+                tables, starts, prompt_len=s, mesh=self.smesh.mesh)
+        for sv in parent.shards:
+            sv.stats.prefill_tokens_computed += bucket * c
+            sv.stats.prefill_chunks += 1
+        self.stats.prefill_chunks += 1
+        self.metrics.inc("acar_prefill_chunks_total",
+                         model=parent.model_name,
+                         help="chunked-prefill device programs run")
+        lg = np.asarray(lg, np.float32)
+        for k in range(nsh):
+            for i, (srv, row, mx) in enumerate(per[k]):
+                target = mx if mx is not None else row
+                target.prefill_pos = int(starts[k, i]) + c
+                if target.prefill_pos == s:
+                    target.logits0 = lg[k, i]
+                    srv._prefix_insert(row.ids.tobytes(),
+                                       target.shared, target.tail,
+                                       lg[k, i], tokens=s)
+
+    def _run_decode_group(self, key, items) -> None:
+        _, temperature, cache_len = key
+        parent = items[0][0].parent
+        nsh = parent.n_shards
+        nb = pages_for(cache_len, self.page_size)
+        per: List[list] = [[] for _ in range(nsh)]
+        for srv, row, lane in items:
+            per[srv.index].append((row, lane))
+        for k in range(nsh):
+            per[k].sort(key=lambda rl: (rl[0].admission, rl[1].tag))
+        bucket = self.planner.decode_bucket(
+            max(len(p) for p in per))
+        vocab = int(items[0][2].logits.shape[0])
+        logits = np.zeros((nsh, bucket, vocab), np.float32)
+        tables = np.empty((nsh, bucket, nb), np.int32)
+        pos = np.full((nsh, bucket), cache_len - self.max_new,
+                      np.int32)
+        keys = np.zeros((nsh, bucket, 2), np.uint32)
+        steps = np.zeros((nsh, bucket), np.int32)
+        done = np.ones((nsh, bucket), bool)
+        live_total = 0
+        for k in range(nsh):
+            scratch = parent.shards[k]._scratch[:nb]
+            for i in range(bucket):
+                if i < len(per[k]):
+                    row, lane = per[k][i]
+                    logits[k, i] = lane.logits
+                    tables[k, i] = lane.block_table
+                    pos[k, i] = cache_len - self.max_new + lane.steps
+                    keys[k, i] = lane.row_key
+                    steps[k, i] = lane.steps
+                    done[k, i] = False
+                    live_total += 1
+                else:
+                    tables[k, i] = scratch
+        zm = self._model_by_group[id(parent)]
+        prm = self._params_repl[id(parent)]
+        (emit, _logp, _live, new_done, next_logits, parent.k_pages,
+         parent.v_pages) = S.decode_step_rows_sharded(
+            zm.cfg, prm, logits, parent.k_pages, parent.v_pages,
+            tables, pos, keys, steps, done, cache_len=cache_len,
+            temperature=temperature, eos_id=tok.EOS, pad_id=tok.PAD,
+            mesh=self.smesh.mesh)
+        emit = np.asarray(emit)
+        new_done = np.asarray(new_done)
+        next_logits = np.asarray(next_logits, np.float32)
+        for k in range(nsh):
+            for i, (row, lane) in enumerate(per[k]):
+                lane.tokens.append(int(emit[k, i]))
+                lane.length += 1
+                lane.steps += 1
+                lane.done = bool(new_done[k, i])
+                lane.logits = next_logits[k, i]
+        self.metrics.set_gauge(
+            "acar_step_bucket_occupancy",
+            live_total / (nsh * bucket), server=parent.model_name,
+            bucket=str(bucket),
+            help="live-lane fill of the last step-decode bucket")
+
+    # -- observability -------------------------------------------------
+    def _emit_phase_gauges(self) -> None:
+        super()._emit_phase_gauges()
+        counts = [0] * self.smesh.n_shards
+        for row in self.active:
+            counts[row.shard] += 1
+        for k, v in enumerate(counts):
+            self.metrics.set_gauge(
+                "acar_shard_rows_active", v, shard=str(k),
+                help="active rows resident per mesh shard")
+        for srv in [self.probe_sharded] + self._member_sharded:
+            for k, used in srv.per_shard_pages_in_use().items():
+                self.metrics.set_gauge(
+                    "acar_shard_pages_in_use", used, shard=str(k),
+                    model=srv.model_name,
+                    help="KV pool pages in use per mesh shard")
+
+    def kv_stats(self):
+        return {srv.model_name: srv.aggregate_stats()
+                for srv in self._sharded.values()}

@@ -1,0 +1,89 @@
+"""XLA_FLAGS helpers that are safe to run before jax initialises.
+
+Several entry points need ``--xla_force_host_platform_device_count``
+set *before* the first jax backend initialisation (the device count
+locks then): the dry-run/perf compiles force 512 placeholder host
+devices, and the sharded-serving harness forces a small CPU device
+mesh. Assigning ``os.environ["XLA_FLAGS"] = ...`` outright clobbers
+whatever the user already exported (custom partitioner flags, dump
+paths, or their *own* device-count override) — these helpers merge
+instead.
+
+This module must stay import-light: no jax, no repro.* imports — the
+callers run it as their very first statement.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Optional, Sequence
+
+_COUNT_RE = re.compile(
+    r"--xla_force_host_platform_device_count=(\d+)")
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def host_device_count(flags: Optional[str]) -> Optional[int]:
+    """Parse an existing host-device-count override out of a flags
+    string; None when the flag is absent."""
+    if not flags:
+        return None
+    m = _COUNT_RE.search(flags)
+    return int(m.group(1)) if m else None
+
+
+def merge_host_device_count(flags: Optional[str], count: int) -> str:
+    """Return ``flags`` with the host-device-count flag ensured.
+
+    Every other flag is preserved verbatim, and an *existing*
+    ``--xla_force_host_platform_device_count`` wins over ``count`` —
+    a user who exported their own override keeps it.
+    """
+    parts = [p for p in (flags or "").split() if p]
+    if any(p.startswith(_FLAG) for p in parts):
+        return " ".join(parts)
+    parts.append(f"{_FLAG}={count}")
+    return " ".join(parts)
+
+
+def force_host_device_count(count: int, env=None) -> str:
+    """Merge the host-device-count flag into ``env['XLA_FLAGS']``
+    (default ``os.environ``) and return the resulting flags string.
+    Must run before the first jax backend initialisation to have any
+    effect — jax locks the device count then."""
+    if env is None:
+        env = os.environ
+    merged = merge_host_device_count(env.get("XLA_FLAGS"), count)
+    env["XLA_FLAGS"] = merged
+    return merged
+
+
+def argv_int(argv: Sequence[str], flag: str, default: int) -> int:
+    """Read an integer option from an argv slice, accepting both the
+    ``--flag N`` and ``--flag=N`` spellings argparse accepts."""
+    argv = list(argv)
+    for i, a in enumerate(argv):
+        if a == flag and i + 1 < len(argv):
+            return int(argv[i + 1])
+        if a.startswith(flag + "="):
+            return int(a.split("=", 1)[1])
+    return default
+
+
+def reexec_with_host_devices(count: int,
+                             argv: Sequence[str]) -> None:
+    """Re-exec the current interpreter with the host-device-count flag
+    merged into XLA_FLAGS — the escape hatch for CLIs that need a
+    multi-device CPU mesh but were launched without one (jax locks
+    the count at first backend init, so setting it in-process is too
+    late once anything touched a device). No-op when the environment
+    already carries a count: a user-set override always wins, and the
+    downstream mesh constructor raises a clear error if it is too
+    small. ``argv`` is the exec argv after the interpreter path."""
+    if host_device_count(os.environ.get("XLA_FLAGS")) is not None:
+        return
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = merge_host_device_count(
+        env.get("XLA_FLAGS"), count)
+    os.execve(sys.executable, [sys.executable] + list(argv), env)

@@ -52,6 +52,14 @@ class _Lists(Strategy):
         return [self.elements.example(rng) for _ in range(n)]
 
 
+@dataclass
+class _Tuples(Strategy):
+    parts: Sequence[Strategy]
+
+    def example(self, rng: random.Random) -> tuple:
+        return tuple(p.example(rng) for p in self.parts)
+
+
 class strategies:
     """Namespace mirroring ``hypothesis.strategies``."""
 
@@ -68,6 +76,10 @@ class strategies:
     def lists(elements: Strategy, min_size: int = 0,
               max_size: int = 10) -> Strategy:
         return _Lists(elements, min_size, max_size)
+
+    @staticmethod
+    def tuples(*parts: Strategy) -> Strategy:
+        return _Tuples(parts)
 
 
 def given(*strats: Strategy) -> Callable:

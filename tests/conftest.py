@@ -1,10 +1,46 @@
 """Ensure the repo root (for ``benchmarks``) is importable regardless
 of how pytest is invoked. NOTE: no XLA flags here — smoke tests must
-see one CPU device (the 512-device meshes are dryrun.py-only)."""
+see one CPU device (the 512-device meshes are dryrun.py-only, and
+multi-device sharded tests run in subprocesses via the
+``forced_devices`` fixture below)."""
+import os
+import subprocess
 import sys
 from pathlib import Path
+
+import pytest
 
 ROOT = Path(__file__).resolve().parent.parent
 for p in (str(ROOT), str(ROOT / "src"), str(ROOT / "tests")):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+
+@pytest.fixture
+def forced_devices():
+    """Run a python snippet in a subprocess under a forced host device
+    count (the ``test_stable_seed.py`` subprocess pattern): jax locks
+    the device count at first backend init, so multi-device sharded
+    tests must not pollute the in-process single-device jax state the
+    rest of the suite relies on. XLA_FLAGS is *merged* (never
+    clobbered — repro.xla_flags), PYTHONPATH covers src+tests, and the
+    snippet's stdout is returned; a non-zero exit raises with the
+    subprocess's stderr attached."""
+    def run(snippet: str, count: int = 4, timeout: int = 560) -> str:
+        sys.path.insert(0, str(ROOT / "src"))
+        from repro.xla_flags import merge_host_device_count
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = merge_host_device_count(
+            env.get("XLA_FLAGS"), count)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [str(ROOT / "src"), str(ROOT / "tests"), str(ROOT)]
+            + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+        proc = subprocess.run(
+            [sys.executable, "-c", snippet], env=env, text=True,
+            capture_output=True, timeout=timeout)
+        if proc.returncode != 0:
+            raise AssertionError(
+                f"forced-device subprocess failed "
+                f"(exit {proc.returncode}):\n{proc.stderr[-4000:]}")
+        return proc.stdout
+    return run

@@ -1,0 +1,317 @@
+"""Sharded serving subsystem: shard placement policy, per-shard pool
+invariants, batched route-time extraction, and multi-device
+bit-equivalence (subprocess, forced host device count).
+
+Single-device tests run in-process; anything needing a data>1 mesh
+goes through the ``forced_devices`` conftest fixture so the suite's
+single-device jax state stays unpolluted.
+"""
+import types
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                    # pragma: no cover
+    from _propshim import given, settings
+    from _propshim import strategies as st
+
+from repro.core.extract import extract, extract_batch
+from repro.serving.kv_pool import PageAccountingError, PagePoolError
+from repro.serving.scheduler import StepPlanner
+
+
+# ----------------------------------------------------------------------
+# StepPlanner.place_shard (least-loaded, free-pages-weighted)
+# ----------------------------------------------------------------------
+def test_place_shard_picks_most_headroom():
+    p = StepPlanner(max_active_rows=8)
+    assert p.place_shard([0, 0, 0], [50, 90, 70], [0, 10, 0],
+                         row_need=20) == 1
+    # reservations count against headroom: 90-80 < 70-0
+    assert p.place_shard([0, 0, 0], [50, 90, 70], [0, 80, 0],
+                         row_need=20) == 2
+
+
+def test_place_shard_tie_breaks_to_lowest_index():
+    p = StepPlanner(max_active_rows=8)
+    assert p.place_shard([0, 0, 0], [60, 60, 60], [0, 0, 0],
+                         row_need=10) == 0
+
+
+def test_place_shard_respects_per_shard_row_cap():
+    p = StepPlanner(max_active_rows=2)
+    assert p.place_shard([2, 1], [100, 10], [0, 0], row_need=10) == 1
+    assert p.place_shard([2, 2], [100, 100], [0, 0], row_need=10) \
+        is None
+
+
+def test_place_shard_none_when_no_budget():
+    p = StepPlanner(max_active_rows=8)
+    assert p.place_shard([0, 0], [15, 18], [0, 0], row_need=20) is None
+
+
+def test_place_shard_matches_may_admit():
+    """place_shard's per-shard predicate is exactly may_admit."""
+    p = StepPlanner(max_active_rows=3)
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        active = rng.integers(0, 5, size=4).tolist()
+        free = rng.integers(0, 60, size=4).tolist()
+        reserved = rng.integers(0, 30, size=4).tolist()
+        need = int(rng.integers(1, 40))
+        got = p.place_shard(active, free, reserved, need)
+        admissible = [k for k in range(4)
+                      if p.may_admit(active[k], free[k], reserved[k],
+                                     need)]
+        if got is None:
+            assert not admissible
+        else:
+            assert got in admissible
+            headroom = [free[k] - reserved[k] for k in admissible]
+            assert free[got] - reserved[got] == max(headroom)
+
+
+# ----------------------------------------------------------------------
+# per-shard pool invariants under shard-local free lists
+# ----------------------------------------------------------------------
+def _host_only_sharded_server(n_shards=4, num_pages=24,
+                              scratch_pages=2, page_size=4):
+    """ShardedPagedKVServer host state without device arrays: the
+    shard-local pools, scratch regions and prefix caches are all the
+    invariants care about."""
+    from repro.configs.registry import get_config
+    from repro.serving.mesh import ShardedPagedKVServer
+
+    cfg = get_config("smollm-135m", reduced=True).replace(
+        dtype="float32", tie_embeddings=True)
+    srv = ShardedPagedKVServer.__new__(ShardedPagedKVServer)
+    srv.cfg = cfg
+    srv.smesh = types.SimpleNamespace(n_shards=n_shards)
+    srv.page_size = page_size
+    srv.k_pages = srv.v_pages = None
+    from repro.serving.mesh import _ShardView
+    srv.shards = [
+        _ShardView(srv, i, cfg, page_size=page_size,
+                   prefix_cache_entries=4) for i in range(n_shards)]
+    srv._rebuild_host(num_pages, scratch_pages, key=(1, 1, 1, 1))
+    return srv
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 5)),
+                min_size=1, max_size=40),
+       st.integers(0, 2 ** 31 - 1))
+def test_shard_local_pools_track_live_footprint(ops, seed):
+    """Random alloc/release traffic spread across shards: every
+    shard's pages_in_use equals its own live footprint (scratch +
+    outstanding allocations), shard-local free lists never leak pages
+    into another shard, and freeing twice raises."""
+    rng = np.random.default_rng(seed)
+    srv = _host_only_sharded_server()
+    live = [[] for _ in range(4)]            # per-shard allocations
+    for shard, n in ops:
+        pool = srv.shards[shard].pool
+        if live[shard] and rng.random() < 0.4:
+            pool.release(live[shard].pop())
+        elif n <= pool.free_pages:
+            live[shard].append(pool.alloc(n))
+    for k, sv in enumerate(srv.shards):
+        footprint = sv._scratch.size + sum(a.size for a in live[k])
+        assert sv.pool.pages_in_use == footprint, f"shard {k}"
+        # shard-local ids: every live page id is inside this pool
+        for a in live[k]:
+            assert all(0 <= p < sv.pool.num_pages for p in a)
+    # double free raises and leaves the pool intact
+    for k in range(4):
+        if live[k]:
+            pages = live[k][0]
+            srv.shards[k].pool.release(pages)
+            before = srv.shards[k].pool.pages_in_use
+            with pytest.raises(PageAccountingError):
+                srv.shards[k].pool.release(pages)
+            assert srv.shards[k].pool.pages_in_use == before
+            break
+
+
+def test_rebuild_refused_while_any_shard_holds_pages():
+    srv = _host_only_sharded_server()
+    held = srv.shards[2].pool.alloc(3)
+    with pytest.raises(PagePoolError):
+        srv._rebuild_host(64, 2, key=(2, 2, 2, 2))
+    srv.shards[2].pool.release(held)
+    srv._rebuild_host(64, 2, key=(2, 2, 2, 2))
+    assert all(sv.pool.num_pages == 64 for sv in srv.shards)
+
+
+def test_shard_pools_are_independent():
+    """Exhausting one shard's pool must not touch another's."""
+    srv = _host_only_sharded_server(num_pages=8, scratch_pages=2)
+    a = srv.shards[0].pool.alloc(6)          # shard 0 full
+    assert srv.shards[0].pool.free_pages == 0
+    assert srv.shards[1].pool.free_pages == 6
+    b = srv.shards[1].pool.alloc(6)
+    srv.shards[0].pool.release(a)
+    assert srv.shards[1].pool.pages_in_use == 8
+    srv.shards[1].pool.release(b)
+
+
+# ----------------------------------------------------------------------
+# batched route-time extraction
+# ----------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(
+    st.sampled_from(["answer: 42", "7 + 5 = 12", "(B)", "so x",
+                     "answer: -3.50", "noise 9e2 tail", ""]),
+    st.sampled_from(["math", "mcq", "reasoning", "code"])),
+    min_size=0, max_size=30))
+def test_extract_batch_matches_per_row_extract(pairs):
+    """The tick-batched extract is element-wise identical to the
+    per-row calls it replaced — batching must never move
+    sigma/modes/answers."""
+    texts = [t for t, _ in pairs]
+    kinds = [k for _, k in pairs]
+    assert extract_batch(texts, kinds) == \
+        [extract(t, k) for t, k in pairs]
+
+
+def test_extract_batch_dedupes_duplicate_pairs(monkeypatch):
+    """N probe samples decoding the same text are extracted once."""
+    import importlib
+    ex = importlib.import_module("repro.core.extract")
+    calls = []
+    real = ex.extract
+
+    def counting(response, kind, canonicalize_code=False):
+        calls.append((response, kind))
+        return real(response, kind, canonicalize_code)
+
+    monkeypatch.setattr(ex, "extract", counting)
+    out = ex.extract_batch(["answer: 7"] * 5 + ["answer: 9"],
+                           ["math"] * 6)
+    assert out == ["7"] * 5 + ["9"]
+    assert len(calls) == 2
+
+
+def test_extract_batch_length_mismatch_raises():
+    with pytest.raises(ValueError):
+        extract_batch(["a"], [])
+
+
+# ----------------------------------------------------------------------
+# mesh wrappers (single device, in-process)
+# ----------------------------------------------------------------------
+def test_serving_mesh_single_device():
+    from repro.serving.mesh import ServingMesh
+    sm = ServingMesh(data=1)
+    assert sm.n_shards == 1
+    assert tuple(sm.mesh.axis_names) == ("data",)
+
+
+def test_serving_mesh_too_many_shards_raises():
+    import jax
+    from repro.serving.mesh import ServingMesh
+    want = len(jax.devices()) + 1
+    with pytest.raises(RuntimeError, match="host_platform_device"):
+        ServingMesh(data=want)
+
+
+@pytest.mark.slow
+def test_sharded_single_shard_bit_equals_plain_step_loop():
+    """data=1 sharded loop (shard_map over one device) emits exactly
+    the plain step loop's outputs — the in-process end of the
+    bit-equivalence proof (data=4 runs in the subprocess test)."""
+    from harness.simulate import paged_zoo
+    from repro.configs.acar import ACARConfig
+    from repro.data.tasks import Task
+    from repro.serving import BatchedACAREngine, MicroBatchPolicy
+
+    rng = np.random.default_rng(3)
+    tasks = []
+    for i in range(8):
+        digits = "".join(str(rng.integers(10)) for _ in range(16))
+        tasks.append(Task(task_id=f"sh{i}", benchmark="x",
+                          kind="math", text=f"{digits} + 1 = ",
+                          gold="0", difficulty=0.0))
+    probe, ensemble = paged_zoo(seed=0)
+    acfg = ACARConfig(probe_temperature=0.9, seed=0)
+    policy = MicroBatchPolicy(max_batch_size=4,
+                              max_batch_tokens=1 << 20)
+    plain = BatchedACAREngine(acfg, probe, ensemble, max_new_tokens=4)
+    res_p = plain.run_stepped(tasks, policy, chunk_tokens=7)
+    sharded = BatchedACAREngine(acfg, probe, ensemble,
+                                max_new_tokens=4)
+    res_s = sharded.run_stepped(tasks, policy, chunk_tokens=7,
+                                data_shards=1)
+    np.testing.assert_array_equal(res_p.sigma, res_s.sigma)
+    np.testing.assert_array_equal(res_p.modes, res_s.modes)
+    assert res_p.final_answers == res_s.final_answers
+    assert res_p.probe_texts == res_s.probe_texts
+    assert res_p.member_answers == res_s.member_answers
+
+
+@pytest.mark.slow
+def test_sharded_data4_bit_equals_single_device(forced_devices):
+    """The real thing: a 4-shard mesh (forced host devices, subprocess
+    so the in-process jax state stays single-device) serves a
+    duplicate-bearing stream bit-identically to the single-device
+    step loop, balances placement, and leaks no pages (per-shard
+    pools end at scratch + prefix-cache footprint)."""
+    out = forced_devices("""
+import numpy as np
+from harness.simulate import paged_zoo
+from repro.configs.acar import ACARConfig
+from repro.data.tasks import Task
+from repro.serving import (
+    AdmissionQueue, BatchedACAREngine, MicroBatchPolicy)
+from repro.serving.mesh import ServingMesh
+from repro.serving.scheduler import StepPlanner
+from repro.serving.step_loop import ShardedStepLoopRunner
+
+rng = np.random.default_rng(1)
+tasks = []
+for i in range(12):
+    if tasks and rng.random() < 0.25:
+        tasks.append(tasks[int(rng.integers(len(tasks)))]); continue
+    digits = ''.join(str(rng.integers(10)) for _ in range(16))
+    tasks.append(Task(task_id=f't{i}', benchmark='x', kind='math',
+                      text=f'{digits} + 1 = ', gold='0',
+                      difficulty=0.0))
+probe, ensemble = paged_zoo(seed=0)
+acfg = ACARConfig(probe_temperature=0.9, seed=0)
+policy = MicroBatchPolicy(max_batch_size=4, max_batch_tokens=1 << 20)
+e1 = BatchedACAREngine(acfg, probe, ensemble, max_new_tokens=4)
+r1 = e1.run_stepped(tasks, policy, chunk_tokens=7)
+
+e2 = BatchedACAREngine(acfg, probe, ensemble, max_new_tokens=4)
+queue = AdmissionQueue(policy)
+for t in tasks:
+    queue.submit(t)
+runner = ShardedStepLoopRunner(
+    e2, queue, StepPlanner(chunk_tokens=7, max_active_rows=4),
+    ServingMesh(data=4))
+runner.run()
+rows = [runner.done_rows[i] for i in range(len(tasks))]
+np.testing.assert_array_equal(
+    r1.sigma, np.asarray([r.sigma for r in rows], np.float32))
+np.testing.assert_array_equal(
+    r1.modes, np.asarray([r.mode for r in rows], np.int32))
+assert r1.final_answers == [r.final_answer for r in rows]
+assert r1.probe_texts == [r.probe_texts for r in rows]
+# placement spreads rows and covers every admission
+placed = [runner.metrics.get('acar_shard_placements_total',
+                             shard=str(k)) for k in range(4)]
+assert sum(placed) == len(tasks)
+assert sum(1 for p in placed if p > 0) >= 2
+# per-shard page hygiene: nothing outlives the stream except each
+# shard's scratch region and its prefix-cache retention
+for srv in runner._sharded.values():
+    for sv in srv.shards:
+        cache = sum(e.pages_held for e in sv._prefix.values())
+        assert sv.pool.pages_in_use == sv._scratch.size + cache, (
+            sv.stats.model, sv.index)
+print('SHARDED-OK', runner.stats.ticks)
+""")
+    assert "SHARDED-OK" in out

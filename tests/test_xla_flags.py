@@ -1,0 +1,97 @@
+"""XLA_FLAGS merging (clobber regression).
+
+``launch/perf.py`` and ``launch/dryrun.py`` used to assign
+``os.environ["XLA_FLAGS"] = ...`` unconditionally, silently deleting
+whatever the user had exported (dump paths, partitioner options, or
+their own ``--xla_force_host_platform_device_count``). They now merge
+through ``repro.xla_flags``; these tests pin the merge semantics and
+the subprocess behavior of the real entry points.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.xla_flags import (
+    argv_int, force_host_device_count, host_device_count,
+    merge_host_device_count)
+
+COUNT = "--xla_force_host_platform_device_count"
+
+
+def test_merge_adds_flag_when_absent():
+    assert merge_host_device_count(None, 512) == f"{COUNT}=512"
+    assert merge_host_device_count("", 4) == f"{COUNT}=4"
+
+
+def test_merge_preserves_other_flags():
+    flags = "--xla_dump_to=/tmp/d --xla_cpu_enable_fast_math=false"
+    merged = merge_host_device_count(flags, 512)
+    assert "--xla_dump_to=/tmp/d" in merged
+    assert "--xla_cpu_enable_fast_math=false" in merged
+    assert f"{COUNT}=512" in merged
+
+
+def test_merge_existing_count_wins():
+    """A user-exported device-count override must survive — the 512
+    default must not stomp it."""
+    flags = f"--xla_dump_to=/tmp/d {COUNT}=8"
+    merged = merge_host_device_count(flags, 512)
+    assert f"{COUNT}=8" in merged
+    assert "512" not in merged
+    assert "--xla_dump_to=/tmp/d" in merged
+
+
+def test_host_device_count_parse():
+    assert host_device_count(None) is None
+    assert host_device_count("--xla_dump_to=/tmp/d") is None
+    assert host_device_count(f"{COUNT}=16") == 16
+
+
+def test_force_host_device_count_mutates_env_copy():
+    env = {"XLA_FLAGS": "--xla_dump_to=/x"}
+    out = force_host_device_count(4, env=env)
+    assert env["XLA_FLAGS"] == out
+    assert "--xla_dump_to=/x" in out and f"{COUNT}=4" in out
+
+
+def test_argv_int_both_spellings():
+    """The re-exec helpers must honour both option spellings argparse
+    accepts — '--shards 6' and '--shards=6'."""
+    assert argv_int(["--sharded", "--shards", "6"], "--shards", 4) == 6
+    assert argv_int(["--sharded", "--shards=6"], "--shards", 4) == 6
+    assert argv_int(["--sharded"], "--shards", 4) == 4
+    assert argv_int([], "--shards", 4) == 4
+
+
+def _import_in_subprocess(module: str, xla_flags: str) -> str:
+    env = dict(os.environ, XLA_FLAGS=xla_flags,
+               PYTHONPATH="src" + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    return subprocess.check_output(
+        [sys.executable, "-c",
+         f"import {module}; import os; print(os.environ['XLA_FLAGS'])"],
+        env=env, text=True, stderr=subprocess.DEVNULL).strip()
+
+
+@pytest.mark.slow
+def test_dryrun_import_merges_user_flags():
+    """Importing the dry-run entry point must preserve user flags and
+    their own device-count override (the clobber this PR fixes)."""
+    out = _import_in_subprocess(
+        "repro.launch.dryrun",
+        f"--xla_dump_to=/tmp/acar-dump {COUNT}=8")
+    assert "--xla_dump_to=/tmp/acar-dump" in out
+    assert f"{COUNT}=8" in out
+    assert "512" not in out
+
+
+@pytest.mark.slow
+def test_perf_import_adds_count_without_clobbering():
+    """perf.py (which imports dryrun too) appends the 512 default but
+    keeps the user's other flags."""
+    out = _import_in_subprocess(
+        "repro.launch.perf", "--xla_dump_to=/tmp/acar-dump")
+    assert "--xla_dump_to=/tmp/acar-dump" in out
+    assert f"{COUNT}=512" in out
