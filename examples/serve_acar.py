@@ -14,11 +14,14 @@ mid-stream retirement) — bit-identical answers, different execution.
 With ``--shards N`` the step loop runs on a data-sharded serving mesh
 (per-shard paged KV pools, least-loaded placement, one shard_map'd
 program per tick) — still bit-identical answers; this example forces
-the host device count so it works on a plain CPU.
+the host device count so it works on a plain CPU. With ``--megastep K``
+the step loop fuses up to K decode ticks into one device-resident
+launch (lane logits never touch the host between ticks) — again
+bit-identical answers, just fewer launches and host round-trips.
 
     PYTHONPATH=src python examples/serve_acar.py [--tasks 32]
         [--train-steps 300] [--scheduler | --step-loop | --shards 4]
-        [--batch-size 8]
+        [--megastep 16] [--batch-size 8]
 """
 import argparse
 
@@ -29,6 +32,7 @@ if __name__ == "__main__":
     ap.add_argument("--scheduler", action="store_true")
     ap.add_argument("--step-loop", action="store_true")
     ap.add_argument("--shards", type=int, default=None)
+    ap.add_argument("--megastep", type=int, default=1)
     ap.add_argument("--batch-size", type=int, default=8)
     args = ap.parse_args()
     if args.shards:
@@ -46,4 +50,6 @@ if __name__ == "__main__":
         argv.append("--step-loop")
     if args.shards:
         argv.extend(["--shards", str(args.shards)])
+    if args.megastep != 1:
+        argv.extend(["--megastep", str(args.megastep)])
     serve_main(argv)

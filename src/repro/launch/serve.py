@@ -58,7 +58,8 @@ def serve(tasks: Sequence[Task], probe: ZooModel,
           scheduler: bool = False,
           step_loop: bool = False,
           batch_size: int = 8,
-          data_shards: Optional[int] = None) -> dict:
+          data_shards: Optional[int] = None,
+          megastep: int = 1) -> dict:
     """Serve tasks through the batched engine. With ``scheduler=True``
     the request stream flows through the admission queue and is served
     as micro-batches of at most ``batch_size`` (continuous-batching
@@ -66,14 +67,15 @@ def serve(tasks: Sequence[Task], probe: ZooModel,
     (streaming admission + chunked prefill + mixed-phase decode
     steps — requires a paged-capable probe); ``data_shards`` runs that
     loop on a sharded serving mesh (per-shard paged KV pools, needs
-    that many visible devices); otherwise the whole suite runs as one
-    batch."""
+    that many visible devices); ``megastep`` fuses up to that many
+    decode ticks into one device launch (bit-identical outputs, fewer
+    host round-trips); otherwise the whole suite runs as one batch."""
     engine = BatchedACAREngine(acfg, probe, ensemble)
-    if step_loop or data_shards is not None:
+    if step_loop or data_shards is not None or megastep > 1:
         from repro.serving.queue import MicroBatchPolicy
         res = engine.run_stepped(
             list(tasks), MicroBatchPolicy(max_batch_size=batch_size),
-            data_shards=data_shards)
+            data_shards=data_shards, megastep=megastep)
         scheduler = True          # report the queued-shape extras
     elif scheduler:
         from repro.serving.queue import MicroBatchPolicy
@@ -148,6 +150,10 @@ def main(argv=None):
                          "--step-loop; needs that many devices — on "
                          "CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count)")
+    ap.add_argument("--megastep", type=int, default=1,
+                    help="fuse up to K decode ticks per device launch "
+                         "in the step loop (implies --step-loop; "
+                         "bit-identical outputs at any K)")
     ap.add_argument("--batch-size", type=int, default=8,
                     help="micro-batch size budget for --scheduler")
     args = ap.parse_args(argv)
@@ -162,7 +168,8 @@ def main(argv=None):
     tasks = arithmetic_suite(args.tasks, seed=args.seed + 99)
     serve(tasks, probe, ensemble, acfg,
           scheduler=args.scheduler, step_loop=args.step_loop,
-          batch_size=args.batch_size, data_shards=args.shards)
+          batch_size=args.batch_size, data_shards=args.shards,
+          megastep=args.megastep)
 
 
 if __name__ == "__main__":

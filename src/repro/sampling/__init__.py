@@ -1,14 +1,17 @@
 from repro.sampling.sampler import (
-    GenerateOutput, batch_invariant, decode_paged, decode_step_rows,
+    GenerateOutput, batch_invariant, decode_megastep_rows,
+    decode_megastep_rows_sharded, decode_paged, decode_step_rows,
     decode_step_rows_sharded, decode_text, fork_pages,
     fork_pages_sharded, generate, generate_samples, member_row_keys,
     prefill_chunk_paged, prefill_chunk_paged_sharded, prefill_paged,
     probe_row_keys, sample_token, sample_token_rows, tile_cache)
 
-__all__ = ["GenerateOutput", "batch_invariant", "decode_paged",
-           "decode_step_rows", "decode_step_rows_sharded",
-           "decode_text", "fork_pages", "fork_pages_sharded",
-           "generate", "generate_samples", "member_row_keys",
-           "prefill_chunk_paged", "prefill_chunk_paged_sharded",
-           "prefill_paged", "probe_row_keys", "sample_token",
-           "sample_token_rows", "tile_cache"]
+__all__ = ["GenerateOutput", "batch_invariant",
+           "decode_megastep_rows", "decode_megastep_rows_sharded",
+           "decode_paged", "decode_step_rows",
+           "decode_step_rows_sharded", "decode_text", "fork_pages",
+           "fork_pages_sharded", "generate", "generate_samples",
+           "member_row_keys", "prefill_chunk_paged",
+           "prefill_chunk_paged_sharded", "prefill_paged",
+           "probe_row_keys", "sample_token", "sample_token_rows",
+           "tile_cache"]

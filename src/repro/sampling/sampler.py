@@ -384,6 +384,77 @@ def decode_step_rows(cfg: ModelConfig, params: dict,
         temperature=temperature, eos_id=eos_id, pad_id=pad_id)
 
 
+def _decode_megastep_rows_impl(cfg: ModelConfig, params: dict,
+                               logits: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array,
+                               block_table: jax.Array, pos: jax.Array,
+                               row_keys: jax.Array, steps: jax.Array,
+                               done: jax.Array, *, n_ticks: int,
+                               cache_len: int, temperature: float,
+                               eos_id: int, pad_id: int):
+    """Unjitted body of ``decode_megastep_rows`` — ``n_ticks``
+    iterations of the ``_decode_step_rows_impl`` tick arithmetic fused
+    into one ``lax.scan``, so lane state (logits, positions, step
+    indices, done bits) never leaves the device between ticks.
+
+    Each scan iteration draws from the identical per-row key stream
+    (``fold_in(row_keys[i], steps[i])``), emits pad for done rows, and
+    appends the emitted token's KV at the row's current position.
+    Rows that finish (or exhaust their budget) mid-megastep keep
+    ticking with masked emissions; their write position is clamped to
+    ``cache_len - 1`` so the dead appends land inside the row's own
+    tail page — never read again, because the attention mask keys off
+    the true position, and the host replay drops masked emissions.
+    """
+    def body(carry, _):
+        lg, kp, vp, pos_, steps_, done_ = carry
+        tok = sample_token_rows(lg, temperature, row_keys, steps_)
+        emit = jnp.where(done_, pad_id, tok)
+        new_done = done_ | (tok == eos_id)
+        write_pos = jnp.minimum(pos_, cache_len - 1)
+        next_lg, kp, vp = T.decode_step_paged(
+            cfg, params, kp, vp, block_table, emit, write_pos,
+            cache_len=cache_len)
+        return ((next_lg, kp, vp, pos_ + 1, steps_ + 1, new_done),
+                (emit, new_done))
+
+    init = (logits, k_pages, v_pages, pos, steps, done)
+    (lg, k_pages, v_pages, _, _, _), (emits, dones) = jax.lax.scan(
+        body, init, None, length=n_ticks)
+    return emits, dones, lg, k_pages, v_pages
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "n_ticks", "cache_len", "temperature",
+                     "eos_id", "pad_id"))
+def decode_megastep_rows(cfg: ModelConfig, params: dict,
+                         logits: jax.Array, k_pages: jax.Array,
+                         v_pages: jax.Array, block_table: jax.Array,
+                         pos: jax.Array, row_keys: jax.Array,
+                         steps: jax.Array, done: jax.Array, *,
+                         n_ticks: int, cache_len: int,
+                         temperature: float, eos_id: int,
+                         pad_id: int):
+    """``n_ticks`` fused decode ticks for a mixed batch of rows — the
+    device-resident megastep. One launch advances every row K ticks;
+    the only arrays that cross back to the host are the (K, B) stacks
+    of emitted token ids and done bits (the step loop pulls those once
+    per megastep and replays them lane by lane). Per-tick sampling,
+    emit and done arithmetic is ``_decode_step_rows_impl``'s exactly,
+    and the key stream is indexed by the per-row step counter — so
+    ``n_ticks`` is a pure performance knob: K=1 *is* the per-tick
+    baseline, and any K produces bit-identical token streams.
+
+    Returns (emits (K, B), dones (K, B), next_logits (B, V), k_pages,
+    v_pages); ``next_logits`` keeps each lane's pending logits on
+    device for the next megastep."""
+    return _decode_megastep_rows_impl(
+        cfg, params, logits, k_pages, v_pages, block_table, pos,
+        row_keys, steps, done, n_ticks=n_ticks, cache_len=cache_len,
+        temperature=temperature, eos_id=eos_id, pad_id=pad_id)
+
+
 # ----------------------------------------------------------------------
 # mesh-sharded step programs (serving/mesh.py drives these: one
 # shard_map'd launch advances every shard's bucket simultaneously)
@@ -452,6 +523,39 @@ def decode_step_rows_sharded(cfg: ModelConfig, params: dict,
         return tuple(o[None] for o in out)
 
     return _shard_map(body, mesh, 8, 7)(
+        params, logits, k_pages, v_pages, block_table, pos, row_keys,
+        steps, done)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "n_ticks", "cache_len", "temperature",
+                     "eos_id", "pad_id", "mesh"))
+def decode_megastep_rows_sharded(cfg: ModelConfig, params: dict,
+                                 logits: jax.Array,
+                                 k_pages: jax.Array,
+                                 v_pages: jax.Array,
+                                 block_table: jax.Array,
+                                 pos: jax.Array, row_keys: jax.Array,
+                                 steps: jax.Array, done: jax.Array, *,
+                                 n_ticks: int, cache_len: int,
+                                 temperature: float, eos_id: int,
+                                 pad_id: int, mesh):
+    """``decode_megastep_rows`` across every shard of a ("data",)
+    serving mesh in one launch (leading ``n_shards`` axis on every
+    array operand; params replicated; emits/dones come back as
+    (n_sh, K, B)). Each shard's slice runs the identical fused scan,
+    so a row emits the same tokens whatever shard hosts it and
+    whatever K the planner picked."""
+
+    def body(p, lg, kp, vp, table, pos_, keys, steps_, done_):
+        out = _decode_megastep_rows_impl(
+            cfg, p, lg[0], kp[0], vp[0], table[0], pos_[0], keys[0],
+            steps_[0], done_[0], n_ticks=n_ticks, cache_len=cache_len,
+            temperature=temperature, eos_id=eos_id, pad_id=pad_id)
+        return tuple(o[None] for o in out)
+
+    return _shard_map(body, mesh, 8, 5)(
         params, logits, k_pages, v_pages, block_table, pos, row_keys,
         steps, done)
 

@@ -545,7 +545,8 @@ class BatchedACAREngine:
                     policy: MicroBatchPolicy = MicroBatchPolicy(), *,
                     chunk_tokens: int = 8,
                     max_active_rows: Optional[int] = None,
-                    data_shards: Optional[int] = None
+                    data_shards: Optional[int] = None,
+                    megastep: int = 1
                     ) -> "QueuedServeResult":
         """Serve a request stream through the step-level loop: rows
         admitted from ``AdmissionQueue.ready()`` the moment the page
@@ -563,7 +564,14 @@ class BatchedACAREngine:
         program per tick — still bit-identical per task
         (``simulate.py --sharded``), with ``max_active_rows``
         interpreted per shard. Needs ``data_shards`` visible devices
-        (on CPU: ``--xla_force_host_platform_device_count``)."""
+        (on CPU: ``--xla_force_host_platform_device_count``).
+
+        ``megastep`` fuses up to K decode ticks into one device
+        launch with lane state kept device-resident
+        (``sampler.decode_megastep_rows``); only emitted token ids +
+        done bits cross back per megastep. Any K emits bit-identical
+        outputs (``simulate.py --megastep``) — it trades nothing but
+        launch overhead."""
         from repro.serving.scheduler import StepPlanner
         from repro.serving.step_loop import (
             ShardedStepLoopRunner, StepLoopRunner)
@@ -573,7 +581,8 @@ class BatchedACAREngine:
             queue.submit(t)
         planner = StepPlanner(
             chunk_tokens=chunk_tokens,
-            max_active_rows=max_active_rows or policy.max_batch_size)
+            max_active_rows=max_active_rows or policy.max_batch_size,
+            megastep=megastep)
         metrics = PromCounters()
         if data_shards is None:
             runner = StepLoopRunner(self, queue, planner, metrics)

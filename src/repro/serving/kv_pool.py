@@ -389,19 +389,32 @@ class PagedKVServer:
 
     def evict_prefix(self, pages_needed: int) -> int:
         """Cost-aware eviction until at least ``pages_needed`` pages
-        are free (or the cache is empty). Returns the free-page count.
-        The engine's evict-and-retry loop calls this on
-        ``PoolExhausted`` instead of failing the wave."""
-        while self.pool.free_pages < pages_needed and self._evict_one():
-            pass
+        are free, the cache is empty, or an eviction round frees
+        nothing. Returns the free-page count — the pages *actually on
+        the free list*, not a sum of victims' page counts, because a
+        victim whose pages are still shared (refcount > 1: a live row
+        retained the same prompt pages via a cache hit) releases
+        references without returning a single page. Stopping on a
+        no-progress round keeps the retry loop from shredding every
+        remaining entry — and from spinning — when shared victims
+        cannot free what the caller needs. The engine's
+        evict-and-retry loop calls this on ``PoolExhausted`` instead
+        of failing the wave."""
+        while self.pool.free_pages < pages_needed:
+            before = self.pool.free_pages
+            if not self._evict_one():
+                break                  # cache empty
+            if self.pool.free_pages == before:
+                break                  # victim fully shared: no progress
         self._sample_usage()
         return self.pool.free_pages
 
     def _alloc_retry(self, n: int) -> np.ndarray:
         """Pool allocation with the evict-and-retry loop: on
         exhaustion, shed prefix-cache entries (cheapest value per page
-        first) and retry; ``PoolExhausted`` only escapes once the
-        cache is empty and the pages genuinely do not exist."""
+        first) and retry; ``PoolExhausted`` escapes once the cache is
+        empty — or eviction stops making progress (shared victims free
+        nothing) — and the pages genuinely do not exist."""
         try:
             return self.pool.alloc(n)
         except PoolExhausted:

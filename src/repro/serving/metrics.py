@@ -44,19 +44,38 @@ class PromCounters:
     def get(self, name: str, **labels: str) -> float:
         return self._values.get(self._key(name, labels), 0.0)
 
+    @staticmethod
+    def _escape_label(value: str) -> str:
+        """Escape a label value per the Prometheus text exposition
+        format: backslash, double-quote and line-feed must appear as
+        ``\\\\``, ``\\"`` and ``\\n`` inside the quoted value — a model
+        name containing any of them otherwise renders invalid
+        exposition text."""
+        return (value.replace("\\", "\\\\").replace('"', '\\"')
+                .replace("\n", "\\n"))
+
+    @staticmethod
+    def _escape_help(text: str) -> str:
+        """HELP text escaping (backslash and line feed only, per the
+        exposition format)."""
+        return text.replace("\\", "\\\\").replace("\n", "\\n")
+
     def render(self) -> str:
         """Prometheus exposition text format, deterministically sorted."""
         lines: List[str] = []
         for name in sorted({n for n, _ in self._values}):
             if name in self._help:
-                lines.append(f"# HELP {name} {self._help[name]}")
+                lines.append(f"# HELP {name} "
+                             f"{self._escape_help(self._help[name])}")
             lines.append(
                 f"# TYPE {name} {self._types.get(name, 'counter')}")
             for (n, labels), v in sorted(self._values.items()):
                 if n != name:
                     continue
                 if labels:
-                    lab = ",".join(f'{k}="{v_}"' for k, v_ in labels)
+                    lab = ",".join(
+                        f'{k}="{self._escape_label(v_)}"'
+                        for k, v_ in labels)
                     lines.append(f"{name}{{{lab}}} {v:g}")
                 else:
                     lines.append(f"{name} {v:g}")

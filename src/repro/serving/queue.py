@@ -105,17 +105,33 @@ class AdmissionQueue:
 
     def ready(self, now: Optional[int] = None) -> bool:
         """Should a streaming loop close a micro-batch now? True when
-        the pending queue can fill the size budget, or the oldest
-        pending request has already waited ``max_wait_ticks`` — the
-        standard fill-or-timeout continuous-batching trigger."""
+        the requests that have *arrived by now* fill the size budget,
+        or the oldest pending request has already waited
+        ``max_wait_ticks`` — the standard fill-or-timeout
+        continuous-batching trigger.
+
+        Only arrived requests count toward the fill trigger: the
+        pending deque may hold future arrivals (a stream is often
+        submitted up front with explicit arrival ticks), and counting
+        those fired ready() early — a burst whose last member lands
+        exactly at the head's timeout instant (fill == timeout)
+        admitted the head alone and the burst later, two batches where
+        fill-or-timeout semantics demand one."""
         if not self._pending:
             return False
-        if len(self._pending) >= self.policy.max_batch_size:
-            return True
         if now is None:
             now = self._tick
-        return now - self._pending[0].arrival_time \
-            >= self.policy.max_wait_ticks
+        head = self._pending[0]
+        if head.arrival_time > now:
+            return False              # nothing has arrived yet
+        arrived = 0
+        for r in self._pending:
+            if r.arrival_time > now:
+                break
+            arrived += 1
+            if arrived >= self.policy.max_batch_size:
+                return True
+        return now - head.arrival_time >= self.policy.max_wait_ticks
 
     def peek(self) -> Optional[Request]:
         """Oldest pending request (not yet admitted), or None."""
@@ -164,8 +180,17 @@ class AdmissionQueue:
     def next_ready_at(self) -> Optional[int]:
         """Earliest tick at which ``ready`` will fire for the current
         pending set: when the size budget fills (the arrival of the
-        batch-size-th request) or when the oldest request's wait
-        budget expires — whichever comes first."""
+        batch-size-th pending request — the earliest tick at which
+        ``max_batch_size`` requests have *arrived*, matching ready()'s
+        arrived-only count) or when the oldest request's wait budget
+        expires — whichever comes first.
+
+        Boundary contract: an empty queue returns None (there is no
+        meaningful instant after a drain — callers must not fast-
+        forward a clock on it), an exactly-full queue returns
+        ``min(fill, timeout)``, and when fill == timeout the two
+        triggers coincide so the instant admits the whole burst as
+        one batch (see ``ready``)."""
         if not self._pending:
             return None
         timeout = self._pending[0].arrival_time \
@@ -185,6 +210,10 @@ class AdmissionQueue:
         out = []
         now = self._tick
         while self._pending:
+            # next_ready_at is never None here (pending is non-empty),
+            # and the max() keeps the clock monotone when a batch was
+            # already ready before the jump; at a fill == timeout
+            # coincidence the instant admits the whole burst at once
             now = max(now, self.next_ready_at())
             assert self.ready(now)
             out.append(self.form_batch(now))

@@ -144,9 +144,23 @@ class StepPlanner:
       mesh. Placement is pure load balancing: per-row sampling keys
       are derived from the global admission index, so the shard a row
       lands on can never change its tokens.
+    * **megastep span** — decode groups fuse up to ``megastep`` ticks
+      into one device launch (``sampler.decode_megastep_rows``); lane
+      state stays device-resident between launches and only emitted
+      token ids + done bits come back per megastep. Rows finishing
+      mid-megastep burn <= K-1 masked steps (accounted in
+      ``StepStats.masked_decode_steps``). Sampling keys derive from
+      (admission index, per-row step counter), so K is a pure
+      performance knob — any value emits bit-identical streams.
     """
     chunk_tokens: int = 8
     max_active_rows: int = 8
+    megastep: int = 1
+
+    def __post_init__(self) -> None:
+        if self.megastep < 1:
+            raise ValueError(
+                f"megastep must be >= 1, got {self.megastep}")
 
     def chunk_span(self, pos: int, prompt_len: int) -> int:
         """Tokens the next prefill step of a row at ``pos`` covers."""
@@ -241,6 +255,9 @@ class SchedulerStats:
     kv_pages_highwater: int = 0           # peak live pages
     kv_pages_allocated: int = 0           # page allocations, total
     kv_prefill_tokens_reused: int = 0     # probe pages seeding ensemble
+    # megastep accounting (step loop only; the wave path never masks):
+    # decode ticks a lane sat masked because it finished mid-megastep
+    masked_decode_steps: int = 0
     # deterministic virtual clock (the calibrated latency model)
     sequential_makespan_ms: float = 0.0   # sum of per-task latencies
     serial_batch_makespan_ms: float = 0.0  # batched, no overlap

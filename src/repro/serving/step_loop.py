@@ -15,9 +15,24 @@ Rows are admitted from ``AdmissionQueue.ready()`` the moment the page
 budget opens (``StepPlanner.may_admit``), long prompts prefill in
 fixed-size chunks appended to the paged KV pool
 (``sampler.prefill_chunk_paged``), decodes of any phase mix into one
-bucketed ``decode_step_rows`` program per (server, temperature), and a
-finished row retires — and frees its pages — mid-stream, without
-waiting for its batch.
+bucketed ``decode_megastep_rows`` program per (server, temperature)
+that fuses up to ``StepPlanner.megastep`` ticks in a single launch,
+and a finished row retires — and frees its pages — mid-stream,
+without waiting for its batch.
+
+Megastep decode: lane state (pending logits, positions, step
+indices, done bits, key streams, block tables) stays device-resident
+between launches — the only arrays pulled back per megastep are the
+(K, B) emitted-token-id and done-bit stacks, which the host replays
+lane by lane (a lane that finished or exhausted its budget at offset
+t < K burns the remaining ticks as *masked* steps, counted in
+``StepStats.masked_decode_steps``). Because sampling draws from
+per-row key streams indexed by the per-row step counter, K is a pure
+performance knob: K=1 *is* the per-tick baseline and any K emits
+bit-identical token streams (``tests/harness/simulate.py
+--megastep`` proves it for K in {1, 4, 16}, single-device and
+sharded). Route-time sigma/judge extracts remain the only other host
+touchpoint.
 
 Determinism / auditability: the loop is bit-equivalent to the wave
 engine, proven the same way PRs 1-3 proved their refactors
@@ -34,9 +49,12 @@ Three properties carry the proof:
 * every host decision (grouping, bucketing, admission, retirement)
   is a deterministic function of the admission order.
 
-The virtual clock: one unit is one device-program launch (a bucketed
-decode step, or one prefill chunk of ``chunk_tokens`` tokens). Each
-model server is its own executor — ACAR's ensemble members are
+The virtual clock: one unit is one logical tick of device work (one
+fused decode-tick iteration — a megastep launch charges its K fused
+iterations, so the virtual clock measures device occupancy and stays
+comparable across K; the launch-overhead win shows up in wall-clock,
+gated by ``benchmarks/megastep_bench.py`` — or one prefill chunk of
+``chunk_tokens`` tokens). Each model server is its own executor — ACAR's ensemble members are
 independent services in the paper's deployment, and the wave engine
 keeping them idle while it drains one member at a time is precisely
 the lockstep cost this loop removes — so a tick advances the clock by
@@ -76,7 +94,9 @@ class _Lane:
     """One decode stream: a probe sample or one member's answer."""
     block_table: np.ndarray            # (NB,) page ids
     row_key: np.ndarray                # (2,) uint32 sampling stream
-    logits: np.ndarray                 # (V,) pending next-token logits
+    # (V,) pending next-token logits — device-resident in the model's
+    # native dtype (bf16 stays bf16; no host round-trip between ticks)
+    logits: jax.Array
     tag: int = 0                       # deterministic within-row order
     steps: int = 0
     done: bool = False
@@ -141,12 +161,23 @@ class _Row:
 
 @dataclass
 class StepStats:
-    """Step-loop accounting (virtual clock in program-launch units)."""
+    """Step-loop accounting. The virtual clock charges one unit per
+    fused decode-tick iteration (a K-tick megastep launch costs K) or
+    prefill chunk; ``launches`` counts actual device programs, and the
+    ``decode_*`` transfer counters are the hook the megastep tests use
+    to prove host<->device traffic per emitted token drops K-fold."""
     ticks: int = 0
-    invocations: int = 0               # device programs launched
+    invocations: int = 0               # virtual-clock units charged
+    launches: int = 0                  # device programs launched
     admissions: int = 0
     prefill_chunks: int = 0
     retired: int = 0
+    # megastep accounting: ticks a lane sat masked because it finished
+    # (or exhausted its budget) mid-megastep — the <=K-1 burn per row
+    masked_decode_steps: int = 0
+    decode_tokens: int = 0             # live tokens emitted by decode
+    decode_h2d: int = 0                # host->device arrays per launch
+    decode_d2h: int = 0                # device->host pulls per launch
     # per admission index: (arrival_tick, admitted_tick, retired_tick)
     timeline: Dict[int, Tuple[int, int, int]] = field(
         default_factory=dict)
@@ -172,6 +203,7 @@ class StepLoopRunner:
         self.acfg = engine.acfg
         self.n = engine.acfg.n_probe_samples
         self.max_new = engine.max_new_tokens
+        self.megastep = planner.megastep
         self.base_key = jax.random.PRNGKey(engine.acfg.seed)
         self._init_servers()
         self._reserved = 0                 # pages admitted rows may yet take
@@ -410,7 +442,11 @@ class StepLoopRunner:
         self.metrics.inc("acar_prefill_chunks_total",
                          model=srv.stats.model,
                          help="chunked-prefill device programs run")
-        lg = np.asarray(lg, np.float32)
+        self.stats.launches += 1
+        # chunk-final logits stay on device in the model's native
+        # dtype (a bf16 member's lane state is bf16 end-to-end; the
+        # old np.float32 host cast silently widened it while the
+        # device path stayed bf16)
         for i, (srv_i, row, mx) in enumerate(rows):
             target = mx if mx is not None else row
             target.prefill_pos = int(starts[i]) + c
@@ -457,7 +493,31 @@ class StepLoopRunner:
                             (srv, row, lane))
         return groups
 
-    def _run_decode_group(self, key, items) -> None:
+    def _megastep_span(self, lanes) -> int:
+        """Fused ticks for one decode group: the planner's K, capped
+        by the group's longest remaining budget so no launch runs
+        ticks *every* lane would mask. Every grouped lane is live
+        (steps < max_new), so the span is always >= 1."""
+        return max(1, min(self.megastep,
+                          max(self.max_new - l.steps for l in lanes)))
+
+    def _replay_megastep(self, lane: _Lane, emits, dones, kl: int,
+                         i: int) -> None:
+        """Host replay of one lane's (K,) emit/done columns — exactly
+        the per-tick group-membership rule: a lane already done (or
+        past its budget) at offset t would not have been launched at
+        tick t, so its emission is masked and counted."""
+        for t in range(kl):
+            if lane.done or lane.steps >= self.max_new:
+                self.stats.masked_decode_steps += 1
+                continue
+            lane.tokens.append(int(emits[t, i]))
+            lane.length += 1
+            lane.steps += 1
+            lane.done = bool(dones[t, i])
+            self.stats.decode_tokens += 1
+
+    def _run_decode_group(self, key, items) -> int:
         import jax.numpy as jnp
         _, temperature, cache_len = key
         srv = items[0][0]
@@ -466,8 +526,7 @@ class StepLoopRunner:
             items, key=lambda it: (it[1].admission, it[2].tag))]
         bucket = self.planner.decode_bucket(len(lanes))
         k = len(lanes)
-        logits = np.empty((bucket, lanes[0].logits.shape[0]),
-                          np.float32)
+        kl = self._megastep_span(lanes)
         tables = np.empty((bucket, nb), np.int32)
         pos = np.empty(bucket, np.int32)
         keys = np.empty((bucket, 2), np.uint32)
@@ -475,33 +534,37 @@ class StepLoopRunner:
         done = np.zeros(bucket, bool)
         for i in range(bucket):
             lane = lanes[min(i, k - 1)]
-            logits[i] = lane.logits
             tables[i] = lane.block_table if i < k else srv._scratch[:nb]
             pos[i] = cache_len - self.max_new + lane.steps
             keys[i] = lane.row_key
             steps[i] = lane.steps
             done[i] = i >= k          # pad rows emit pads into scratch
+        # lane logits never left the device: stacking slices of the
+        # previous megastep's next_logits is a device-side gather
+        logits = jnp.stack([lanes[min(i, k - 1)].logits
+                            for i in range(bucket)])
         zm = self._server_model(srv)
-        (emit, _logp, _live, new_done, next_logits, srv.k_pages,
-         srv.v_pages) = S.decode_step_rows(
-            zm.cfg, zm.params, jnp.asarray(logits), srv.k_pages,
-            srv.v_pages, jnp.asarray(tables), jnp.asarray(pos),
-            jnp.asarray(keys), jnp.asarray(steps), jnp.asarray(done),
+        (emits, dones, next_logits, srv.k_pages,
+         srv.v_pages) = S.decode_megastep_rows(
+            zm.cfg, zm.params, logits, srv.k_pages, srv.v_pages,
+            jnp.asarray(tables), jnp.asarray(pos), jnp.asarray(keys),
+            jnp.asarray(steps), jnp.asarray(done), n_ticks=kl,
             cache_len=cache_len, temperature=temperature,
             eos_id=tok.EOS, pad_id=tok.PAD)
-        emit = np.asarray(emit)
-        new_done = np.asarray(new_done)
-        next_logits = np.asarray(next_logits, np.float32)
+        # the megastep's only host pulls: (K, B) token ids + done bits
+        emits = np.asarray(emits)
+        dones = np.asarray(dones)
+        self.stats.launches += 1
+        self.stats.decode_h2d += 5     # tables, pos, keys, steps, done
+        self.stats.decode_d2h += 2     # emits, dones
         for i, lane in enumerate(lanes):
-            lane.tokens.append(int(emit[i]))
-            lane.length += 1
-            lane.steps += 1
-            lane.done = bool(new_done[i])
+            self._replay_megastep(lane, emits, dones, kl, i)
             lane.logits = next_logits[i]
         self.metrics.set_gauge(
             "acar_step_bucket_occupancy", k / bucket,
             server=srv.stats.model, bucket=str(bucket),
             help="live-lane fill of the last step-decode bucket")
+        return kl
 
     # -- phase transitions ---------------------------------------------
     def _promote(self) -> None:
@@ -661,6 +724,7 @@ class StepLoopRunner:
         cost = self.planner.chunk_count(row.s) + self.max_new
         key = ("dense", mx.member)
         self._tick_extra[key] = self._tick_extra.get(key, 0) + cost
+        self.stats.launches += 1
 
     def _finish_members(self, row: _Row) -> None:
         srv = self._probe_server(row)
@@ -742,8 +806,11 @@ class StepLoopRunner:
             for key, items in sorted(self._decode_groups().items(),
                                      key=lambda kv: (kv[0][1],
                                                      kv[0][2])):
-                self._run_decode_group(key, items)
-                per_server[key[0]] = per_server.get(key[0], 0) + 1
+                # a megastep launch charges its fused tick count: the
+                # virtual clock measures device occupancy, not launch
+                # overhead (that is megastep_bench's wall-clock gate)
+                kl = self._run_decode_group(key, items)
+                per_server[key[0]] = per_server.get(key[0], 0) + kl
             self._promote()
             # dense-fallback members ran whole generations on their
             # own executors during promotion
@@ -770,6 +837,12 @@ class StepLoopRunner:
                     nxt = self.queue.next_ready_at()
                     if nxt is not None:
                         self.now = max(self.now, nxt)
+        if self.stats.masked_decode_steps:
+            self.metrics.inc(
+                "acar_step_masked_decode_steps_total",
+                self.stats.masked_decode_steps,
+                help="decode ticks lanes sat masked because they "
+                     "finished mid-megastep")
         return self.stats
 
 
@@ -782,12 +855,13 @@ class ShardedStepLoopRunner(StepLoopRunner):
     every shard keeps its own page pool / block tables / free list /
     prefix cache (``ShardedPagedKVServer``), and each tick's prefill
     and decode groups run as *one* shard_map'd program spanning every
-    shard simultaneously (``sampler.decode_step_rows_sharded`` /
+    shard simultaneously (``sampler.decode_megastep_rows_sharded`` /
     ``prefill_chunk_paged_sharded``) — per-shard buckets, vector pos,
-    per-row key streams keyed by global admission index. Only the emit
-    and done bits (plus next-token logits for the lane state) come
-    back to the host each tick; route-time extracts are batched per
-    tick.
+    per-row key streams keyed by global admission index, up to
+    ``StepPlanner.megastep`` ticks fused per launch. Only the (K, B)
+    emit and done stacks come back to the host per megastep — lane
+    logits stay device-resident — and route-time extracts are batched
+    per tick.
 
     Bit-equivalence with the single-device loop holds because every
     per-row computation is placement-independent: sampling keys derive
@@ -989,7 +1063,9 @@ class ShardedStepLoopRunner(StepLoopRunner):
         self.metrics.inc("acar_prefill_chunks_total",
                          model=parent.model_name,
                          help="chunked-prefill device programs run")
-        lg = np.asarray(lg, np.float32)
+        self.stats.launches += 1
+        # native-dtype, device-resident chunk-final logits (see the
+        # single-device runner)
         for k in range(nsh):
             for i, (srv, row, mx) in enumerate(per[k]):
                 target = mx if mx is not None else row
@@ -1000,7 +1076,8 @@ class ShardedStepLoopRunner(StepLoopRunner):
                                        target.shared, target.tail,
                                        lg[k, i], tokens=s)
 
-    def _run_decode_group(self, key, items) -> None:
+    def _run_decode_group(self, key, items) -> int:
+        import jax.numpy as jnp
         _, temperature, cache_len = key
         parent = items[0][0].parent
         nsh = parent.n_shards
@@ -1012,21 +1089,25 @@ class ShardedStepLoopRunner(StepLoopRunner):
             per[k].sort(key=lambda rl: (rl[0].admission, rl[1].tag))
         bucket = self.planner.decode_bucket(
             max(len(p) for p in per))
-        vocab = int(items[0][2].logits.shape[0])
-        logits = np.zeros((nsh, bucket, vocab), np.float32)
+        # one fused span for the whole group: every shard advances in
+        # the same shard_map'd megastep, so K must be uniform — take
+        # it over all lanes across shards
+        kl = self._megastep_span([lane for _, _, lane in items])
         tables = np.empty((nsh, bucket, nb), np.int32)
         pos = np.full((nsh, bucket), cache_len - self.max_new,
                       np.int32)
         keys = np.zeros((nsh, bucket, 2), np.uint32)
         steps = np.zeros((nsh, bucket), np.int32)
         done = np.ones((nsh, bucket), bool)
+        lane_rows = []                 # device-side logits gather
+        filler = items[0][2].logits    # pad rows sample masked pads
         live_total = 0
         for k in range(nsh):
             scratch = parent.shards[k]._scratch[:nb]
             for i in range(bucket):
                 if i < len(per[k]):
                     row, lane = per[k][i]
-                    logits[k, i] = lane.logits
+                    lane_rows.append(lane.logits)
                     tables[k, i] = lane.block_table
                     pos[k, i] = cache_len - self.max_new + lane.steps
                     keys[k, i] = lane.row_key
@@ -1034,30 +1115,33 @@ class ShardedStepLoopRunner(StepLoopRunner):
                     done[k, i] = False
                     live_total += 1
                 else:
+                    lane_rows.append(filler)
                     tables[k, i] = scratch
+        logits = jnp.stack(lane_rows).reshape(nsh, bucket, -1)
         zm = self._model_by_group[id(parent)]
         prm = self._params_repl[id(parent)]
-        (emit, _logp, _live, new_done, next_logits, parent.k_pages,
-         parent.v_pages) = S.decode_step_rows_sharded(
+        (emits, dones, next_logits, parent.k_pages,
+         parent.v_pages) = S.decode_megastep_rows_sharded(
             zm.cfg, prm, logits, parent.k_pages, parent.v_pages,
-            tables, pos, keys, steps, done, cache_len=cache_len,
-            temperature=temperature, eos_id=tok.EOS, pad_id=tok.PAD,
-            mesh=self.smesh.mesh)
-        emit = np.asarray(emit)
-        new_done = np.asarray(new_done)
-        next_logits = np.asarray(next_logits, np.float32)
+            jnp.asarray(tables), jnp.asarray(pos), jnp.asarray(keys),
+            jnp.asarray(steps), jnp.asarray(done), n_ticks=kl,
+            cache_len=cache_len, temperature=temperature,
+            eos_id=tok.EOS, pad_id=tok.PAD, mesh=self.smesh.mesh)
+        emits = np.asarray(emits)      # (nsh, K, bucket)
+        dones = np.asarray(dones)
+        self.stats.launches += 1
+        self.stats.decode_h2d += 5     # tables, pos, keys, steps, done
+        self.stats.decode_d2h += 2     # emits, dones
         for k in range(nsh):
             for i, (row, lane) in enumerate(per[k]):
-                lane.tokens.append(int(emit[k, i]))
-                lane.length += 1
-                lane.steps += 1
-                lane.done = bool(new_done[k, i])
+                self._replay_megastep(lane, emits[k], dones[k], kl, i)
                 lane.logits = next_logits[k, i]
         self.metrics.set_gauge(
             "acar_step_bucket_occupancy",
             live_total / (nsh * bucket), server=parent.model_name,
             bucket=str(bucket),
             help="live-lane fill of the last step-decode bucket")
+        return kl
 
     # -- observability -------------------------------------------------
     def _emit_phase_gauges(self) -> None:

@@ -36,14 +36,22 @@ Three pieces:
   streaming admission off ``AdmissionQueue.ready()``, chunked prefill,
   mixed-phase bucketed decode steps, mid-stream retirement), and
   applies the same per-task and audit-chain checks. Iteration-level
-  scheduling must be an execution strategy, not a semantic change.
+  scheduling must be an execution strategy, not a semantic change;
+* a **megastep checker** (``--megastep``) — serves the same stream
+  through the step loop with megastep K=1 (per-tick baseline) and
+  with K in {4, 16} fused decode ticks (one device-resident
+  ``lax.scan`` launch per decode group, lane logits never touching
+  the host), on both the single-device and the mesh-sharded loop,
+  and applies the same per-task and audit-chain checks. The fusion
+  depth must be a pure performance knob, not a semantic change.
 
 Run standalone:
 
     PYTHONPATH=src:tests python tests/harness/simulate.py \
         --tasks 200 --seed 0 --batch-size 8 \
         [--engine-compaction] [--paged-kv] [--paged-only] \
-        [--step-loop] [--step-only]
+        [--step-loop] [--step-only] [--sharded] [--sharded-only] \
+        [--megastep] [--megastep-only]
 """
 from __future__ import annotations
 
@@ -846,6 +854,124 @@ def run_sharded_equivalence(
         single_pool_pages=res_1.kv[probe_name].pool_pages)
 
 
+@dataclass
+class MegastepReport:
+    n_tasks: int
+    ks: Tuple[int, ...]
+    n_shards: Optional[int]
+    mismatches: Dict[str, int]          # leg -> mismatch count vs K=1
+    chains_ok: Dict[str, bool]          # leg -> both chains verify
+    heads_equal: Dict[str, bool]        # leg -> chain heads identical
+    masked_steps: Dict[str, int]
+    launches: Dict[str, int]
+    baseline_launches: int
+
+    @property
+    def ok(self) -> bool:
+        return (all(v == 0 for v in self.mismatches.values())
+                and all(self.chains_ok.values())
+                and all(self.heads_equal.values()))
+
+    def summary(self) -> str:
+        legs = " ".join(
+            f"{leg}[mismatches={self.mismatches[leg]} "
+            f"chains_ok={self.chains_ok[leg]} "
+            f"heads_equal={self.heads_equal[leg]} "
+            f"launches={self.launches[leg]} "
+            f"masked={self.masked_steps[leg]}]"
+            for leg in self.mismatches)
+        return (f"tasks={self.n_tasks} ks={list(self.ks)} "
+                f"shards={self.n_shards or 0} "
+                f"baseline_launches={self.baseline_launches} {legs} "
+                f"=> {'EQUIVALENT' if self.ok else 'DIVERGENT'}")
+
+
+def run_megastep_equivalence(
+        tasks=None, n_tasks: int = 200, seed: int = 0,
+        batch_size: int = 8, max_new_tokens: int = 6,
+        prompt_chars: int = 24, chunk_tokens: int = 8,
+        ks: Tuple[int, ...] = (4, 16),
+        n_shards: Optional[int] = None,
+        probe_temperature: float = 0.9,
+        duplicate_rate: float = 0.15,
+        workdir: Optional[Path] = None,
+        route_fn=None) -> MegastepReport:
+    """Serve the same duplicate-bearing long-prompt stream through the
+    step loop with megastep K=1 (the per-tick baseline) and with each
+    K in ``ks`` (K decode ticks fused into one device-resident
+    ``lax.scan`` launch, lane logits never touching the host), and
+    compare every judge-visible output plus the audit-chain record
+    hashes and heads. Per-row sampling key streams are indexed by
+    (global admission index, per-row step counter), so K must be a
+    pure performance knob — bit-identical streams at any fusion
+    depth. With ``n_shards`` set, the sweep also runs each K through
+    the mesh-sharded loop (one shard_map'd megastep per group per
+    tick) against the same single-device per-tick baseline."""
+    import jax
+
+    from repro.configs.acar import ACARConfig
+    from repro.serving import BatchedACAREngine, MicroBatchPolicy
+
+    if n_shards and len(jax.devices()) < n_shards:
+        raise RuntimeError(
+            f"sharded megastep equivalence needs {n_shards} devices, "
+            f"have {len(jax.devices())}; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards}")
+    if workdir is None:
+        workdir = Path(tempfile.mkdtemp(prefix="acar-megastep-"))
+    workdir = Path(workdir)
+    if tasks is None:
+        tasks = long_prompt_workload(n_tasks, prompt_chars, seed=seed,
+                                     duplicate_rate=duplicate_rate)
+    tasks = list(tasks)
+
+    probe, ensemble = paged_zoo(seed=seed)
+    member_names = [m.name for m in ensemble]
+    acfg = ACARConfig(probe_temperature=probe_temperature, seed=seed)
+    policy = MicroBatchPolicy(max_batch_size=batch_size,
+                              max_batch_tokens=1 << 20)
+
+    def _run(megastep, shards=None):
+        eng = BatchedACAREngine(
+            acfg, probe, ensemble, max_new_tokens=max_new_tokens,
+            route_fn=route_fn)
+        return eng.run_stepped(tasks, policy,
+                               chunk_tokens=chunk_tokens,
+                               data_shards=shards, megastep=megastep)
+
+    res_base = _run(1)
+    legs = [(f"K{k}", k, None) for k in ks]
+    if n_shards:
+        legs += [(f"K{k}-sh{n_shards}", k, n_shards) for k in ks]
+
+    mismatches: Dict[str, int] = {}
+    chains_ok: Dict[str, bool] = {}
+    heads_equal: Dict[str, bool] = {}
+    masked: Dict[str, int] = {}
+    launches: Dict[str, int] = {}
+    for leg, k, shards in legs:
+        res_k = _run(k, shards)
+        # one file pair per leg: ArtifactStore appends, so reusing the
+        # baseline's file across legs would chain every leg together
+        (sig_mm, mode_mm, ans_mm, mem_mm, hash_mm, audit_a,
+         audit_b) = _compare_engine_runs(
+            tasks, res_base, res_k, member_names, workdir,
+            f"megastep-{leg}", (f"per-tick-vs-{leg}", leg))
+        mismatches[leg] = (len(sig_mm) + len(mode_mm) + len(ans_mm)
+                          + len(mem_mm) + len(hash_mm))
+        chains_ok[leg] = bool(audit_a["ok"]) and bool(audit_b["ok"])
+        heads_equal[leg] = audit_a["head"] == audit_b["head"]
+        masked[leg] = res_k.step.masked_decode_steps
+        launches[leg] = res_k.step.launches
+
+    return MegastepReport(
+        n_tasks=len(tasks), ks=tuple(ks), n_shards=n_shards,
+        mismatches=mismatches, chains_ok=chains_ok,
+        heads_equal=heads_equal, masked_steps=masked,
+        launches=launches,
+        baseline_launches=res_base.step.launches)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tasks", type=int, default=200)
@@ -877,10 +1003,22 @@ def main(argv=None) -> int:
                     help="run only the sharded check (implies "
                          "--sharded; the fast CI job's mode)")
     ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--megastep", action="store_true",
+                    help="also check megastep<->per-tick step-loop "
+                         "equivalence (K in {1,4,16} fused decode "
+                         "ticks, single-device and sharded legs) over "
+                         "--tasks tasks")
+    ap.add_argument("--megastep-only", action="store_true",
+                    help="run only the megastep check (implies "
+                         "--megastep; the fast CI job's mode)")
+    ap.add_argument("--megastep-shards", type=int, default=4,
+                    help="shard count for the sharded megastep legs "
+                         "(0 disables them)")
     ap.add_argument("--chunk-tokens", type=int, default=8)
     args = ap.parse_args(argv)
 
-    only = args.paged_only or args.step_only or args.sharded_only
+    only = (args.paged_only or args.step_only or args.sharded_only
+            or args.megastep_only)
     ok = True
     if not only:
         stream = generate_workload(WorkloadConfig(
@@ -921,6 +1059,15 @@ def main(argv=None) -> int:
             duplicate_rate=args.duplicate_rate)
         print(shreport.summary())
         ok = ok and shreport.ok
+    if args.megastep or args.megastep_only:
+        mreport = run_megastep_equivalence(
+            n_tasks=args.tasks, seed=args.seed,
+            batch_size=args.batch_size,
+            chunk_tokens=args.chunk_tokens,
+            n_shards=args.megastep_shards or None,
+            duplicate_rate=args.duplicate_rate)
+        print(mreport.summary())
+        ok = ok and mreport.ok
     return 0 if ok else 1
 
 
@@ -935,10 +1082,13 @@ def _maybe_reexec_for_sharding() -> None:
 
     from repro.xla_flags import argv_int, reexec_with_host_devices
     argv = sys.argv[1:]
-    if not ({"--sharded", "--sharded-only"} & set(argv)):
+    if not ({"--sharded", "--sharded-only", "--megastep",
+             "--megastep-only"} & set(argv)):
         return
-    reexec_with_host_devices(argv_int(argv, "--shards", 4),
-                             [__file__] + argv)
+    reexec_with_host_devices(
+        max(argv_int(argv, "--shards", 4),
+            argv_int(argv, "--megastep-shards", 4), 1),
+        [__file__] + argv)
 
 
 if __name__ == "__main__":

@@ -229,6 +229,51 @@ def test_alloc_retry_evicts_then_raises_clean():
     assert srv.pool.pages_in_use == srv._scratch.size
 
 
+def test_evict_prefix_shared_victim_counts_only_freed_pages():
+    """Regression: a victim whose pages are still shared (refcount >
+    1 — a live row retained the same prompt pages via a cache hit)
+    frees nothing when evicted. The freed-page accounting must report
+    pages actually returned to the free list, and the no-progress
+    round must stop the loop before it shreds every remaining entry."""
+    srv = _tiny_server()
+    _insert(srv, b"pinned", 3, tokens=4)          # lowest score
+    entry = srv._prefix_lookup(b"pinned")
+    srv.pool.retain(entry.shared)                 # a live row holds them
+    _insert(srv, b"keep-a", 2, tokens=32)
+    _insert(srv, b"keep-b", 2, tokens=32)
+    before_free = srv.pool.free_pages
+    got = srv.evict_prefix(srv.pool.num_pages)    # unsatisfiable demand
+    # only pages actually returned to the free list are counted: the
+    # shared victim's release freed zero
+    assert got == srv.pool.free_pages == before_free
+    assert b"pinned" not in srv._prefix
+    # the no-progress break preserved the rest of the cache
+    assert b"keep-a" in srv._prefix and b"keep-b" in srv._prefix
+    srv.pool.release(entry.shared)
+
+
+def test_alloc_retry_raises_clean_on_no_progress_eviction():
+    """Regression: when eviction cannot free pages (the only victim is
+    still shared), _alloc_retry must raise PoolExhausted instead of
+    spinning or over-reporting reclaimed pages — and leave the pool
+    accounting intact."""
+    srv = _tiny_server()
+    free0 = srv.pool.free_pages
+    live = srv.pool.alloc(free0 - 4)              # live rows hold most
+    _insert(srv, b"pinned", 2, tokens=4)
+    entry = srv._prefix_lookup(b"pinned")
+    srv.pool.retain(entry.shared)
+    with pytest.raises(PoolExhausted):
+        srv._alloc_retry(4)
+    # the shared victim was evicted (cache ref released) but its pages
+    # stayed with the live holder — free count unchanged
+    assert srv.pool.free_pages == 2
+    assert b"pinned" not in srv._prefix
+    srv.pool.release(entry.shared)
+    srv.pool.release(live)
+    assert srv.pool.pages_in_use == srv._scratch.size
+
+
 def test_prefix_insert_capacity_still_bounded():
     """The entry-count bound still holds; overflow evicts by score."""
     srv = _tiny_server(prefix_entries=3)

@@ -78,8 +78,61 @@ def test_ready_fill_or_timeout():
     assert not q.ready(now=5)               # not full, not timed out
     assert q.ready(now=10)                  # oldest waited max_wait
     for i in range(1, 4):
-        q.submit(mk_task(i))
-    assert q.ready(now=1)                   # size budget reachable
+        q.submit(mk_task(i))                # arrive at ticks 1..3
+    # only *arrived* requests count toward the fill trigger: at now=1
+    # just two of four have landed, so the batch must not close early
+    assert not q.ready(now=1)
+    assert q.ready(now=3)                   # size budget filled
+
+
+def test_ready_ignores_unarrived_pending():
+    """Regression: ready() counted future arrivals toward the fill
+    trigger, so a head request plus a burst landing later fired the
+    trigger at the head's arrival — admitting the head alone and the
+    burst as a second batch."""
+    q = AdmissionQueue(MicroBatchPolicy(max_batch_size=4,
+                                        max_wait_ticks=10))
+    q.submit(mk_task(0), arrival_time=0)
+    for i in range(1, 4):
+        q.submit(mk_task(i), arrival_time=10)
+    assert not q.ready(now=0)
+    assert not q.ready(now=9)
+    assert q.ready(now=10)
+    batch = q.form_batch(now=10)
+    assert len(batch) == 4                  # one batch, not two
+
+
+def test_burst_at_fill_equals_timeout_forms_one_batch():
+    """The prescribed boundary: a burst whose last member arrives
+    exactly when the head's wait budget expires (fill == timeout) —
+    both triggers coincide, and drain admits the whole burst as a
+    single batch at that instant."""
+    pol = MicroBatchPolicy(max_batch_size=4, max_wait_ticks=10)
+    q = AdmissionQueue(pol)
+    q.submit(mk_task(0), arrival_time=0)
+    for i in range(1, 4):
+        q.submit(mk_task(i), arrival_time=10)   # fill == timeout == 10
+    assert q.next_ready_at() == 10
+    # streaming view: not a tick before 10, the whole burst at 10
+    assert not q.ready(now=9)
+    assert q.ready(now=10)
+    batches = q.drain_batches()
+    assert [len(b) for b in batches] == [4]
+
+
+def test_next_ready_at_boundaries():
+    """Empty queue: None (no meaningful instant after a drain).
+    Exactly-full queue: the min of the fill and timeout instants."""
+    pol = MicroBatchPolicy(max_batch_size=3, max_wait_ticks=10)
+    q = AdmissionQueue(pol)
+    assert q.next_ready_at() is None
+    q.submit(mk_task(0), arrival_time=2)
+    assert q.next_ready_at() == 12          # under-full: timeout only
+    q.submit(mk_task(1), arrival_time=4)
+    q.submit(mk_task(2), arrival_time=6)    # exactly full
+    assert q.next_ready_at() == 6           # fill (6) < timeout (12)
+    q.drain_batches()
+    assert q.next_ready_at() is None        # drained: meaningless again
 
 
 def test_policy_validation():
@@ -157,6 +210,29 @@ def test_counters_accumulate_and_render():
     assert "acar_x_total 3" in text
     assert 'acar_y_total{mode="full_arena"} 1' in text
     assert text.endswith("\n")
+
+
+def test_counters_render_escapes_hostile_labels():
+    """Regression: label values rendered unescaped, so a model name
+    containing a quote, backslash or newline produced invalid
+    Prometheus exposition text."""
+    m = PromCounters()
+    m.inc("acar_h_total", 1.0, model='ev"il\\mo\ndel',
+          help="hostile\nhelp \\text")
+    text = m.render()
+    # label value: \ -> \\, " -> \", newline -> \n (two characters)
+    assert 'acar_h_total{model="ev\\"il\\\\mo\\ndel"} 1' in text
+    # HELP text: backslash and newline escaped
+    assert "# HELP acar_h_total hostile\\nhelp \\\\text" in text
+    # the sample must survive as exactly one exposition line — a raw
+    # newline in the label would have split it in two
+    sample = [ln for ln in text.splitlines()
+              if ln.startswith("acar_h_total{")]
+    assert len(sample) == 1
+    # benign labels render byte-identically to before
+    m2 = PromCounters()
+    m2.inc("acar_y_total", 1.0, mode="full_arena")
+    assert 'acar_y_total{mode="full_arena"} 1' in m2.render()
 
 
 def test_counters_render_deterministic():
