@@ -31,6 +31,26 @@ def models_for_mode(mode: str, ensemble: Sequence[str],
     return list(ensemble)
 
 
+def degrade_mode(mode: int, healthy: Sequence[bool],
+                 arena_lite_size: int = 2) -> int:
+    """Graceful degradation ladder over unhealthy ensemble members:
+    the highest integer mode (0=single_agent, 1=arena_lite,
+    2=full_arena) at-or-below ``mode`` that the healthy members can
+    still execute. full_arena survives while *any* member is healthy
+    (it runs over the healthy subset); arena_lite needs a healthy
+    member among the first ``arena_lite_size`` (those are the only
+    members it consults); with no healthy member the probe consensus
+    is final (single_agent). Pure and deterministic, so degraded
+    routing replays bit-identically under the same fault plan."""
+    if mode <= 0:
+        return 0
+    if mode >= 2 and any(healthy):
+        return 2
+    if any(healthy[:arena_lite_size]):
+        return 1
+    return 0
+
+
 def majority_vote(answers: Sequence[str]) -> str:
     """MajorityVote over extracted answers; ties break to first seen."""
     counts = Counter(answers)

@@ -546,7 +546,10 @@ class BatchedACAREngine:
                     chunk_tokens: int = 8,
                     max_active_rows: Optional[int] = None,
                     data_shards: Optional[int] = None,
-                    megastep: int = 1
+                    megastep: int = 1,
+                    faults=None,
+                    journal_path=None,
+                    recovered: Optional[Dict[int, dict]] = None
                     ) -> "QueuedServeResult":
         """Serve a request stream through the step-level loop: rows
         admitted from ``AdmissionQueue.ready()`` the moment the page
@@ -571,11 +574,27 @@ class BatchedACAREngine:
         (``sampler.decode_megastep_rows``); only emitted token ids +
         done bits cross back per megastep. Any K emits bit-identical
         outputs (``simulate.py --megastep``) — it trades nothing but
-        launch overhead."""
+        launch overhead.
+
+        Fault tolerance: ``faults`` (a ``FaultPlan``) attaches a
+        deterministic fault injector; ``journal_path`` attaches a
+        hash-chained write-ahead ``StepJournal``; ``recovered`` (an
+        admission-index -> retire-payload map from
+        ``StepJournal.load``) restores already-retired rows verbatim
+        while everything else re-executes from scratch — see
+        ``recover``. All three hooks are zero-cost when unset."""
         from repro.serving.scheduler import StepPlanner
         from repro.serving.step_loop import (
             ShardedStepLoopRunner, StepLoopRunner)
         t0 = time.perf_counter()
+        injector = None
+        if faults is not None:
+            from repro.serving.faults import FaultInjector
+            injector = FaultInjector(faults)
+        journal = None
+        if journal_path is not None:
+            from repro.serving.journal import StepJournal
+            journal = StepJournal(journal_path, injector=injector)
         queue = AdmissionQueue(policy)
         for t in tasks:
             queue.submit(t)
@@ -585,12 +604,15 @@ class BatchedACAREngine:
             megastep=megastep)
         metrics = PromCounters()
         if data_shards is None:
-            runner = StepLoopRunner(self, queue, planner, metrics)
+            runner = StepLoopRunner(self, queue, planner, metrics,
+                                    faults=injector, journal=journal,
+                                    recovered=recovered)
         else:
             from repro.serving.mesh import ServingMesh
             runner = ShardedStepLoopRunner(
                 self, queue, planner, ServingMesh(data=data_shards),
-                metrics)
+                metrics, faults=injector, journal=journal,
+                recovered=recovered)
         step_stats = runner.run()
         # the sharded runner's servers live outside self._kv_servers:
         # emit the pool gauges / reuse counters from whichever set
@@ -615,12 +637,36 @@ class BatchedACAREngine:
             ensemble_calls_saved=saved,
             wall_ms=(time.perf_counter() - t0) * 1e3,
             metrics=metrics,
-            probe_texts=[r.probe_texts for r in rows],
+            probe_texts=[r.probe_texts or [] for r in rows],
             member_answers=[r.member_answers or
                             [None] * len(self.ensemble)
                             for r in rows],
             kv=runner.kv_stats() or None,
-            step=step_stats)
+            step=step_stats,
+            faults=runner.fault_events or None,
+            restored_rows=step_stats.restored)
+
+    def recover(self, tasks: Sequence[Task],
+                policy: MicroBatchPolicy = MicroBatchPolicy(), *,
+                journal_path, chunk_tokens: int = 8,
+                max_active_rows: Optional[int] = None,
+                data_shards: Optional[int] = None,
+                megastep: int = 1) -> "QueuedServeResult":
+        """Resume a killed ``run_stepped`` run from its write-ahead
+        journal: rows with a durable ``retire`` event are restored
+        verbatim; in-flight and unadmitted rows re-execute from
+        scratch with their original admission indices, so the
+        recovered run's record hashes and artifact-chain heads are
+        byte-identical to an uninterrupted run's
+        (``tests/harness/simulate.py --crash-at`` proves it). Must be
+        called with the same task stream, policy and engine config as
+        the killed run."""
+        from repro.serving.journal import StepJournal
+        state = StepJournal.load(journal_path)
+        return self.run_stepped(
+            tasks, policy, chunk_tokens=chunk_tokens,
+            max_active_rows=max_active_rows, data_shards=data_shards,
+            megastep=megastep, recovered=state.retired)
 
     def _emit_kv_metrics(self, metrics: PromCounters,
                          kv: Optional[Dict[str, KVStats]] = None
@@ -673,3 +719,8 @@ class QueuedServeResult:
     kv: Optional[Dict[str, KVStats]] = None
     # step-loop accounting (None for wave-lockstep execution)
     step: Optional[object] = None
+    # fault-path events (retries, quarantines, degraded routes,
+    # displacements, aborts) in firing order; None on fault-free runs
+    faults: Optional[List[dict]] = None
+    # rows restored verbatim from a step journal by ``recover``
+    restored_rows: int = 0

@@ -280,6 +280,10 @@ class PagedKVServer:
         self.cfg = cfg
         self.page_size = int(page_size)
         self.prefix_cache_entries = int(prefix_cache_entries)
+        # simulated shard loss (serving/faults.py): a lost server's
+        # pool is abandoned — allocations and prefix hits must fail so
+        # no new row can land on dead pages
+        self.lost = False
         self.pool: Optional[PagePool] = None
         self.k_pages = None
         self.v_pages = None
@@ -362,7 +366,7 @@ class PagedKVServer:
 
     # -- prefix cache --------------------------------------------------
     def _prefix_lookup(self, key: bytes) -> Optional[_PrefixEntry]:
-        if self.prefix_cache_entries <= 0:
+        if self.lost or self.prefix_cache_entries <= 0:
             return None
         entry = self._prefix.get(key)
         if entry is not None:
@@ -415,6 +419,10 @@ class PagedKVServer:
         first) and retry; ``PoolExhausted`` escapes once the cache is
         empty — or eviction stops making progress (shared victims free
         nothing) — and the pages genuinely do not exist."""
+        if self.lost:
+            raise PoolExhausted(
+                f"server {self.stats.model!r} is marked lost; its "
+                "page pool is abandoned")
         try:
             return self.pool.alloc(n)
         except PoolExhausted:

@@ -157,6 +157,9 @@ class ShardedPagedKVServer:
         # touched — a half-rebuilt shard set would desync the global
         # array from the pools
         for sv in self.shards:
+            if sv.lost:
+                raise PagePoolError(
+                    f"cannot rebuild shard {sv.index}: marked lost")
             if sv.pool is not None:
                 sv.drop_prefix_cache()
                 old_scratch = sv._scratch.size \
@@ -182,6 +185,15 @@ class ShardedPagedKVServer:
         sharding = NamedSharding(self.smesh.mesh, P("data"))
         self.k_pages = jax.device_put(jnp.zeros(shape, dt), sharding)
         self.v_pages = jax.device_put(jnp.zeros(shape, dt), sharding)
+
+    # -- fault simulation ----------------------------------------------
+    def mark_shard_lost(self, index: int) -> None:
+        """Simulated shard loss: the shard's host-side pool is
+        abandoned in place (pages are forfeited, not released — a dead
+        host cannot run a release path) and every allocation or prefix
+        lookup against it fails from now on. The device array is left
+        as-is; displaced rows re-prefill on surviving shards."""
+        self.shards[index].lost = True
 
     # -- accounting ----------------------------------------------------
     def aggregate_stats(self) -> KVStats:

@@ -10,6 +10,16 @@ from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
+# Fault-tolerance metric names (one constant per exported series so
+# the step loop, harness, and tests agree on spelling).
+FAULTS_INJECTED = "acar_faults_injected_total"
+MEMBER_RETRIES = "acar_member_retries_total"
+MEMBER_QUARANTINED = "acar_member_quarantined"
+ROUTES_DEGRADED = "acar_routes_degraded_total"
+RECOVERY_ROWS_RESTORED = "acar_recovery_rows_restored_total"
+ROW_DEADLINE_ABORTS = "acar_row_deadline_aborts_total"
+STEP_REQUEUES = "acar_step_requeues_total"
+
 
 class PromCounters:
     """Minimal Prometheus text-format counter/gauge registry."""

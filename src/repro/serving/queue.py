@@ -142,11 +142,33 @@ class AdmissionQueue:
         indices are assigned from the same monotone counter
         ``form_batch`` uses, so row numbering is identical whether a
         stream is served wave-wise or one row at a time — the
-        step-level loop's sampling key streams depend on that."""
+        step-level loop's sampling key streams depend on that. A
+        requeued request (see ``requeue``) keeps the index it already
+        holds — the counter advanced at its first admission."""
         req = self._pending.popleft()
-        req.admission_index = self._admitted
-        self._admitted += 1
+        if req.admission_index is None:
+            req.admission_index = self._admitted
+            self._admitted += 1
         return req
+
+    def requeue(self, req: Request) -> None:
+        """Return an admitted-but-unstarted request to the head of the
+        queue (the step loop's admission-time ``PoolExhausted``
+        rollback). The request keeps its already-assigned admission
+        index, so its sampling key streams — and therefore its tokens
+        — are unchanged when it re-admits."""
+        self._pending.appendleft(req)
+
+    @property
+    def next_admission_index(self) -> int:
+        """The admission index the next ``pop`` will return: a
+        requeued head keeps the index it already holds, otherwise the
+        monotone counter's next value. Crash recovery peeks this to
+        restore already-retired rows without popping."""
+        if self._pending and \
+                self._pending[0].admission_index is not None:
+            return self._pending[0].admission_index
+        return self._admitted
 
     def form_batch(self, now: Optional[int] = None
                    ) -> Optional[MicroBatch]:

@@ -35,7 +35,8 @@ from __future__ import annotations
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import (
+    AbstractSet, Any, Dict, List, Optional, Sequence, Tuple)
 
 import jax.numpy as jnp
 import numpy as np
@@ -181,16 +182,22 @@ class StepPlanner:
     def place_shard(self, active_rows: Sequence[int],
                     free_pages: Sequence[int],
                     reserved_pages: Sequence[int],
-                    row_need: int) -> Optional[int]:
+                    row_need: int,
+                    blocked: Optional[AbstractSet[int]] = None
+                    ) -> Optional[int]:
         """Least-loaded shard placement (free-pages-weighted): among
         shards that can admit (per-shard row cap and page budget, the
         exact ``may_admit`` predicate), pick the one with the most
         free pages net of its outstanding reservations; ties break to
         the lowest shard index. Returns None when no shard can admit
-        — the caller defers the row until retirements free budget."""
+        — the caller defers the row until retirements free budget.
+        ``blocked`` shards (lost to a simulated fault) are never
+        candidates regardless of their stale accounting."""
         best = None
         best_headroom = -1
         for k in range(len(free_pages)):
+            if blocked is not None and k in blocked:
+                continue
             if not self.may_admit(active_rows[k], free_pages[k],
                                   reserved_pages[k], row_need):
                 continue

@@ -73,14 +73,20 @@ import jax
 import numpy as np
 
 from repro.core.extract import extract, extract_batch
+from repro.core.routing import degrade_mode
 from repro.core.sigma import majority_vote_batch, sigma_batch
 from repro.data import tokenizer as tok
 from repro.sampling import sampler as S
+from repro.serving.faults import FaultInjector, SimulatedCrash
 from repro.serving.kv_pool import (
-    PagedKVServer, PagePoolError, pages_for)
-from repro.serving.metrics import PromCounters
+    PagedKVServer, PagePoolError, PoolExhausted, pages_for)
+from repro.serving.metrics import (
+    FAULTS_INJECTED, MEMBER_QUARANTINED, MEMBER_RETRIES, PromCounters,
+    RECOVERY_ROWS_RESTORED, ROUTES_DEGRADED, ROW_DEADLINE_ABORTS,
+    STEP_REQUEUES)
 from repro.serving.queue import AdmissionQueue, Request
 from repro.serving.scheduler import StepPlanner
+from repro.teamllm.trace import fault_record
 
 PHASES = ("prefill", "probe_decode", "route_pending",
           "ensemble_decode", "done")
@@ -145,6 +151,7 @@ class _Row:
     members: List[_MemberExec] = field(default_factory=list)
     member_answers: Optional[List[Optional[str]]] = None
     final_answer: Optional[str] = None
+    aborted: Optional[str] = None      # traced abort reason, or None
     admitted_at: int = 0
     retired_at: int = 0
     reserved: int = 0                  # probe-server pages still owed
@@ -178,6 +185,11 @@ class StepStats:
     decode_tokens: int = 0             # live tokens emitted by decode
     decode_h2d: int = 0                # host->device arrays per launch
     decode_d2h: int = 0                # device->host pulls per launch
+    # fault-tolerance accounting
+    restored: int = 0                  # rows restored from the journal
+    requeues: int = 0                  # admissions requeued (alloc)
+    retries: int = 0                   # member launch retries
+    aborted: int = 0                   # rows retired with a null answer
     # per admission index: (arrival_tick, admitted_tick, retired_tick)
     timeline: Dict[int, Tuple[int, int, int]] = field(
         default_factory=dict)
@@ -194,7 +206,10 @@ class StepLoopRunner:
 
     def __init__(self, engine, queue: AdmissionQueue,
                  planner: StepPlanner,
-                 metrics: Optional[PromCounters] = None):
+                 metrics: Optional[PromCounters] = None, *,
+                 faults: Optional[FaultInjector] = None,
+                 journal=None,
+                 recovered: Optional[Dict[int, dict]] = None):
         self.eng = engine
         self.queue = queue
         self.planner = planner
@@ -205,6 +220,15 @@ class StepLoopRunner:
         self.max_new = engine.max_new_tokens
         self.megastep = planner.megastep
         self.base_key = jax.random.PRNGKey(engine.acfg.seed)
+        # fault tolerance: every hook below is a single attribute
+        # check when disabled, so the fault-free path pays nothing
+        # (benchmarks/faults_bench.py gates the overhead)
+        self.injector = faults
+        self.journal = journal              # StepJournal, duck-typed
+        self.recovered = dict(recovered) if recovered else None
+        self.fault_events: List[dict] = []
+        self._quarantined: set = set()
+        self._displaced: List[_Row] = []
         self._init_servers()
         self._reserved = 0                 # pages admitted rows may yet take
         self.active: List[_Row] = []
@@ -279,9 +303,265 @@ class StepLoopRunner:
         row.reserved -= pages
         self._reserved -= pages
 
+    # -- fault handling ------------------------------------------------
+    def _fired(self, site: str, **match) -> bool:
+        """Did an injected fault fire at this site this step? Every
+        firing is counted and traced (and journaled when a journal is
+        attached). Fault coordinates match on the loop's iteration
+        counter, so a replayed run fires identically."""
+        if self.injector is None:
+            return False
+        if self.injector.fire(site, self.stats.ticks, **match) is None:
+            return False
+        self.metrics.inc(FAULTS_INJECTED, site=site,
+                         help="injected faults fired, by site")
+        self._trace_fault("injected", site=site, **match)
+        return True
+
+    def _trace_fault(self, kind: str, **fields) -> None:
+        """Record a fault-path event: collected on the runner (the
+        engine appends them to the decision-trace artifact chain as
+        fully-hashed records) and mirrored into the journal."""
+        rec = fault_record(kind, self.now, **fields)
+        self.fault_events.append(rec)
+        if self.journal is not None:
+            self.journal.fault(rec, self.now)
+
+    def _fault_tick(self) -> None:
+        """Tick-boundary fault checks: process kill, shard loss, and
+        per-row SLO deadlines. Runs right after admission so a crash
+        tick is a clean transaction boundary."""
+        if self._fired("crash"):
+            raise SimulatedCrash(
+                f"injected process kill at step-loop tick "
+                f"{self.stats.ticks}")
+        self._shard_faults()
+        ddl = self.injector.plan.slo_deadline
+        if ddl is not None:
+            for row in list(self.active):
+                if self.now - row.request.arrival_time > ddl:
+                    self._abort_row(row, "slo_deadline")
+
+    def _shard_faults(self) -> None:
+        """Shard-loss checks — meaningful only on the sharded runner."""
+
+    def _member_fault_gate(self, items) -> int:
+        """Pre-launch injected faults for one member decode group:
+        bounded retries with exponential virtual-clock backoff, then
+        quarantine on exhaustion or injected NaN logits. Faults fire
+        *before* the real launch (which has no side effects yet), so a
+        retried group re-launches bit-identically — fault handling
+        never moves token streams. Returns the backoff penalty in
+        virtual-clock units, or -1 when the group was quarantined (the
+        launch must be skipped)."""
+        if not all(it[2].tag >= 100 for it in items):
+            return 0                   # probe lanes mixed in: not a
+        model = items[0][0].stats.model  # member group
+        plan = self.injector.plan
+        penalty = 0
+        retries = 0
+        while self._fired("member_launch", model=model):
+            retries += 1
+            self.stats.retries += 1
+            self.metrics.inc(MEMBER_RETRIES, model=model,
+                             help="member decode-group launch retries")
+            penalty += plan.backoff_base << (retries - 1)
+            self._trace_fault("member_retry", model=model,
+                              attempt=retries)
+            if retries > plan.max_retries:
+                self._quarantine_group(items, model,
+                                       "launch_retries_exhausted")
+                return -1
+        if self._fired("member_nan", model=model):
+            self._quarantine_group(items, model, "nan_logits")
+            return -1
+        return penalty
+
+    def _quarantine_group(self, items, model: str, reason: str) -> None:
+        """Quarantine every ensemble member decoding in this group and
+        degrade all in-flight routes over the remaining healthy
+        members. Completed answers are kept; only unanswered
+        executions are dropped."""
+        members = sorted({it[2].tag - 100 for it in items})
+        for mi in members:
+            if mi in self._quarantined:
+                continue
+            self._quarantined.add(mi)
+            self.metrics.set_gauge(
+                MEMBER_QUARANTINED, 1.0,
+                model=self.eng.ensemble[mi].name,
+                help="1 while an ensemble member is quarantined")
+            self._trace_fault("member_quarantined", member=mi,
+                              model=self.eng.ensemble[mi].name,
+                              reason=reason)
+        for row in list(self.active):
+            if row.phase == "ensemble_decode":
+                self._degrade_row(row)
+
+    def _apply_degraded_mode(self, row: _Row) -> None:
+        """Degrade a row's route over the healthy members (the
+        routing ladder in ``core.routing.degrade_mode``); a row left
+        with no members falls back to the probe consensus."""
+        healthy = [mi not in self._quarantined
+                   for mi in range(len(self.eng.ensemble))]
+        new_mode = degrade_mode(row.mode, healthy,
+                                self.acfg.arena_lite_size)
+        if row.phase == "ensemble_decode" and not row.members:
+            new_mode = 0
+        if new_mode != row.mode:
+            self.metrics.inc(
+                ROUTES_DEGRADED, 1.0,
+                help="routes degraded over quarantined members",
+                **{"from": str(row.mode), "to": str(new_mode)})
+            self._trace_fault("route_degraded",
+                              admission=row.admission,
+                              **{"from": row.mode, "to": new_mode})
+            row.mode = new_mode
+
+    def _degrade_row(self, row: _Row) -> None:
+        """Drop a row's unanswered executions on quarantined members
+        and re-judge under the degraded mode."""
+        dropped = [mx for mx in row.members
+                   if mx.member in self._quarantined
+                   and mx.answer is None]
+        if not dropped:
+            return
+        for mx in dropped:
+            self._abort_member_exec(row, mx)
+            row.members.remove(mx)
+        self._apply_degraded_mode(row)
+        if not row.members:
+            # every member dropped: the probe consensus is final
+            self._release_prompt(self._probe_server(row), row)
+            self._judge(row)
+            self._retire(row)
+        else:
+            self._finish_members(row)
+
+    def _abort_member_exec(self, row: _Row, mx: _MemberExec) -> None:
+        """Release one (row, member) execution's pages mid-flight. The
+        lane object may still sit in this tick's precomputed decode
+        groups; marking it done masks it in any launch that follows."""
+        srv = self._probe_server(row) if mx.reuse else mx.server
+        if mx.lane is not None:
+            mx.lane.done = True
+            mx.lane = None
+        if mx.tails is not None:
+            srv.pool.release(mx.tails)
+            mx.tails = None
+        if not mx.reuse and mx.shared is not None:
+            self._release_prompt(srv, mx)
+        if srv is not None:
+            srv._sample_usage()
+
+    def _abort_row(self, row: _Row, reason: str) -> None:
+        """Retire a row with a null answer and a traced abort reason,
+        releasing everything it holds (SLO deadline, dead fleet)."""
+        srv = self._probe_server(row)
+        if row.sample_tails is not None:
+            srv.pool.release(row.sample_tails.reshape(-1))
+            row.sample_tails = None
+        for lane in row.lanes:
+            lane.done = True
+        row.lanes = []
+        for mx in row.members:
+            if mx.answer is None:
+                self._abort_member_exec(row, mx)
+        row.members = []
+        self._release_prompt(srv, row)
+        row.probe_texts = row.probe_texts or []
+        row.probe_answers = row.probe_answers or []
+        if row.member_answers is None:
+            row.member_answers = [None] * len(self.eng.ensemble)
+        row.final_answer = None
+        row.aborted = reason
+        self.stats.aborted += 1
+        if reason == "slo_deadline":
+            self.metrics.inc(ROW_DEADLINE_ABORTS,
+                             help="rows aborted past their SLO "
+                                  "deadline")
+        self._trace_fault("row_aborted", admission=row.admission,
+                          reason=reason)
+        self._retire(row)
+
+    def _rollback_admission(self, row: _Row) -> None:
+        """Undo a partially-allocated admission (``PoolExhausted``
+        mid ``_begin_prefill``): release whatever was retained or
+        allocated and return the row's page reservation."""
+        srv = self._probe_server(row)
+        if row.sample_tails is not None:
+            srv.pool.release(row.sample_tails.reshape(-1))
+            row.sample_tails = None
+        row.lanes = []
+        self._release_prompt(srv, row)
+        row.from_cache = False
+        row.prefill_pos = 0
+        row.logits0 = None
+        row.phase = "prefill"
+        self._unreserve(row, row.reserved)
+        self.stats.timeline.pop(row.admission, None)
+
+    def _try_begin_prefill(self, row: _Row) -> bool:
+        """Admission-time allocation with ``PoolExhausted`` rollback:
+        the row is requeued at the head of the queue *keeping its
+        admission index*, so its sampling key streams — and therefore
+        its tokens — are unchanged when it re-admits."""
+        try:
+            if self._fired("admit_alloc"):
+                raise PoolExhausted(
+                    "injected admission-time pool exhaustion")
+            self._begin_prefill(row)
+            return True
+        except PoolExhausted:
+            self._rollback_admission(row)
+            self.queue.requeue(row.request)
+            self.stats.requeues += 1
+            self.metrics.inc(
+                STEP_REQUEUES,
+                help="admissions requeued on PoolExhausted")
+            self._trace_fault("requeued", admission=row.admission)
+            return False
+
+    def _restore_head(self) -> bool:
+        """Crash recovery: restore the queue head verbatim from its
+        journaled retirement. Retired rows are *not* a prefix of the
+        admission order (later rows retire first all the time), so
+        this is checked per-head inside the admission loop, bypassing
+        the ready()/arrival gating — restoration is instantaneous
+        host work."""
+        head = self.queue.peek()
+        idx = head.admission_index
+        if idx is None:
+            idx = self.queue.next_admission_index
+        rec = self.recovered.get(idx)
+        if rec is None:
+            return False
+        del self.recovered[idx]
+        req = self.queue.pop()
+        row = _Row(request=req, ids=np.zeros(0, np.int32),
+                   phase="done", sigma=float(rec["sigma"]),
+                   mode=int(rec["mode"]),
+                   probe_texts=list(rec["probe_texts"]),
+                   probe_answers=list(rec["probe_answers"]),
+                   member_answers=list(rec["member_answers"]),
+                   final_answer=rec["final_answer"],
+                   aborted=rec.get("aborted"))
+        self.stats.timeline[idx] = tuple(rec["timeline"])
+        self.stats.retired += 1
+        self.stats.restored += 1
+        self.done_rows[idx] = row
+        self.metrics.inc(
+            RECOVERY_ROWS_RESTORED,
+            help="rows restored verbatim from the step journal")
+        return True
+
     # -- admission -----------------------------------------------------
     def _admit_ready(self) -> None:
-        while len(self.queue) and self.queue.ready(self.now):
+        while len(self.queue):
+            if self.recovered and self._restore_head():
+                continue
+            if not self.queue.ready(self.now):
+                break
             head = self.queue.peek()
             if head.arrival_time > self.now:
                 break
@@ -314,11 +594,15 @@ class StepLoopRunner:
             self._reserved += row.reserved
             self.stats.timeline[row.admission] = (
                 req.arrival_time, self.now, -1)
-            self._begin_prefill(row)
+            if not self._try_begin_prefill(row):
+                break
             self.active.append(row)
             self.stats.admissions += 1
             self.metrics.inc("acar_step_admissions_total",
                              help="rows admitted into the step loop")
+            if self.journal is not None:
+                self.journal.admit(row.admission, req.request_id,
+                                   self.now)
 
     def _begin_prefill(self, row: _Row) -> None:
         srv = self._probe_server(row)
@@ -522,8 +806,16 @@ class StepLoopRunner:
         _, temperature, cache_len = key
         srv = items[0][0]
         nb = pages_for(cache_len, srv.page_size)
-        lanes = [it[2] for it in sorted(
-            items, key=lambda it: (it[1].admission, it[2].tag))]
+        ordered = sorted(items, key=lambda it: (it[1].admission,
+                                                it[2].tag))
+        lanes = [it[2] for it in ordered]
+        penalty = 0
+        if self.injector is not None:
+            penalty = self._member_fault_gate(ordered)
+            if penalty < 0:
+                return 0               # group quarantined pre-launch
+        tok0 = [len(l.tokens) for l in lanes] \
+            if self.journal is not None else None
         bucket = self.planner.decode_bucket(len(lanes))
         k = len(lanes)
         kl = self._megastep_span(lanes)
@@ -538,7 +830,10 @@ class StepLoopRunner:
             pos[i] = cache_len - self.max_new + lane.steps
             keys[i] = lane.row_key
             steps[i] = lane.steps
-            done[i] = i >= k          # pad rows emit pads into scratch
+            # pad rows emit pads into scratch; a lane a quarantine
+            # dropped earlier this tick decodes masked (its pages are
+            # already released)
+            done[i] = i >= k or lane.done
         # lane logits never left the device: stacking slices of the
         # previous megastep's next_logits is a device-side gather
         logits = jnp.stack([lanes[min(i, k - 1)].logits
@@ -557,14 +852,30 @@ class StepLoopRunner:
         self.stats.launches += 1
         self.stats.decode_h2d += 5     # tables, pos, keys, steps, done
         self.stats.decode_d2h += 2     # emits, dones
+        if (self.injector is not None
+                and all(l.tag >= 100 for l in lanes)
+                and not np.isfinite(np.asarray(
+                    next_logits[:k], np.float32)).all()):
+            # genuine non-finite member logits: discard the launch
+            # (lane state is untouched) and quarantine — only checked
+            # while an injector is attached, so the fault-free path
+            # never pays the extra device sync
+            self._quarantine_group(ordered, srv.stats.model,
+                                   "nan_logits")
+            return kl + penalty
         for i, lane in enumerate(lanes):
             self._replay_megastep(lane, emits, dones, kl, i)
             lane.logits = next_logits[i]
+        if self.journal is not None:
+            self.journal.emit(self.now, srv.stats.model, [
+                [it[1].admission, lane.tag, lane.steps,
+                 int(lane.done), lane.tokens[tok0[i]:]]
+                for i, (it, lane) in enumerate(zip(ordered, lanes))])
         self.metrics.set_gauge(
             "acar_step_bucket_occupancy", k / bucket,
             server=srv.stats.model, bucket=str(bucket),
             help="live-lane fill of the last step-decode bucket")
-        return kl
+        return kl + penalty
 
     # -- phase transitions ---------------------------------------------
     def _promote(self) -> None:
@@ -627,10 +938,14 @@ class StepLoopRunner:
         for i, row in enumerate(rows):
             row.sigma = float(np.asarray(sig)[i])
             row.mode = int(modes[i])
+            if self._quarantined:
+                self._apply_degraded_mode(row)
             row.member_answers = [None] * len(self.eng.ensemble)
             self._spawn_members(row)
 
     def _member_needed(self, mode: int, mi: int) -> bool:
+        if mi in self._quarantined:
+            return False
         return mode >= (1 if mi < self.acfg.arena_lite_size else 2)
 
     def _spawn_members(self, row: _Row) -> None:
@@ -772,6 +1087,18 @@ class StepLoopRunner:
         self.stats.timeline[row.admission] = (arr, adm, self.now)
         self.stats.retired += 1
         self.done_rows[row.admission] = row
+        if self.journal is not None:
+            self.journal.retire({
+                "adm": row.admission,
+                "task_id": row.request.task.task_id,
+                "sigma": row.sigma, "mode": row.mode,
+                "probe_texts": row.probe_texts,
+                "probe_answers": row.probe_answers,
+                "member_answers": row.member_answers,
+                "final_answer": row.final_answer,
+                "aborted": row.aborted,
+                "timeline": list(self.stats.timeline[row.admission]),
+            }, self.now)
 
     def kv_stats(self):
         """Measured paged-KV accounting per model for this run."""
@@ -794,8 +1121,10 @@ class StepLoopRunner:
                      "(route_pending: resolved within this step)")
 
     def run(self) -> StepStats:
-        while len(self.queue) or self.active:
+        while len(self.queue) or self.active or self._displaced:
             self._admit_ready()
+            if self.injector is not None:
+                self._fault_tick()
             per_server: Dict[object, int] = {}
             self._tick_extra = {}
             self._routed_this_tick = 0
@@ -849,6 +1178,20 @@ class StepLoopRunner:
 # ----------------------------------------------------------------------
 # mesh-sharded step loop (serving/mesh.py per-shard page pools)
 # ----------------------------------------------------------------------
+def _shard_rows(arr):
+    """Per-shard device-local views of a P("data")-sharded launch
+    output (leading axis = shard index). Indexing the global array
+    instead (``arr[k, i]``) dispatches a tiny cross-device gather —
+    an all-device collective per lane per tick — whose rendezvous can
+    deadlock the CPU backend when fault handling perturbs the launch
+    schedule mid-tick. A shard-local view costs nothing and never
+    synchronises across devices."""
+    out = [None] * arr.shape[0]
+    for s in arr.addressable_shards:
+        out[s.index[0].start or 0] = s.data
+    return out
+
+
 class ShardedStepLoopRunner(StepLoopRunner):
     """Step-level loop over a ``ServingMesh``: rows are placed on the
     least-loaded shard at admission (``StepPlanner.place_shard``),
@@ -877,9 +1220,15 @@ class ShardedStepLoopRunner(StepLoopRunner):
 
     def __init__(self, engine, queue: AdmissionQueue,
                  planner: StepPlanner, smesh,
-                 metrics: Optional[PromCounters] = None):
+                 metrics: Optional[PromCounters] = None, *,
+                 faults: Optional[FaultInjector] = None,
+                 journal=None,
+                 recovered: Optional[Dict[int, dict]] = None):
         self.smesh = smesh
-        super().__init__(engine, queue, planner, metrics)
+        self._lost: set = set()            # shards marked lost
+        super().__init__(engine, queue, planner, metrics,
+                         faults=faults, journal=journal,
+                         recovered=recovered)
 
     # -- server topology -----------------------------------------------
     def _init_servers(self) -> None:
@@ -957,12 +1306,25 @@ class ShardedStepLoopRunner(StepLoopRunner):
         self._shard_reserved[row.shard] -= pages
 
     def _retire(self, row: _Row) -> None:
-        self._shard_active[row.shard] -= 1
+        # rows retiring off a lost shard (displaced-row aborts) were
+        # already struck from its zeroed occupancy counters
+        if row.shard not in self._lost:
+            self._shard_active[row.shard] -= 1
         super()._retire(row)
+
+    def _rollback_admission(self, row: _Row) -> None:
+        super()._rollback_admission(row)
+        self._shard_active[row.shard] -= 1
 
     # -- admission: least-loaded shard placement -----------------------
     def _admit_ready(self) -> None:
-        while len(self.queue) and self.queue.ready(self.now):
+        if self._displaced:
+            self._replace_displaced()
+        while len(self.queue):
+            if self.recovered and self._restore_head():
+                continue
+            if not self.queue.ready(self.now):
+                break
             head = self.queue.peek()
             if head.arrival_time > self.now:
                 break
@@ -982,13 +1344,25 @@ class ShardedStepLoopRunner(StepLoopRunner):
                 # the active rows drain (see StepLoopRunner)
                 if self.active:
                     break
+                if self._lost:
+                    # a lost shard is frozen in place, so pools can
+                    # never rebuild again: admit-or-abort keeps the
+                    # stream draining (traced, deterministic)
+                    req = self.queue.pop()
+                    row = _Row(request=req, ids=ids,
+                               admitted_at=self.now,
+                               shard=min(self._lost))
+                    self.stats.timeline[row.admission] = (
+                        req.arrival_time, self.now, -1)
+                    self._abort_row(row, "capacity_rebuild_blocked")
+                    continue
                 raise
             need = self._row_need(s)
             shard = self.planner.place_shard(
                 self._shard_active,
                 [sv.pool.free_pages
                  for sv in self.probe_sharded.shards],
-                self._shard_reserved, need)
+                self._shard_reserved, need, blocked=self._lost)
             if shard is None:
                 break
             req = self.queue.pop()
@@ -998,7 +1372,8 @@ class ShardedStepLoopRunner(StepLoopRunner):
             self._shard_active[shard] += 1
             self.stats.timeline[row.admission] = (
                 req.arrival_time, self.now, -1)
-            self._begin_prefill(row)
+            if not self._try_begin_prefill(row):
+                break
             self.active.append(row)
             self.stats.admissions += 1
             self.metrics.inc("acar_step_admissions_total",
@@ -1006,6 +1381,97 @@ class ShardedStepLoopRunner(StepLoopRunner):
             self.metrics.inc("acar_shard_placements_total",
                              shard=str(shard),
                              help="rows placed per mesh shard")
+            if self.journal is not None:
+                self.journal.admit(row.admission, req.request_id,
+                                   self.now)
+
+    # -- shard loss ----------------------------------------------------
+    def _shard_faults(self) -> None:
+        for k in range(self.smesh.n_shards):
+            if k not in self._lost \
+                    and self._fired("shard_loss", shard=k):
+                self._lose_shard(k)
+
+    def _lose_shard(self, k: int) -> None:
+        """Simulated shard death: every server's shard-``k`` pool is
+        abandoned (pages forfeited, never released — a dead host runs
+        no release path), resident rows are displaced for re-placement
+        on survivors, and the shard's occupancy counters zero out."""
+        self._lost.add(k)
+        self.probe_sharded.mark_shard_lost(k)
+        for srv in self._member_sharded:
+            srv.mark_shard_lost(k)
+        self._trace_fault("shard_lost", shard=k)
+        for row in [r for r in self.active if r.shard == k]:
+            self._forfeit_row(row)
+            self.active.remove(row)
+            self._displaced.append(row)
+            self._trace_fault("row_displaced",
+                              admission=row.admission, shard=k)
+        self._shard_active[k] = 0
+        self._shard_reserved[k] = 0
+
+    def _forfeit_row(self, row: _Row) -> None:
+        """Strip a row of everything resident on its (lost) shard and
+        reset it to re-prefill from step 0. No pages are released —
+        the pool is abandoned with them. Admission-indexed key streams
+        make the restart emit bit-identical tokens."""
+        for lane in row.lanes:
+            lane.done = True
+        for mx in row.members:
+            if mx.lane is not None:
+                mx.lane.done = True
+        row.shared = None
+        row.tail = None
+        row.from_cache = False
+        row.prefill_pos = 0
+        row.logits0 = None
+        row.sample_tails = None
+        row.lanes = []
+        row.probe_texts = None
+        row.probe_answers = None
+        row.sigma = 0.0
+        row.mode = 0
+        row.members = []
+        row.member_answers = None
+        row.final_answer = None
+        row.phase = "prefill"
+        row.reserved = 0
+
+    def _replace_displaced(self) -> None:
+        """Re-place displaced rows on surviving shards (admission
+        order, least-loaded placement over the healthy set). Rows that
+        do not fit yet stay displaced — retirements free pages every
+        tick, so placement is retried until they land. With no shard
+        left the rows abort with a traced null-answer retirement."""
+        if len(self._lost) >= self.smesh.n_shards:
+            for row in self._displaced:
+                self._abort_row(row, "no_healthy_shards")
+            self._displaced = []
+            return
+        still: List[_Row] = []
+        for row in sorted(self._displaced, key=lambda r: r.admission):
+            need = self._row_need(row.s)
+            shard = self.planner.place_shard(
+                self._shard_active,
+                [sv.pool.free_pages
+                 for sv in self.probe_sharded.shards],
+                self._shard_reserved, need, blocked=self._lost)
+            if shard is None:
+                still.append(row)
+                continue
+            row.shard = shard
+            row.reserved = need
+            self._shard_reserved[shard] += need
+            self._shard_active[shard] += 1
+            self._begin_prefill(row)
+            self.active.append(row)
+            self._trace_fault("row_replaced",
+                              admission=row.admission, shard=shard)
+            self.metrics.inc("acar_shard_placements_total",
+                             shard=str(shard),
+                             help="rows placed per mesh shard")
+        self._displaced = still
 
     # -- page plumbing: per-shard COW forks in one launch --------------
     def _fork(self, srv, src: Sequence[int],
@@ -1065,16 +1531,18 @@ class ShardedStepLoopRunner(StepLoopRunner):
                          help="chunked-prefill device programs run")
         self.stats.launches += 1
         # native-dtype, device-resident chunk-final logits (see the
-        # single-device runner)
+        # single-device runner), sliced shard-locally — never through
+        # the global array, which would gather cross-device
+        lg_local = _shard_rows(lg)
         for k in range(nsh):
             for i, (srv, row, mx) in enumerate(per[k]):
                 target = mx if mx is not None else row
                 target.prefill_pos = int(starts[k, i]) + c
                 if target.prefill_pos == s:
-                    target.logits0 = lg[k, i]
+                    target.logits0 = lg_local[k][0, i]
                     srv._prefix_insert(row.ids.tobytes(),
                                        target.shared, target.tail,
-                                       lg[k, i], tokens=s)
+                                       target.logits0, tokens=s)
 
     def _run_decode_group(self, key, items) -> int:
         import jax.numpy as jnp
@@ -1082,11 +1550,18 @@ class ShardedStepLoopRunner(StepLoopRunner):
         parent = items[0][0].parent
         nsh = parent.n_shards
         nb = pages_for(cache_len, self.page_size)
+        penalty = 0
+        if self.injector is not None:
+            penalty = self._member_fault_gate(items)
+            if penalty < 0:
+                return 0               # group quarantined pre-launch
         per: List[list] = [[] for _ in range(nsh)]
         for srv, row, lane in items:
             per[srv.index].append((row, lane))
         for k in range(nsh):
             per[k].sort(key=lambda rl: (rl[0].admission, rl[1].tag))
+        tok0 = {id(lane): len(lane.tokens) for _, _, lane in items} \
+            if self.journal is not None else None
         bucket = self.planner.decode_bucket(
             max(len(p) for p in per))
         # one fused span for the whole group: every shard advances in
@@ -1099,25 +1574,43 @@ class ShardedStepLoopRunner(StepLoopRunner):
         keys = np.zeros((nsh, bucket, 2), np.uint32)
         steps = np.zeros((nsh, bucket), np.int32)
         done = np.ones((nsh, bucket), bool)
-        lane_rows = []                 # device-side logits gather
         filler = items[0][2].logits    # pad rows sample masked pads
         live_total = 0
+        # assemble the logits operand shard-locally: each device
+        # stacks its own lanes' rows (device_put is a no-op for a row
+        # already resident; prefix-cache hits seeded on another shard
+        # transfer point-to-point), and the pieces form the
+        # P("data")-sharded global array the launch expects — no
+        # cross-device gathers, no collective per lane
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec
+        mesh_devs = list(self.smesh.mesh.devices.flat)
+        pieces = []
         for k in range(nsh):
             scratch = parent.shards[k]._scratch[:nb]
+            rows_k = []
             for i in range(bucket):
                 if i < len(per[k]):
                     row, lane = per[k][i]
-                    lane_rows.append(lane.logits)
+                    rows_k.append(
+                        jax.device_put(lane.logits, mesh_devs[k]))
                     tables[k, i] = lane.block_table
                     pos[k, i] = cache_len - self.max_new + lane.steps
                     keys[k, i] = lane.row_key
                     steps[k, i] = lane.steps
-                    done[k, i] = False
+                    # a lane dropped by a quarantine or shard loss
+                    # earlier this tick decodes masked
+                    done[k, i] = lane.done
                     live_total += 1
                 else:
-                    lane_rows.append(filler)
+                    rows_k.append(
+                        jax.device_put(filler, mesh_devs[k]))
                     tables[k, i] = scratch
-        logits = jnp.stack(lane_rows).reshape(nsh, bucket, -1)
+            pieces.append(jnp.stack(rows_k)[None])
+        logits = jax.make_array_from_single_device_arrays(
+            (nsh, bucket, int(filler.shape[-1])),
+            NamedSharding(self.smesh.mesh, PartitionSpec("data")),
+            pieces)
         zm = self._model_by_group[id(parent)]
         prm = self._params_repl[id(parent)]
         (emits, dones, next_logits, parent.k_pages,
@@ -1132,16 +1625,30 @@ class ShardedStepLoopRunner(StepLoopRunner):
         self.stats.launches += 1
         self.stats.decode_h2d += 5     # tables, pos, keys, steps, done
         self.stats.decode_d2h += 2     # emits, dones
+        if (self.injector is not None
+                and all(it[2].tag >= 100 for it in items)
+                and not np.isfinite(np.asarray(
+                    next_logits, np.float32)).all()):
+            # genuine non-finite member logits (see StepLoopRunner)
+            self._quarantine_group(items, parent.model_name,
+                                   "nan_logits")
+            return kl + penalty
+        nl_local = _shard_rows(next_logits)
         for k in range(nsh):
             for i, (row, lane) in enumerate(per[k]):
                 self._replay_megastep(lane, emits[k], dones[k], kl, i)
-                lane.logits = next_logits[k, i]
+                lane.logits = nl_local[k][0, i]
+        if self.journal is not None:
+            self.journal.emit(self.now, parent.model_name, [
+                [row.admission, lane.tag, lane.steps, int(lane.done),
+                 lane.tokens[tok0[id(lane)]:]]
+                for k in range(nsh) for row, lane in per[k]])
         self.metrics.set_gauge(
             "acar_step_bucket_occupancy",
             live_total / (nsh * bucket), server=parent.model_name,
             bucket=str(bucket),
             help="live-lane fill of the last step-decode bucket")
-        return kl
+        return kl + penalty
 
     # -- observability -------------------------------------------------
     def _emit_phase_gauges(self) -> None:

@@ -30,6 +30,20 @@ def content_hash(obj: Any) -> str:
     return hashlib.sha256(stable_json(obj).encode()).hexdigest()
 
 
+def fault_record(kind: str, tick: int, **fields: Any) -> Dict[str, Any]:
+    """A fault-path event as a plain hashable dict: injected faults,
+    member retries/quarantines, degraded routes, shard losses, row
+    aborts. Appended to the artifact chain (fully hashed — unlike
+    ``TraceRecord``'s wall-time side channel, every field here is a
+    deterministic function of the fault plan and admission order, so
+    hashing it keeps degraded runs replay-verifiable)."""
+    rec = {"event": "fault", "kind": str(kind), "tick": int(tick)}
+    for k in sorted(fields):
+        if fields[k] is not None:
+            rec[k] = fields[k]
+    return rec
+
+
 @dataclass(frozen=True)
 class ProbeSample:
     response: str
