@@ -25,6 +25,9 @@ class MoEConfig:
     router_aux_weight: float = 0.01
     # "tp": experts tensor-sharded over model axis (no all-to-all).
     # "ep": experts sharded over model axis with all-to-all dispatch.
+    # "gather": capacity-free per-token top-k gather dispatch
+    # (models.moe.moe_ffn_gather) — batch-composition invariant, so
+    # the serving engine may compact/page MoE members; denser compute.
     impl: str = "tp"
     # Layer index of the first MoE layer (earlier layers use dense FFN,
     # deepseek-v2 keeps layer 0 dense).

@@ -37,25 +37,36 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return Mesh(dev, axes)
 
 
-def make_serving_mesh(data: Optional[int] = None) -> Mesh:
-    """1-D ("data",) request-parallel mesh for the sharded serving
-    subsystem: each shard owns a slice of the paged KV pool and decodes
-    its resident rows; there is no model parallelism on this mesh (a
-    "model" axis for tensor-parallel ensemble members is a ROADMAP
-    follow-up). ``data=None`` takes every visible device. On CPU, run
-    under ``--xla_force_host_platform_device_count=N`` (see
-    ``repro.xla_flags.force_host_device_count``) to get N shards."""
+def make_serving_mesh(data: Optional[int] = None,
+                      model: int = 1) -> Mesh:
+    """Request-parallel mesh for the sharded serving subsystem: each
+    "data" shard owns a slice of the paged KV pool and decodes its
+    resident rows. ``model > 1`` adds a second ("model",) axis so each
+    data shard runs ensemble members tensor-parallel across ``model``
+    devices (heads/kv_heads/ff shard per ``sharding/partitioning.py``);
+    ``model=1`` keeps the 1-D ("data",) mesh byte-compatible with the
+    pre-2-D subsystem. ``data=None`` takes every visible device (divided
+    by ``model``). On CPU, run under
+    ``--xla_force_host_platform_device_count=N`` (see
+    ``repro.xla_flags.force_host_device_count``) to get N devices."""
     devices = jax.devices()
-    n = len(devices) if data is None else int(data)
+    m = int(model)
+    if m < 1:
+        raise ValueError("serving mesh needs model >= 1")
+    n = (len(devices) // m) if data is None else int(data)
     if n < 1:
         raise ValueError("serving mesh needs at least one shard")
-    if len(devices) < n:
+    need = n * m
+    if len(devices) < need:
         raise RuntimeError(
-            f"serving mesh data={n} needs {n} devices, have "
-            f"{len(devices)} — on CPU set XLA_FLAGS="
-            f"--xla_force_host_platform_device_count={n} before jax "
+            f"serving mesh data={n} model={m} needs {need} devices, "
+            f"have {len(devices)} — on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before jax "
             "initialises (repro.xla_flags.force_host_device_count)")
-    return Mesh(np.asarray(devices[:n]), ("data",))
+    if m == 1:
+        return Mesh(np.asarray(devices[:n]), ("data",))
+    dev = np.asarray(devices[:need]).reshape(n, m)
+    return Mesh(dev, ("data", "model"))
 
 
 def make_smoke_mesh(model: int = 1) -> Mesh:

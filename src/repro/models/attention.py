@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import apply_rope
-from repro.sharding import shard
+from repro.sharding import shard, tp_all_gather
 
 _NEG_INF = -1e30
 _FLASH_BLOCK = 512
@@ -384,6 +384,12 @@ def gqa_decode_paged(cfg: ModelConfig, p: dict, x_t: jax.Array,
         out = decode_attention(q, k_cache, v_cache,
                                jnp.arange(cache_len), pos)
     out = out.reshape(b, cfg.num_heads * hd)
+    # under tensor parallelism wq/wk/wv are head-column-sharded (cfg
+    # carries the local head counts) and wo is replicated: gather the
+    # per-head outputs back to the full head axis before the output
+    # projection — attention itself is head-local, so each shard's
+    # slice is bit-identical to the same heads on one device
+    out = tp_all_gather(out)
     y = jnp.einsum("bh,hd->bd", out, p["wo"])
     return y, k_pages, v_pages
 
@@ -460,6 +466,10 @@ def gqa_prefill_chunk_paged(cfg: ModelConfig, p: dict, x: jax.Array,
             jnp.arange(prompt_len)[None, None]             # (B, C, S)
         out = full_attention(q, k_all, v_all, mask)
     out = out.reshape(b, c, cfg.num_heads * hd)
+    # tensor parallelism: gather head-local outputs to the full head
+    # axis before the replicated output projection (see
+    # ``gqa_decode_paged``)
+    out = tp_all_gather(out)
     y = jnp.einsum("bsh,hd->bsd", out, p["wo"])
     return y, k_pages, v_pages
 

@@ -1,0 +1,56 @@
+"""Fixed-shape token blocking: bitwise batch invariance for projections.
+
+XLA picks a dot's tiling (and the CPU backend its GEMM blocking) *per
+shape*. A token's projection can therefore round differently depending
+on how many other tokens happen to share the GEMM — batch composition
+— and, under column-parallel tensor sharding, on how many output
+columns the local shard computes. Both break the serving stack's
+bit-equivalence contracts: compaction decodes a row inside a gathered
+escalated subset, the sharded step loop splits a batch over data
+shards, and the 2-D mesh splits projection columns over model shards,
+yet every record hash must match the single-device full-batch run.
+
+``blocked_rows`` removes the shape dependence instead of hoping the
+compiler's thresholds cooperate: the row-parallel function runs under
+``lax.map`` over fixed (``TOKEN_BLOCK``, d) row blocks (tail
+zero-padded, output sliced back). Every elementary dot then has one
+static shape, so it compiles to one kernel with one reduction order —
+a token's bits depend only on its own values, never on its
+neighbours. Column-parallel splits of the serving configs' projection
+widths are exact at the fixed block shape (verified by
+tests/test_batch_invariant_ops.py), which is what makes the 2-D
+("data", "model") mesh bit-identical to a single device.
+
+The loop always runs through ``lax.map`` — even for a single block —
+so the block body sits in the same program structure (and fuses the
+same way) at every token count.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# 8 rows: every serving-path GEMM becomes (8, d) x (d, f). Small enough
+# that decode batches (<= max_active_rows) stay one or two blocks, big
+# enough that chunked prefill is not dominated by loop overhead.
+TOKEN_BLOCK = 8
+
+
+def blocked_rows(fn: Callable[[jax.Array], jax.Array],
+                 xt: jax.Array) -> jax.Array:
+    """Apply a row-parallel ``fn`` over fixed-size row blocks of ``xt``.
+
+    xt: (T, d). ``fn`` maps (TOKEN_BLOCK, d) -> (TOKEN_BLOCK, ...) and
+    must be row-parallel (each output row a function of the matching
+    input row only — projections, gated MLPs, routers). Returns the
+    concatenation of the per-block outputs, sliced back to T rows.
+    """
+    t, d = xt.shape
+    nb = -(-t // TOKEN_BLOCK)
+    pad = nb * TOKEN_BLOCK - t
+    xp = jnp.pad(xt, ((0, pad), (0, 0))) if pad else xt
+    yb = jax.lax.map(fn, xp.reshape(nb, TOKEN_BLOCK, d))
+    y = yb.reshape(nb * TOKEN_BLOCK, *yb.shape[2:])
+    return y[:t] if pad else y

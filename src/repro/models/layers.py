@@ -11,7 +11,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.sharding import shard
+from repro.models.blocking import blocked_rows
+from repro.sharding import shard, tp_all_gather
 
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
@@ -61,14 +62,27 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 # MLPs
 # ----------------------------------------------------------------------
 def swiglu_mlp(params: dict, x: jax.Array) -> jax.Array:
-    """Gated SwiGLU MLP: params {w_gate, w_up, w_down}; x (..., d)."""
-    gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
-    up = jnp.einsum("...d,df->...f", x, params["w_up"])
-    if x.ndim == 3:
-        gate = shard(gate, "batch", "seq", "ff")
-        up = shard(up, "batch", "seq", "ff")
-    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
-    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+    """Gated SwiGLU MLP: params {w_gate, w_up, w_down}; x (..., d).
+
+    Runs over fixed-shape token blocks (``models.blocking``) so each
+    token's bits are independent of batch composition and of the
+    column-parallel shard width — the property the serving engine's
+    compaction and the 2-D mesh's bit-equivalence contracts rest on.
+    """
+    wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+
+    def blk(xb: jax.Array) -> jax.Array:
+        g = jnp.einsum("td,df->tf", xb, wg)
+        u = jnp.einsum("td,df->tf", xb, wu)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xb.dtype) * u
+        # under tensor parallelism w_gate/w_up are column-sharded and
+        # w_down is replicated: gather the hidden back to full d_ff so
+        # the down-projection contracts full-length (bit-exact, no psum)
+        h = tp_all_gather(h)
+        return jnp.einsum("tf,fd->td", h, wd)
+
+    xt = x.reshape(-1, x.shape[-1])
+    return blocked_rows(blk, xt).reshape(x.shape)
 
 
 def gelu_mlp(params: dict, x: jax.Array) -> jax.Array:
@@ -90,6 +104,11 @@ def lm_head(params: dict, x: jax.Array, tie_embeddings: bool) -> jax.Array:
     w = params["embedding"] if tie_embeddings else params["lm_head"]
     logits = jnp.einsum("...d,vd->...v", x, w) if tie_embeddings else \
         jnp.einsum("...d,dv->...v", x, w)
+    if not tie_embeddings:
+        # untied lm_head is vocab-column-sharded under tensor
+        # parallelism; tied logits contract the replicated embedding
+        # and are already full-vocab
+        logits = tp_all_gather(logits)
     if logits.ndim == 3:
         logits = shard(logits, "batch", "seq", "vocab")
     return logits

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, MoEConfig
-from repro.sharding import shard
+from repro.models.blocking import blocked_rows
+from repro.sharding import shard, tp_active, tp_all_gather
 
 
 def _round_up(x: int, m: int) -> int:
@@ -116,6 +117,76 @@ def moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array,
     return y, aux
 
 
+def _expert_swiglu(xt: jax.Array, wg: jax.Array, wu: jax.Array,
+                   wd: jax.Array) -> jax.Array:
+    """One expert's SwiGLU over flattened tokens xt: (T, d).
+
+    Runs over fixed-shape token blocks (``models.blocking``) so each
+    token's bits are independent of batch composition — the property
+    ``moe_ffn_gather`` promises. Outside a tp context each block
+    routes through ``ops.fused_swiglu`` — the Pallas fused kernel on
+    TPU, its jnp oracle (bit-identical einsum math) everywhere else.
+    Under tensor parallelism w_gate/w_up are column-sharded and w_down
+    replicated, so the hidden must be all-gathered to full d_ff before
+    the down-projection — the fused kernel's single-device layout
+    can't express that, so the unfused (oracle-identical) einsum form
+    runs instead."""
+    if not tp_active():
+        from repro.kernels import ops
+        return blocked_rows(
+            lambda xb: ops.fused_swiglu(xb, wg, wu, wd), xt)
+
+    def blk(xb: jax.Array) -> jax.Array:
+        g = jnp.einsum("td,df->tf", xb, wg)
+        u = jnp.einsum("td,df->tf", xb, wu)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xb.dtype) * u
+        h = tp_all_gather(h)
+        return jnp.einsum("tf,fd->td", h, wd)
+    return blocked_rows(blk, xt)
+
+
+def moe_ffn_gather(cfg: ModelConfig, p: dict, x: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-free top-k MoE for (B, S, d) token batches.
+
+    The capacity path (``moe_ffn``) cumsums dispatch positions across
+    every token in the batch, so one row's expert overflow depends on
+    which rows share it — the exact coupling that disqualifies MoE
+    members from compacted/shared-prefix execution. Here every routed
+    expert's SwiGLU runs dense over the flattened tokens
+    (``_expert_swiglu`` -> ``ops.fused_swiglu``) and each token
+    combines its own top-k experts by gather: no capacity buckets, no
+    cross-row cumsum, no token dropping. Per-token outputs are a pure
+    function of that token's hidden state, so they are bit-identical
+    under any batch composition or row permutation
+    (``sampling.batch_invariant`` keys off ``MoEConfig.impl ==
+    "gather"``). Compute is E/k-fold denser than dispatch — the price
+    of invariance, paid only by configs that opt in.
+    """
+    mcfg = cfg.moe
+    assert mcfg is not None
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = blocked_rows(
+        lambda xb: jnp.einsum("td,de->te", xb, p["router"],
+                              preferred_element_type=jnp.float32), xt)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = router_topk(probs, mcfg.top_k)          # (T, k)
+    aux = load_balance_aux(probs, eidx, mcfg.num_experts)
+
+    ye = jax.lax.map(
+        lambda w: _expert_swiglu(xt, w[0], w[1], w[2]),
+        (p["w_gate"], p["w_up"], p["w_down"]))            # (E, T, d)
+    t = xt.shape[0]
+    ysel = ye[eidx, jnp.arange(t)[:, None]]               # (T, k, d)
+    y = (ysel * gates[..., None].astype(x.dtype)).sum(axis=1)
+
+    if mcfg.num_shared_experts:
+        y = y + _expert_swiglu(xt, p["shared_w_gate"],
+                               p["shared_w_up"], p["shared_w_down"])
+    return y.reshape(b, s, d), aux
+
+
 def moe_ffn_token(cfg: ModelConfig, p: dict, x: jax.Array
                   ) -> jax.Array:
     """Decode path: dense-gather MoE for a (B, d) single-token batch.
@@ -135,6 +206,10 @@ def moe_ffn_token(cfg: ModelConfig, p: dict, x: jax.Array
     gh = jnp.einsum("bd,bkdf->bkf", x, wg)
     uh = jnp.einsum("bd,bkdf->bkf", x, wu)
     h = jax.nn.silu(gh.astype(jnp.float32)).astype(x.dtype) * uh
+    # tensor parallelism: gathered expert w_gate/w_up slices are
+    # column-sharded; gather the hidden to full d_ff_expert before the
+    # (replicated, gathered) down-projection contracts it
+    h = tp_all_gather(h)
     out = jnp.einsum("bkf,bkfd->bkd", h, wd)
     y = (out * gates[..., None].astype(x.dtype)).sum(axis=1)
     if mcfg.num_shared_experts:

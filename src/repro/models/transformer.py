@@ -23,7 +23,7 @@ from repro.models import rglru as rglru_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (
     embed_tokens, gelu_mlp, layer_norm, rms_norm, swiglu_mlp)
-from repro.sharding import shard
+from repro.sharding import shard, tp_all_gather
 
 Cache = Dict[str, Any]
 
@@ -41,6 +41,11 @@ def mlp_apply(cfg: ModelConfig, p: dict, x: jax.Array,
               moe_shards: int) -> Tuple[jax.Array, jax.Array]:
     """Returns (y, aux). aux is 0 for dense MLPs."""
     if "router" in p:
+        if cfg.moe is not None and cfg.moe.impl == "gather":
+            # capacity-free per-token expert math: batch-composition
+            # invariant, so MoE members qualify for compacted /
+            # shared-prefix execution (sampling.batch_invariant)
+            return moe_mod.moe_ffn_gather(cfg, p, x)
         return moe_mod.moe_ffn(cfg, p, x, moe_shards)
     if "w_in" in p:
         return gelu_mlp(p, x), jnp.zeros((), jnp.float32)
@@ -57,6 +62,13 @@ def mlp_apply(cfg: ModelConfig, p: dict, x: jax.Array,
 
 def mlp_apply_token(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
     if "router" in p:
+        if cfg.moe is not None and cfg.moe.impl == "gather":
+            # decode runs the same capacity-free gather math as
+            # prefill: one code path, one bit-contract (fixed-shape
+            # token blocks make it batch-composition invariant and
+            # column-split exact under the 2-D mesh)
+            y, _ = moe_mod.moe_ffn_gather(cfg, p, x[:, None])
+            return y[:, 0]
         return moe_mod.moe_ffn_token(cfg, p, x)
     if "w_in" in p:
         return gelu_mlp(p, x)
@@ -153,6 +165,10 @@ def _logits(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
         logits = jnp.einsum("...d,vd->...v", x, params["embedding"])
     else:
         logits = jnp.einsum("...d,dv->...v", x, params["lm_head"])
+        # tensor parallelism: untied lm_head is vocab-column-sharded;
+        # gather logits to the full vocab (tied logits contract the
+        # replicated embedding and are already full)
+        logits = tp_all_gather(logits)
     if logits.ndim == 3:
         logits = shard(logits, "batch", "seq", "vocab")
     return logits
@@ -512,15 +528,21 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
 # ----------------------------------------------------------------------
 def paged_supported(cfg: ModelConfig) -> bool:
     """True when the config can run the paged KV path bit-identically
-    to the dense path: a uniform dense-GQA stack with a linear cache.
+    to the dense path: a uniform GQA stack with a linear cache.
     Sliding-window layers keep O(window) ring buffers (already
-    sub-linear — paging buys nothing), quantised caches carry scale
-    planes the page layout doesn't model, and MoE prefill is not
-    batch-composition invariant, which the bucketed prefill relies on.
+    sub-linear — paging buys nothing), and quantised caches carry
+    scale planes the page layout doesn't model. MoE configs qualify
+    only with the capacity-free ``MoEConfig.impl == "gather"``
+    dispatch (per-token expert math — batch-composition invariant,
+    which the bucketed prefill relies on; the capacity path cumsums
+    across rows) and a uniform stack (``first_moe_layer == 0`` — the
+    paged bodies scan ``params["layers"]`` alone).
     """
-    return (cfg.family == "dense" and cfg.attn_kind == "gqa"
+    moe_ok = cfg.moe is None or (cfg.moe.impl == "gather"
+                                 and cfg.moe.first_moe_layer == 0)
+    return (cfg.family in ("dense", "moe") and cfg.attn_kind == "gqa"
             and cfg.window is None and not cfg.kv_quant
-            and cfg.moe is None and cfg.frontend is None)
+            and moe_ok and cfg.frontend is None)
 
 
 def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
@@ -552,6 +574,9 @@ def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
         o = attn.flash_attention(q, k, v, positions, positions,
                                  causal=True, window=cfg.window)
         o = o.reshape(b, s, cfg.num_heads * cfg.resolved_head_dim)
+        # tensor parallelism: gather head-local attention outputs to
+        # the full head axis before the replicated output projection
+        o = tp_all_gather(o)
         x = x + jnp.einsum("bsh,hd->bsd", o, lp["attn"]["wo"])
         h = norm_apply(cfg, lp["mlp_norm"], x)
         y, _ = mlp_apply(cfg, lp["mlp"], h, moe_shards)

@@ -18,6 +18,7 @@ rows, see ``batch_invariant``).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import NamedTuple, Optional, Tuple
 
@@ -26,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.sharding import tp_context, tp_local_cfg, tp_param_specs
 
 
 class GenerateOutput(NamedTuple):
@@ -101,11 +103,15 @@ def member_row_keys(base_key: jax.Array, admission_indices,
 def batch_invariant(cfg: ModelConfig) -> bool:
     """True when one row's forward pass cannot depend on which other
     rows share the batch. Dense / SSM / hybrid stacks compute strictly
-    per row; MoE prefill routes with a capacity proportional to the
-    *total* token count, so expert overflow (token dropping) couples
-    rows — compaction and shared-prefix prefill are only bit-equivalent
-    to the padded/tiled paths for batch-invariant configs."""
-    return cfg.moe is None
+    per row. MoE capacity dispatch (``impl`` "tp"/"ep") routes with a
+    capacity proportional to the *total* token count, so expert
+    overflow (token dropping) couples rows; the capacity-free
+    ``impl == "gather"`` dispatch (``models.moe.moe_ffn_gather`` /
+    ``moe_ffn_token``) computes each token's top-k combine from that
+    token alone, so those configs are invariant too — compaction and
+    shared-prefix prefill are only bit-equivalent to the padded/tiled
+    paths for batch-invariant configs."""
+    return cfg.moe is None or cfg.moe.impl == "gather"
 
 
 def _decode_scan(cfg: ModelConfig, params: dict, cache, logits0,
@@ -457,18 +463,48 @@ def decode_megastep_rows(cfg: ModelConfig, params: dict,
 
 # ----------------------------------------------------------------------
 # mesh-sharded step programs (serving/mesh.py drives these: one
-# shard_map'd launch advances every shard's bucket simultaneously)
+# shard_map'd launch advances every shard's bucket simultaneously;
+# on a 2-D ("data", "model") mesh each data shard's program runs
+# tensor-parallel across its model columns — see sharding/tp.py)
 # ----------------------------------------------------------------------
-def _shard_map(body, mesh, n_in, n_out):
-    """shard_map over the serving mesh's ("data",) axis: every operand
-    and result maps its leading shard axis; the body sees leading-1
-    per-shard slices."""
-    from jax.experimental.shard_map import shard_map
+def _mesh_model_size(mesh) -> int:
+    return int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
+
+
+def _row_spec():
     from jax.sharding import PartitionSpec as P
-    return shard_map(body, mesh=mesh,
-                     in_specs=(P(),) + (P("data"),) * n_in,
-                     out_specs=(P("data"),) * n_out,
-                     check_rep=False)
+    return P("data")
+
+
+def _page_spec(m: int):
+    """Page-pool arrays (n_shards, L, P, page, KV, Dh): rows over
+    "data"; under tensor parallelism each model column stores only its
+    kv-head slice, so the KV axis shards over "model" (per-shard pool
+    bytes divide by m — capacity at a fixed byte budget scales x m)."""
+    from jax.sharding import PartitionSpec as P
+    if m > 1:
+        return P("data", None, None, None, "model", None)
+    return P("data")
+
+
+def _param_spec(params, m: int):
+    """Params replicate over "data"; under tensor parallelism the
+    column-parallel leaves shard over "model" (sharding.tp)."""
+    from jax.sharding import PartitionSpec as P
+    return tp_param_specs(params) if m > 1 else P()
+
+
+def _tp_trace_ctx(m: int):
+    """Trace-time tensor-parallel context for shard_map bodies: makes
+    every ``tp_all_gather`` gather point live on the "model" axis.
+    No-op (and byte-identical traces) at m == 1."""
+    return tp_context("model", m) if m > 1 else contextlib.nullcontext()
+
+
+def _shard_map(body, mesh, in_specs, out_specs):
+    from jax.experimental.shard_map import shard_map
+    return shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                     out_specs=tuple(out_specs), check_rep=False)
 
 
 @functools.partial(
@@ -479,21 +515,32 @@ def prefill_chunk_paged_sharded(cfg: ModelConfig, params: dict,
                                 block_table: jax.Array,
                                 start_pos: jax.Array, *,
                                 prompt_len: int, mesh):
-    """``prefill_chunk_paged`` across every shard of a ("data",)
-    serving mesh in one launch. All array operands carry a leading
-    ``n_shards`` axis (tokens: (n_sh, B, C); pages: (n_sh, L, P, page,
-    KV, Dh); tables: (n_sh, B, NBp); start_pos: (n_sh, B)); params are
-    replicated. Each shard's slice runs the exact single-device chunk
+    """``prefill_chunk_paged`` across every shard of a serving mesh in
+    one launch. All array operands carry a leading ``n_shards`` axis
+    (tokens: (n_sh, B, C); pages: (n_sh, L, P, page, KV, Dh); tables:
+    (n_sh, B, NBp); start_pos: (n_sh, B)); params replicate over
+    "data". Each shard's slice runs the exact single-device chunk
     program, so per-row results are bit-identical to unsharded
-    execution — sharding is placement, not math."""
+    execution — sharding is placement, not math. On a 2-D ("data",
+    "model") mesh the program additionally runs tensor-parallel inside
+    each data shard: params/pages carry model-column slices and every
+    sharded-axis contraction all-gathers first (sharding/tp.py), which
+    keeps the reduction order — and therefore the bits — identical."""
+    m = _mesh_model_size(mesh)
+    lcfg = tp_local_cfg(cfg, m)
+    row, pg = _row_spec(), _page_spec(m)
 
     def body(p, tk, kp, vp, table, starts):
-        lg, kp1, vp1 = T.prefill_chunk_paged(
-            cfg, p, tk[0], kp[0], vp[0], table[0], starts[0],
-            prompt_len=prompt_len)
+        with _tp_trace_ctx(m):
+            lg, kp1, vp1 = T.prefill_chunk_paged(
+                lcfg, p, tk[0], kp[0], vp[0], table[0], starts[0],
+                prompt_len=prompt_len)
         return lg[None], kp1[None], vp1[None]
 
-    return _shard_map(body, mesh, 5, 3)(
+    return _shard_map(
+        body, mesh,
+        (_param_spec(params, m), row, pg, pg, row, row),
+        (row, pg, pg))(
         params, tokens, k_pages, v_pages, block_table, start_pos)
 
 
@@ -509,20 +556,28 @@ def decode_step_rows_sharded(cfg: ModelConfig, params: dict,
                              done: jax.Array, *, cache_len: int,
                              temperature: float, eos_id: int,
                              pad_id: int, mesh):
-    """``decode_step_rows`` across every shard of a ("data",) serving
-    mesh in one launch (leading ``n_shards`` axis on every array
-    operand; params replicated). Runs ``_decode_step_rows_impl`` —
-    the identical per-row math — on each shard's slice, so a row
-    emits the same token whatever shard hosts it."""
+    """``decode_step_rows`` across every shard of a serving mesh in
+    one launch (leading ``n_shards`` axis on every array operand;
+    params replicate over "data" and, on a 2-D mesh, tensor-shard over
+    "model"). Runs ``_decode_step_rows_impl`` — the identical per-row
+    math — on each shard's slice, so a row emits the same token
+    whatever shard hosts it and whatever the model-axis size."""
+    m = _mesh_model_size(mesh)
+    lcfg = tp_local_cfg(cfg, m)
+    row, pg = _row_spec(), _page_spec(m)
 
     def body(p, lg, kp, vp, table, pos_, keys, steps_, done_):
-        out = _decode_step_rows_impl(
-            cfg, p, lg[0], kp[0], vp[0], table[0], pos_[0], keys[0],
-            steps_[0], done_[0], cache_len=cache_len,
-            temperature=temperature, eos_id=eos_id, pad_id=pad_id)
+        with _tp_trace_ctx(m):
+            out = _decode_step_rows_impl(
+                lcfg, p, lg[0], kp[0], vp[0], table[0], pos_[0],
+                keys[0], steps_[0], done_[0], cache_len=cache_len,
+                temperature=temperature, eos_id=eos_id, pad_id=pad_id)
         return tuple(o[None] for o in out)
 
-    return _shard_map(body, mesh, 8, 7)(
+    return _shard_map(
+        body, mesh,
+        (_param_spec(params, m), row, pg, pg, row, row, row, row, row),
+        (row, row, row, row, row, pg, pg))(
         params, logits, k_pages, v_pages, block_table, pos, row_keys,
         steps, done)
 
@@ -541,21 +596,32 @@ def decode_megastep_rows_sharded(cfg: ModelConfig, params: dict,
                                  n_ticks: int, cache_len: int,
                                  temperature: float, eos_id: int,
                                  pad_id: int, mesh):
-    """``decode_megastep_rows`` across every shard of a ("data",)
-    serving mesh in one launch (leading ``n_shards`` axis on every
-    array operand; params replicated; emits/dones come back as
-    (n_sh, K, B)). Each shard's slice runs the identical fused scan,
-    so a row emits the same tokens whatever shard hosts it and
-    whatever K the planner picked."""
+    """``decode_megastep_rows`` across every shard of a serving mesh
+    in one launch (leading ``n_shards`` axis on every array operand;
+    params replicate over "data" and, on a 2-D mesh, tensor-shard over
+    "model"; emits/dones come back as (n_sh, K, B)). Each shard's
+    slice runs the identical fused scan, so a row emits the same
+    tokens whatever shard hosts it, whatever K the planner picked and
+    whatever the model-axis size — the decode tick path stays free of
+    host-side collectives; the model-axis all-gathers live inside the
+    device program."""
+    m = _mesh_model_size(mesh)
+    lcfg = tp_local_cfg(cfg, m)
+    row, pg = _row_spec(), _page_spec(m)
 
     def body(p, lg, kp, vp, table, pos_, keys, steps_, done_):
-        out = _decode_megastep_rows_impl(
-            cfg, p, lg[0], kp[0], vp[0], table[0], pos_[0], keys[0],
-            steps_[0], done_[0], n_ticks=n_ticks, cache_len=cache_len,
-            temperature=temperature, eos_id=eos_id, pad_id=pad_id)
+        with _tp_trace_ctx(m):
+            out = _decode_megastep_rows_impl(
+                lcfg, p, lg[0], kp[0], vp[0], table[0], pos_[0],
+                keys[0], steps_[0], done_[0], n_ticks=n_ticks,
+                cache_len=cache_len, temperature=temperature,
+                eos_id=eos_id, pad_id=pad_id)
         return tuple(o[None] for o in out)
 
-    return _shard_map(body, mesh, 8, 5)(
+    return _shard_map(
+        body, mesh,
+        (_param_spec(params, m), row, pg, pg, row, row, row, row, row),
+        (row, row, row, pg, pg))(
         params, logits, k_pages, v_pages, block_table, pos, row_keys,
         steps, done)
 
@@ -566,17 +632,18 @@ def fork_pages_sharded(k_pages: jax.Array, v_pages: jax.Array,
     """Per-shard ``fork_pages`` in one launch. src/dst: (n_sh, K)
     shard-local page ids; shards with nothing to fork pass
     ``src == dst`` self-copies (the identity write), so one shard's
-    COW fork never stalls on the others."""
-    from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P
+    COW fork never stalls on the others. On a 2-D mesh each model
+    column copies its own kv-head slice of the pages — page ids are
+    column-invariant, so the fork stays a pure local copy."""
+    m = _mesh_model_size(mesh)
+    row, pg = _row_spec(), _page_spec(m)
 
     def body(kp, vp, s, d):
         kp1, vp1 = fork_pages(kp[0], vp[0], s[0], d[0])
         return kp1[None], vp1[None]
 
-    return shard_map(body, mesh=mesh, in_specs=(P("data"),) * 4,
-                     out_specs=(P("data"),) * 2,
-                     check_rep=False)(k_pages, v_pages, src, dst)
+    return _shard_map(body, mesh, (pg, pg, row, row), (pg, pg))(
+        k_pages, v_pages, src, dst)
 
 
 def decode_text(tokens, detok) -> list:

@@ -9,8 +9,9 @@ compiles at most log2(B)+1 decode shapes per member instead of one per
 escalated-count), decoded, and the answers scattered back to their
 full-batch positions. The judge sees bit-identical inputs: the same
 rows produce the same answers (greedy decode is batch-composition
-invariant for non-MoE configs), and rows the mask would have discarded
-are simply never decoded.
+invariant for dense configs and for MoE configs using the
+capacity-free gather dispatch — ``sampling.batch_invariant``), and
+rows the mask would have discarded are simply never decoded.
 
 This module is pure host-side planning + accounting, shared by the
 real-model engine (serving/engine.py) and the scheduler's wave planner

@@ -23,8 +23,11 @@ proportional to what the router actually escalated:
   the full batch and discards non-escalated answers; both paths feed
   ``judge_batch`` bit-identical inputs. Compaction engages only when
   the decode is batch-composition invariant: greedy ensemble
-  temperature (categorical draws depend on batch shape) and non-MoE
-  member configs (MoE prefill capacity couples rows).
+  temperature (categorical draws depend on batch shape) and, for MoE
+  members, the capacity-free gather dispatch (``MoEConfig.impl ==
+  "gather"`` — the capacity path's cross-row cumsum couples rows;
+  ``models.moe.moe_ffn_gather`` removes it, so gather-MoE members
+  take the compacted escalated-subset path like dense ones).
 
 Answer ids: EXTRACT runs host-side on decoded text (string logic), then
 canonical answers are interned to int32 ids for the on-device math —
@@ -546,7 +549,8 @@ class BatchedACAREngine:
                     chunk_tokens: int = 8,
                     max_active_rows: Optional[int] = None,
                     data_shards: Optional[int] = None,
-                    megastep: int = 1,
+                    model_shards: int = 1,
+                    megastep=1,
                     faults=None,
                     journal_path=None,
                     recovered: Optional[Dict[int, dict]] = None
@@ -566,15 +570,23 @@ class BatchedACAREngine:
         ("data",) device mesh, per-shard page pools, one shard_map'd
         program per tick — still bit-identical per task
         (``simulate.py --sharded``), with ``max_active_rows``
-        interpreted per shard. Needs ``data_shards`` visible devices
-        (on CPU: ``--xla_force_host_platform_device_count``).
+        interpreted per shard. ``model_shards`` > 1 widens the mesh
+        to 2-D ("data", "model"): each data shard's program runs
+        tensor-parallel across its model columns (column-parallel
+        params, kv-head-sharded pages — sharding/tp.py), still
+        bit-identical (``simulate.py --mesh2d``). Needs
+        ``data_shards * model_shards`` visible devices (on CPU:
+        ``--xla_force_host_platform_device_count``).
 
         ``megastep`` fuses up to K decode ticks into one device
         launch with lane state kept device-resident
         (``sampler.decode_megastep_rows``); only emitted token ids +
         done bits cross back per megastep. Any K emits bit-identical
         outputs (``simulate.py --megastep``) — it trades nothing but
-        launch overhead.
+        launch overhead. ``megastep="auto"`` fuses up to 16 ticks but
+        caps each group's span at its shortest remaining lane budget,
+        eliminating masked budget-exhaustion steps
+        (``StepPlanner.megastep_auto``).
 
         Fault tolerance: ``faults`` (a ``FaultPlan``) attaches a
         deterministic fault injector; ``journal_path`` attaches a
@@ -598,19 +610,32 @@ class BatchedACAREngine:
         queue = AdmissionQueue(policy)
         for t in tasks:
             queue.submit(t)
-        planner = StepPlanner(
-            chunk_tokens=chunk_tokens,
-            max_active_rows=max_active_rows or policy.max_batch_size,
-            megastep=megastep)
+        if megastep == "auto":
+            planner = StepPlanner(
+                chunk_tokens=chunk_tokens,
+                max_active_rows=max_active_rows
+                or policy.max_batch_size,
+                megastep=16, megastep_auto=True)
+        else:
+            planner = StepPlanner(
+                chunk_tokens=chunk_tokens,
+                max_active_rows=max_active_rows
+                or policy.max_batch_size,
+                megastep=megastep)
         metrics = PromCounters()
         if data_shards is None:
+            if model_shards != 1:
+                raise ValueError(
+                    "model_shards > 1 requires the sharded loop: "
+                    "pass data_shards as well")
             runner = StepLoopRunner(self, queue, planner, metrics,
                                     faults=injector, journal=journal,
                                     recovered=recovered)
         else:
             from repro.serving.mesh import ServingMesh
             runner = ShardedStepLoopRunner(
-                self, queue, planner, ServingMesh(data=data_shards),
+                self, queue, planner,
+                ServingMesh(data=data_shards, model=model_shards),
                 metrics, faults=injector, journal=journal,
                 recovered=recovered)
         step_stats = runner.run()
@@ -651,7 +676,8 @@ class BatchedACAREngine:
                 journal_path, chunk_tokens: int = 8,
                 max_active_rows: Optional[int] = None,
                 data_shards: Optional[int] = None,
-                megastep: int = 1) -> "QueuedServeResult":
+                model_shards: int = 1,
+                megastep=1) -> "QueuedServeResult":
         """Resume a killed ``run_stepped`` run from its write-ahead
         journal: rows with a durable ``retire`` event are restored
         verbatim; in-flight and unadmitted rows re-execute from
@@ -666,7 +692,8 @@ class BatchedACAREngine:
         return self.run_stepped(
             tasks, policy, chunk_tokens=chunk_tokens,
             max_active_rows=max_active_rows, data_shards=data_shards,
-            megastep=megastep, recovered=state.retired)
+            model_shards=model_shards, megastep=megastep,
+            recovered=state.retired)
 
     def _emit_kv_metrics(self, metrics: PromCounters,
                          kv: Optional[Dict[str, KVStats]] = None

@@ -276,7 +276,8 @@ class PagedKVServer:
         if not paged_supported(cfg):
             raise ValueError(
                 f"config {cfg.name!r} is not paged-KV capable "
-                "(dense GQA, linear cache, non-MoE required)")
+                "(GQA, linear cache, and dense or gather-dispatch "
+                "MoE FFN required)")
         self.cfg = cfg
         self.page_size = int(page_size)
         self.prefix_cache_entries = int(prefix_cache_entries)

@@ -6,10 +6,16 @@ ROADMAP's north star wants multi-host sharded waves. This module adds
 the data-parallel half of that story, exercised on CPU via
 ``--xla_force_host_platform_device_count``:
 
-* **ServingMesh** — a 1-D ``("data",)`` jax mesh (built by
-  ``launch.mesh.make_serving_mesh``). Each mesh device is one *shard*:
-  an independent serving executor with its own slice of every model's
-  KV page pool.
+* **ServingMesh** — a ``("data",)`` or 2-D ``("data", "model")`` jax
+  mesh (built by ``launch.mesh.make_serving_mesh``). Each *data* row
+  is one *shard*: an independent serving executor with its own slice
+  of every model's KV page pool. When the mesh carries a "model" axis
+  each shard's program additionally runs tensor-parallel across its
+  model columns: member params shard column-parallel per
+  ``sharding.tp.tp_param_specs`` and each page array's kv-head axis
+  shards over "model", so per-device page bytes — and therefore
+  per-member pool capacity at fixed memory — scale with the
+  model-axis size.
 * **ShardedPagedKVServer** — one model's paged KV state partitioned
   across the mesh. The device page arrays are one global
   ``(n_shards, L, P, page, KV, Dh)`` array sharded over ``"data"``;
@@ -48,31 +54,57 @@ from repro.serving.kv_pool import (
 
 
 class ServingMesh:
-    """A ("data",) request-parallel serving mesh.
+    """A ("data",) or ("data", "model") request-parallel serving mesh.
 
-    Thin wrapper over the jax ``Mesh`` adding the two placement
-    helpers the sharded servers need: ``replicate`` (params — every
-    shard runs the same model) and ``shard_rows`` (per-shard operand
-    stacks, leading axis mapped to ``"data"``).
+    Thin wrapper over the jax ``Mesh`` adding the placement helpers
+    the sharded servers need: ``replicate`` / ``place_params`` (member
+    weights) and ``shard_rows`` (per-shard operand stacks, leading
+    axis mapped to ``"data"``).
     """
 
-    def __init__(self, data: Optional[int] = None, mesh=None):
+    def __init__(self, data: Optional[int] = None, mesh=None, *,
+                 model: int = 1):
         if mesh is None:
             from repro.launch.mesh import make_serving_mesh
-            mesh = make_serving_mesh(data)
-        if tuple(mesh.axis_names) != ("data",):
+            mesh = make_serving_mesh(data, model=model)
+        names = tuple(mesh.axis_names)
+        if names not in (("data",), ("data", "model")):
             raise ValueError(
-                f"serving mesh must be 1-D ('data',), got "
-                f"{mesh.axis_names}")
+                f"serving mesh must be ('data',) or "
+                f"('data', 'model'), got {mesh.axis_names}")
         self.mesh = mesh
 
     @property
     def n_shards(self) -> int:
         return int(self.mesh.shape["data"])
 
+    @property
+    def n_model(self) -> int:
+        if "model" not in self.mesh.axis_names:
+            return 1
+        return int(self.mesh.shape["model"])
+
     def replicate(self, tree):
-        """Place a pytree fully replicated across the mesh (params)."""
+        """Place a pytree fully replicated across the mesh."""
         return jax.device_put(tree, NamedSharding(self.mesh, P()))
+
+    def place_params(self, cfg: ModelConfig, params):
+        """Place one member's params: replicated over "data", and —
+        when the mesh carries a "model" axis — column-parallel
+        tensor-sharded over it (``sharding.tp.tp_param_specs``; a
+        leaf's spec is all-``None`` on the data axis, so replication
+        over "data" composes for free). Validates divisibility up
+        front so a bad fleet/mesh pairing fails at placement, not
+        mid-trace."""
+        if self.n_model == 1:
+            return self.replicate(params)
+        from repro.sharding import tp_check_cfg, tp_param_specs
+        tp_check_cfg(cfg, self.n_model)
+        specs = tp_param_specs(params)
+        return jax.tree_util.tree_map(
+            lambda leaf, spec: jax.device_put(
+                leaf, NamedSharding(self.mesh, spec)),
+            params, specs)
 
     def shard_rows(self, x):
         """Place an array with its leading axis sharded over "data"."""
@@ -182,7 +214,15 @@ class ShardedPagedKVServer:
                  self.page_size, cfg.num_kv_heads,
                  cfg.resolved_head_dim)
         dt = jnp.dtype(cfg.dtype)
-        sharding = NamedSharding(self.smesh.mesh, P("data"))
+        if self.smesh.n_model > 1:
+            # 2-D mesh: each model column holds only its kv-head
+            # slice of every page — per-device page bytes shrink by
+            # the model-axis size, which is exactly where the
+            # capacity gain of tensor parallelism comes from
+            spec = P("data", None, None, None, "model", None)
+        else:
+            spec = P("data")
+        sharding = NamedSharding(self.smesh.mesh, spec)
         self.k_pages = jax.device_put(jnp.zeros(shape, dt), sharding)
         self.v_pages = jax.device_put(jnp.zeros(shape, dt), sharding)
 

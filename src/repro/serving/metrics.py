@@ -19,6 +19,10 @@ ROUTES_DEGRADED = "acar_routes_degraded_total"
 RECOVERY_ROWS_RESTORED = "acar_recovery_rows_restored_total"
 ROW_DEADLINE_ABORTS = "acar_row_deadline_aborts_total"
 STEP_REQUEUES = "acar_step_requeues_total"
+# Work stealing (sharded step loop): member executions re-placed onto
+# a roomier shard when the home shard's pool is page-tight, labelled
+# {src, dst}.
+SHARD_STEALS = "acar_shard_steals_total"
 
 
 class PromCounters:

@@ -152,11 +152,16 @@ class StepPlanner:
       mid-megastep burn <= K-1 masked steps (accounted in
       ``StepStats.masked_decode_steps``). Sampling keys derive from
       (admission index, per-row step counter), so K is a pure
-      performance knob — any value emits bit-identical streams.
+      performance knob — any value emits bit-identical streams. With
+      ``megastep_auto`` the span is additionally capped by the
+      group's *shortest* remaining budget, so no lane can overrun its
+      budget mid-launch and the masked-step burn from budget
+      exhaustion drops to zero (``--megastep auto`` on the engine).
     """
     chunk_tokens: int = 8
     max_active_rows: int = 8
     megastep: int = 1
+    megastep_auto: bool = False
 
     def __post_init__(self) -> None:
         if self.megastep < 1:

@@ -83,7 +83,7 @@ from repro.serving.kv_pool import (
 from repro.serving.metrics import (
     FAULTS_INJECTED, MEMBER_QUARANTINED, MEMBER_RETRIES, PromCounters,
     RECOVERY_ROWS_RESTORED, ROUTES_DEGRADED, ROW_DEADLINE_ABORTS,
-    STEP_REQUEUES)
+    SHARD_STEALS, STEP_REQUEUES)
 from repro.serving.queue import AdmissionQueue, Request
 from repro.serving.scheduler import StepPlanner
 from repro.teamllm.trace import fault_record
@@ -778,12 +778,21 @@ class StepLoopRunner:
         return groups
 
     def _megastep_span(self, lanes) -> int:
-        """Fused ticks for one decode group: the planner's K, capped
-        by the group's longest remaining budget so no launch runs
-        ticks *every* lane would mask. Every grouped lane is live
+        """Fused ticks for one decode group. Fixed-K mode caps the
+        planner's K by the group's longest remaining budget so no
+        launch runs ticks *every* lane would mask. Auto mode
+        (``StepPlanner.megastep_auto``) caps by the *shortest*
+        remaining budget instead: no lane can overrun its budget
+        mid-launch, so the masked-step burn from budget exhaustion
+        drops to zero (only early EOS still masks — unknowable before
+        the launch). Any deterministic span emits bit-identical
+        tokens: sampling keys are (row_key, step)-indexed, so K is a
+        pure performance knob. Every grouped lane is live
         (steps < max_new), so the span is always >= 1."""
-        return max(1, min(self.megastep,
-                          max(self.max_new - l.steps for l in lanes)))
+        budgets = [self.max_new - l.steps for l in lanes]
+        cap = min(budgets) if self.planner.megastep_auto \
+            else max(budgets)
+        return max(1, min(self.megastep, cap))
 
     def _replay_megastep(self, lane: _Lane, emits, dones, kl: int,
                          i: int) -> None:
@@ -1216,6 +1225,18 @@ class ShardedStepLoopRunner(StepLoopRunner):
     ``planner.max_active_rows`` is the *per-shard* cap here, so
     aggregate concurrency — and aggregate KV page capacity — scale
     with the mesh (``benchmarks/sharding_bench.py`` gates both).
+
+    On a 2-D ``("data", "model")`` mesh every per-tick launch spans
+    the full mesh: each data shard's program runs tensor-parallel
+    across its model columns (params column-sharded, page kv-heads
+    sharded — ``sharding/tp.py``), while row placement, lane
+    assembly, and all host decisions stay keyed by the data axis
+    alone. The decode tick path stays free of host-side collectives;
+    the model-axis all-gathers live inside the device program.
+    ``tests/harness/simulate.py --mesh2d`` proves (data=2, model=2)
+    bit-identical to single-device for a mixed dense+MoE fleet;
+    ``benchmarks/mesh2d_bench.py`` gates the per-member KV capacity
+    scaling and the MoE compaction win.
     """
 
     def __init__(self, engine, queue: AdmissionQueue,
@@ -1274,7 +1295,10 @@ class ShardedStepLoopRunner(StepLoopRunner):
             srv.set_model_name(zm.name)
             self._sharded[key] = srv
             self._model_by_group[id(srv)] = zm
-            self._params_repl[id(srv)] = self.smesh.replicate(zm.params)
+            # replicated over "data"; on a 2-D mesh additionally
+            # tensor-sharded column-parallel over "model"
+            self._params_repl[id(srv)] = self.smesh.place_params(
+                zm.cfg, zm.params)
         return srv
 
     # -- placement hooks -----------------------------------------------
@@ -1285,7 +1309,44 @@ class ShardedStepLoopRunner(StepLoopRunner):
         from repro.models.transformer import paged_supported
         if not paged_supported(zm.cfg):
             return None
-        return self._sharded_server(zm).shards[row.shard]
+        srv = self._sharded_server(zm)
+        home = row.shard
+        if self._reuse_member(zm, row):
+            # COW reuse seeds from the row's probe pages: shard-bound
+            return srv.shards[home]
+        # work stealing for escalation skew: a fresh (non-reuse)
+        # member execution has no page affinity — its prompt prefills
+        # into whatever pool hosts it and its tokens are keyed by
+        # global admission index, so re-placing it moves bytes, never
+        # math. When the home shard's pool cannot hold the full
+        # execution (prompt + decode tail) and another healthy shard
+        # can, steal to the freest such shard (lowest index breaks
+        # ties) — deterministic, since free-page counts are a pure
+        # function of the admission-ordered allocation history.
+        ps, n_shared, nbp, nb, n_tail = self._geometry(row.s)
+        need = nbp + n_tail
+        home_ok = (home not in self._lost
+                   and srv.shards[home].pool is not None
+                   and srv.shards[home].pool.free_pages >= need)
+        if home_ok:
+            return srv.shards[home]
+        best = None
+        for k, sv in enumerate(srv.shards):
+            if k == home or k in self._lost or sv.pool is None:
+                continue
+            f = sv.pool.free_pages
+            if f >= need and (best is None or f > best[0]):
+                best = (f, k)
+        if best is None:
+            return srv.shards[home]    # no roomier shard: retry path
+        # metrics only, never the trace: steal placement is
+        # sharded-only bookkeeping, and the artifact chain must stay
+        # bit-identical to the single-device run
+        self.metrics.inc(SHARD_STEALS, src=str(home),
+                         dst=str(best[1]),
+                         help="member executions stolen to a roomier "
+                              "shard")
+        return srv.shards[best[1]]
 
     def _reuse_member(self, zm, row: _Row) -> bool:
         eng = self.eng
@@ -1581,10 +1642,17 @@ class ShardedStepLoopRunner(StepLoopRunner):
         # already resident; prefix-cache hits seeded on another shard
         # transfer point-to-point), and the pieces form the
         # P("data")-sharded global array the launch expects — no
-        # cross-device gathers, no collective per lane
+        # cross-device gathers, no collective per lane. On a 2-D mesh
+        # the spec is still P("data") — logits replicate over "model"
+        # — so every model column of a data row needs its own
+        # single-device copy of that row's piece (a point-to-point
+        # broadcast, still no collective and no host round-trip).
         import jax
         from jax.sharding import NamedSharding, PartitionSpec
-        mesh_devs = list(self.smesh.mesh.devices.flat)
+        mesh_devs = self.smesh.mesh.devices
+        if mesh_devs.ndim == 1:
+            mesh_devs = mesh_devs.reshape(-1, 1)
+        nm = mesh_devs.shape[1]
         pieces = []
         for k in range(nsh):
             scratch = parent.shards[k]._scratch[:nb]
@@ -1593,7 +1661,7 @@ class ShardedStepLoopRunner(StepLoopRunner):
                 if i < len(per[k]):
                     row, lane = per[k][i]
                     rows_k.append(
-                        jax.device_put(lane.logits, mesh_devs[k]))
+                        jax.device_put(lane.logits, mesh_devs[k, 0]))
                     tables[k, i] = lane.block_table
                     pos[k, i] = cache_len - self.max_new + lane.steps
                     keys[k, i] = lane.row_key
@@ -1604,9 +1672,12 @@ class ShardedStepLoopRunner(StepLoopRunner):
                     live_total += 1
                 else:
                     rows_k.append(
-                        jax.device_put(filler, mesh_devs[k]))
+                        jax.device_put(filler, mesh_devs[k, 0]))
                     tables[k, i] = scratch
-            pieces.append(jnp.stack(rows_k)[None])
+            piece = jnp.stack(rows_k)[None]
+            pieces.append(piece)
+            for j in range(1, nm):
+                pieces.append(jax.device_put(piece, mesh_devs[k, j]))
         logits = jax.make_array_from_single_device_arrays(
             (nsh, bucket, int(filler.shape[-1])),
             NamedSharding(self.smesh.mesh, PartitionSpec("data")),

@@ -1,0 +1,129 @@
+"""Bit-exact tensor parallelism for the serving mesh's "model" axis.
+
+The sharded serving programs must stay *bit-identical* to single-device
+execution (the harness proves record hashes + artifact-chain heads
+equal), which rules out the textbook row-parallel scheme: ``psum`` over
+a sharded contraction reorders the float reduction. Instead every
+matmul whose *output* axis is sharded (wq -> heads, wk/wv -> kv_heads,
+w_gate/w_up -> ff / expert_ff, lm_head -> vocab) runs column-parallel,
+and before any contraction *over* a sharded axis the activation is
+``all_gather``'d (tiled) back to full length — an all-gather is pure
+concatenation in mesh-axis order, matching the contiguous column slices
+of the weight, so every contraction sees the exact full-length operands
+the single-device program does. Contracted-input weights (wo, w_down,
+router, shared experts, norms, embeddings) stay replicated.
+
+Model code calls ``tp_all_gather`` at each gather point; outside a
+``tp_context`` it is a no-op, so the single-device and 1-D ("data",)
+paths trace byte-identical programs. The context is entered at
+*trace time* inside the ``shard_map`` bodies of the sharded sampler
+programs (``sampling/sampler.py``), which also swap in ``tp_local_cfg``
+so cfg-derived reshape dims (num_heads, num_kv_heads) match the local
+parameter slices.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Weights sharded over "model" on their LAST (output) axis; everything
+# else is replicated. Keyed on the leaf name in the param pytree —
+# logical axis names can't express the column/row distinction (wq and
+# wo both carry "heads").
+_COL_PARALLEL = frozenset({"wq", "wk", "wv", "w_gate", "w_up",
+                           "lm_head"})
+
+
+class _Tp(threading.local):
+    def __init__(self):
+        self.axis: Optional[str] = None
+        self.size: int = 1
+
+
+_CTX = _Tp()
+
+
+@contextlib.contextmanager
+def tp_context(axis: str, size: int):
+    """Activate tensor parallelism for model code traced inside."""
+    prev = (_CTX.axis, _CTX.size)
+    _CTX.axis, _CTX.size = axis, int(size)
+    try:
+        yield
+    finally:
+        _CTX.axis, _CTX.size = prev
+
+
+def tp_active() -> bool:
+    return _CTX.axis is not None
+
+
+def tp_size() -> int:
+    return _CTX.size if _CTX.axis is not None else 1
+
+
+def tp_all_gather(x: jax.Array) -> jax.Array:
+    """Gather a model-sharded last axis back to full length (no-op
+    outside a tp context). ``tiled=True`` concatenates the per-device
+    slices in mesh-axis order — exactly the column order of the
+    sharded weight that produced them — so the result is bit-identical
+    to the unsharded activation."""
+    if _CTX.axis is None:
+        return x
+    return jax.lax.all_gather(x, _CTX.axis, axis=x.ndim - 1, tiled=True)
+
+
+def tp_local_cfg(cfg, m: int):
+    """Config whose head counts describe one model shard's param
+    slice, for the reshapes inside attention. Head dim is pinned so
+    halving num_heads cannot silently change ``resolved_head_dim``."""
+    if m <= 1:
+        return cfg
+    if cfg.num_heads % m or cfg.num_kv_heads % m:
+        raise ValueError(
+            f"config {cfg.name!r}: num_heads={cfg.num_heads} / "
+            f"num_kv_heads={cfg.num_kv_heads} not divisible by "
+            f"model={m}")
+    return cfg.replace(num_heads=cfg.num_heads // m,
+                       num_kv_heads=cfg.num_kv_heads // m,
+                       head_dim=cfg.resolved_head_dim)
+
+
+def tp_param_specs(params, axis: str = "model"):
+    """Per-leaf PartitionSpec tree for the bit-exact column-parallel
+    layout: ``_COL_PARALLEL`` leaves shard their last axis over
+    ``axis`` (leading axes — including a stacked "layers" axis — stay
+    unsharded); every other leaf is fully replicated."""
+
+    def spec(path, leaf):
+        key = path[-1]
+        name = getattr(key, "key", None) or str(key)
+        if name in _COL_PARALLEL:
+            return P(*((None,) * (leaf.ndim - 1) + (axis,)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def tp_check_cfg(cfg, m: int) -> None:
+    """Raise early (at placement, not trace) when a config cannot run
+    bit-exact column-parallel at model=m."""
+    if m <= 1:
+        return
+    tp_local_cfg(cfg, m)  # head divisibility
+    if cfg.d_ff % m:
+        raise ValueError(
+            f"config {cfg.name!r}: d_ff={cfg.d_ff} not divisible by "
+            f"model={m}")
+    if cfg.moe is not None and cfg.moe.d_ff_expert % m:
+        raise ValueError(
+            f"config {cfg.name!r}: d_ff_expert={cfg.moe.d_ff_expert} "
+            f"not divisible by model={m}")
+    if not cfg.tie_embeddings and cfg.vocab_size % m:
+        raise ValueError(
+            f"config {cfg.name!r}: untied vocab_size={cfg.vocab_size} "
+            f"not divisible by model={m}")

@@ -81,6 +81,10 @@ class strategies:
     def tuples(*parts: Strategy) -> Strategy:
         return _Tuples(parts)
 
+    @staticmethod
+    def booleans() -> Strategy:
+        return _SampledFrom([False, True])
+
 
 def given(*strats: Strategy) -> Callable:
     """Run the wrapped test over a seeded sweep of examples.

@@ -1,0 +1,228 @@
+"""Bitwise batch-invariance of the blocked MLP/MoE math.
+
+XLA's CPU backend picks dot tilings *per shape*: a token's projection
+bits can depend on how many other tokens share the GEMM and on how many
+output columns the local tensor-parallel shard computes. The serving
+engine's compaction contract ("a row's bits never change when the rows
+around it do") and the 2-D mesh's bit-equivalence contract ("model=m
+column-parallel execution is bit-identical to single-device") both die
+if that leaks into the model math.
+
+``models.blocking`` fixes both by running every row-parallel projection
+over fixed-shape (TOKEN_BLOCK, d) row blocks: one static shape -> one
+kernel -> one reduction order. These tests pin the two properties the
+scheme rests on, at the exact shapes the serving configs use:
+
+* fixed-shape invariance: at the block shape, an output row's bits
+  depend only on its own input row (zero-padding and neighbour content
+  are invisible), so blocked composition over any batch split is exact;
+* column-split exactness: at the block shape, a projection computed as
+  the concatenation of column slices (the tensor-parallel layout, with
+  its all-gather-then-contract epilogue) is bit-identical to the full
+  projection, for every projection width the serving configs produce.
+
+Plus the ref-oracle contract for the MoE expert FFN: the gather path's
+``_expert_swiglu`` routes through ``ops.fused_swiglu``, which must be
+bit-identical to ``kernels.ref.fused_swiglu_ref`` off-TPU and allclose
+to the plain unblocked einsum math.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                    # pragma: no cover
+    from _propshim import given, settings
+    from _propshim import strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.configs.registry import get_config
+from repro.kernels import ref
+from repro.models import moe as moe_mod
+from repro.models import transformer as T
+from repro.models.blocking import TOKEN_BLOCK, blocked_rows
+from repro.models.layers import swiglu_mlp
+
+D = 192          # serving configs' d_model (smollm reduced)
+
+
+def _bits_equal(a, b):
+    return np.array_equal(np.asarray(a).view(np.uint8),
+                          np.asarray(b).view(np.uint8))
+
+
+def _rng_mats(seed, *shapes):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal(s).astype(np.float32))
+            for s in shapes]
+
+
+# ----------------------------------------------------------------------
+# blocked_rows mechanics
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("t", [1, 7, 8, 9, 16, 23])
+def test_blocked_rows_restores_shape_and_tail(t):
+    x, w = _rng_mats(0, (t, D), (D, 64))
+    y = blocked_rows(lambda xb: jnp.einsum("td,df->tf", xb, w), x)
+    assert y.shape == (t, 64)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_blocked_rows_zero_pad_invisible():
+    """A short tail block's rows must not see the zero padding: the
+    same rows embedded in a full block of other (non-zero) rows come
+    out bit-identical."""
+    x, filler, w = _rng_mats(1, (3, D), (5, D), (D, 512))
+    fn = lambda xb: jnp.einsum("td,df->tf", xb, w)
+    short = blocked_rows(fn, x)                       # padded with zeros
+    full = blocked_rows(fn, jnp.concatenate([x, filler]))[:3]
+    assert _bits_equal(short, full)
+
+
+# ----------------------------------------------------------------------
+# column-split exactness at the fixed block shape
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("f", [512, 256, 64, 32])
+@pytest.mark.parametrize("m", [2, 4])
+def test_colsplit_exact_at_block_shape(f, m):
+    """(TOKEN_BLOCK, D) x (D, f) as m concatenated column slices ==
+    the full projection, bit for bit. These are exactly the per-shard
+    GEMMs the column-parallel tensor layout runs (f covers d_ff,
+    d_ff_expert, q-proj and kv-proj widths of the serving configs)."""
+    if f % m:
+        pytest.skip("width not divisible")
+    x, w = _rng_mats(f * 31 + m, (TOKEN_BLOCK, D), (D, f))
+    full = jnp.einsum("td,df->tf", x, w)
+    fl = f // m
+    parts = [jnp.einsum("td,df->tf", x, w[:, j * fl:(j + 1) * fl])
+             for j in range(m)]
+    assert _bits_equal(full, jnp.concatenate(parts, axis=1))
+
+
+def test_swiglu_tp_simulation_bitwise():
+    """End-to-end: swiglu_mlp computed the way a model=2 shard pair
+    does (local column slices of w_gate/w_up, concat standing in for
+    the tiled all-gather, full-length down-projection) is bit-identical
+    to the unsharded path."""
+    x, wg, wu, wd = _rng_mats(7, (13, D), (D, 512), (D, 512), (512, D))
+    params = {"w_gate": wg, "w_up": wu, "w_down": wd}
+    want = swiglu_mlp(params, x)
+
+    def shard_blk(xb):
+        hs = []
+        for j in range(2):
+            sl = slice(j * 256, (j + 1) * 256)
+            g = jnp.einsum("td,df->tf", xb, wg[:, sl])
+            u = jnp.einsum("td,df->tf", xb, wu[:, sl])
+            hs.append(jax.nn.silu(g.astype(jnp.float32)
+                                  ).astype(xb.dtype) * u)
+        h = jnp.concatenate(hs, axis=-1)
+        return jnp.einsum("tf,fd->td", h, wd)
+
+    got = blocked_rows(shard_blk, x)
+    assert _bits_equal(want, got)
+
+
+# ----------------------------------------------------------------------
+# batch-composition / permutation invariance (property)
+# ----------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 40), st.lists(st.integers(1, 39), max_size=3),
+       st.integers(0, 2 ** 31 - 1))
+def test_swiglu_batch_composition_invariant(t, cuts, seed):
+    """Splitting a token batch at arbitrary points and running each
+    piece separately reproduces the full run bit for bit — block
+    membership shifts, the bits must not."""
+    x, wg, wu, wd = _rng_mats(seed, (t, D), (D, 512), (D, 512), (512, D))
+    params = {"w_gate": wg, "w_up": wu, "w_down": wd}
+    full = swiglu_mlp(params, x)
+    bounds = sorted({c % t for c in cuts} | {0, t})
+    pieces = [swiglu_mlp(params, x[a:b])
+              for a, b in zip(bounds, bounds[1:])]
+    assert _bits_equal(full, jnp.concatenate(pieces))
+
+
+def _gather_moe_setup(seed, t):
+    mcfg = MoEConfig(num_experts=4, top_k=2, d_ff_expert=256,
+                     impl="gather", first_moe_layer=0)
+    cfg = get_config("smollm-135m", reduced=True).replace(
+        dtype="float32", moe=mcfg)
+    x, router, wg, wu, wd = _rng_mats(
+        seed, (t, D), (D, 4), (4, D, 256), (4, D, 256), (4, 256, D))
+    p = {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}
+    return cfg, p, x
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 24), st.lists(st.integers(1, 23), max_size=2),
+       st.integers(0, 2 ** 31 - 1))
+def test_moe_gather_batch_composition_invariant(t, cuts, seed):
+    """Capacity-free gather MoE: a token's output bits are independent
+    of which other tokens share the batch (the property that lifts the
+    MoE exclusion from compacted serving)."""
+    cfg, p, x = _gather_moe_setup(seed, t)
+    full, _ = moe_mod.moe_ffn_gather(cfg, p, x[None])
+    bounds = sorted({c % t for c in cuts} | {0, t})
+    pieces = [moe_mod.moe_ffn_gather(cfg, p, x[a:b][None])[0][0]
+              for a, b in zip(bounds, bounds[1:])]
+    assert _bits_equal(full[0], jnp.concatenate(pieces))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 2 ** 31 - 1))
+def test_moe_gather_permutation_invariant(t, seed):
+    cfg, p, x = _gather_moe_setup(seed, t)
+    perm = np.random.default_rng(seed ^ 0x5bd1e995).permutation(t)
+    y, _ = moe_mod.moe_ffn_gather(cfg, p, x[None])
+    yp, _ = moe_mod.moe_ffn_gather(cfg, p, x[perm][None])
+    assert _bits_equal(y[0][perm], yp[0])
+
+
+def test_moe_gather_decode_matches_isolated_rows():
+    """The decode path (``mlp_apply_token`` -> gather MoE) is the same
+    bit-contract: a token decoded inside a batch of 7 equals the same
+    token decoded alone."""
+    cfg, p, x = _gather_moe_setup(11, 7)
+    batch = T.mlp_apply_token(cfg, p, x)
+    solo = jnp.concatenate(
+        [T.mlp_apply_token(cfg, p, x[i:i + 1]) for i in range(7)])
+    assert _bits_equal(batch, solo)
+
+
+# ----------------------------------------------------------------------
+# MoE expert FFN <-> fused-SwiGLU ref oracle (kernel routing contract)
+# ----------------------------------------------------------------------
+def test_expert_swiglu_matches_fused_swiglu_ref():
+    """Off-TPU the gather path's expert FFN must route through
+    ``ops.fused_swiglu``'s jnp oracle: blocked ``fused_swiglu_ref``
+    bit-identical, plain unblocked einsum math allclose."""
+    xt, wg, wu, wd = _rng_mats(3, (19, D), (D, 256), (D, 256), (256, D))
+    got = moe_mod._expert_swiglu(xt, wg, wu, wd)
+    oracle = blocked_rows(
+        lambda xb: ref.fused_swiglu_ref(xb, wg, wu, wd), xt)
+    assert _bits_equal(got, oracle)
+    plain = ref.fused_swiglu_ref(xt, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(plain),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gather_moe_routes_experts_through_fused_swiglu(monkeypatch):
+    """The expert FFN actually goes through ``ops.fused_swiglu`` (the
+    Pallas kernel on TPU): count calls."""
+    from repro.kernels import ops
+    calls = []
+    real = ops.fused_swiglu
+
+    def spy(x, wg, wu, wd, **kw):
+        calls.append(x.shape)
+        return real(x, wg, wu, wd, **kw)
+
+    monkeypatch.setattr(ops, "fused_swiglu", spy)
+    cfg, p, x = _gather_moe_setup(5, 6)
+    with jax.disable_jit():
+        moe_mod.moe_ffn_gather(cfg, p, x[None])
+    assert calls, "expert FFN did not route through ops.fused_swiglu"
+    assert all(s == (TOKEN_BLOCK, D) for s in calls), calls

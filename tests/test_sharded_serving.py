@@ -78,7 +78,8 @@ def test_place_shard_matches_may_admit():
 # per-shard pool invariants under shard-local free lists
 # ----------------------------------------------------------------------
 def _host_only_sharded_server(n_shards=4, num_pages=24,
-                              scratch_pages=2, page_size=4):
+                              scratch_pages=2, page_size=4,
+                              n_model=1):
     """ShardedPagedKVServer host state without device arrays: the
     shard-local pools, scratch regions and prefix caches are all the
     invariants care about."""
@@ -89,7 +90,8 @@ def _host_only_sharded_server(n_shards=4, num_pages=24,
         dtype="float32", tie_embeddings=True)
     srv = ShardedPagedKVServer.__new__(ShardedPagedKVServer)
     srv.cfg = cfg
-    srv.smesh = types.SimpleNamespace(n_shards=n_shards)
+    srv.smesh = types.SimpleNamespace(n_shards=n_shards,
+                                      n_model=n_model)
     srv.page_size = page_size
     srv.k_pages = srv.v_pages = None
     from repro.serving.mesh import _ShardView
@@ -156,6 +158,60 @@ def test_shard_pools_are_independent():
     srv.shards[0].pool.release(a)
     assert srv.shards[1].pool.pages_in_use == 8
     srv.shards[1].pool.release(b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 4), st.booleans()),
+                min_size=1, max_size=60),
+       st.integers(0, 2 ** 31 - 1))
+def test_2d_placement_preserves_shard_pool_invariants(traffic, seed):
+    """Admission-stream placement over a 2-D (data=4, model=2) host
+    server: rows land on the shard ``StepPlanner.place_shard`` picks
+    and allocate pages from that shard's pool only. At every step each
+    data shard's accounting equals its own live footprint, and the
+    model axis is invisible to host-side page accounting — the model
+    columns slice kv-heads *within* a page, never the page pool — so
+    an identically-driven 1-D server produces the same placements and
+    the same per-shard counters."""
+    rng = np.random.default_rng(seed)
+    planner = StepPlanner(max_active_rows=8)
+    srv2d = _host_only_sharded_server(num_pages=16, n_model=2)
+    srv1d = _host_only_sharded_server(num_pages=16, n_model=1)
+    live = [[] for _ in range(4)]            # (alloc_2d, alloc_1d)
+    active = [0, 0, 0, 0]
+    placements = []
+    for need, retire in traffic:
+        if retire and any(live):
+            k = max(range(4), key=lambda i: len(live[i]))
+            a2, a1 = live[k].pop(rng.integers(len(live[k])))
+            srv2d.shards[k].pool.release(a2)
+            srv1d.shards[k].pool.release(a1)
+            active[k] -= 1
+            continue
+        free = [sv.pool.free_pages for sv in srv2d.shards]
+        assert free == [sv.pool.free_pages for sv in srv1d.shards]
+        k = planner.place_shard(active, free, [0] * 4, need)
+        placements.append(k)
+        if k is None:
+            continue
+        live[k].append((srv2d.shards[k].pool.alloc(need),
+                        srv1d.shards[k].pool.alloc(need)))
+        active[k] += 1
+        for i in range(4):
+            footprint = srv2d.shards[i]._scratch.size \
+                + sum(a.size for a, _ in live[i])
+            assert srv2d.shards[i].pool.pages_in_use == footprint
+            assert srv1d.shards[i].pool.pages_in_use == footprint
+    # placement is a pure function of the accounting stream: replaying
+    # the same decisions against the 1-D server's view picked the same
+    # shards (checked inline via the free-list equality above), and the
+    # 2-D server still rebuilds once drained
+    for k in range(4):
+        for a2, a1 in live[k]:
+            srv2d.shards[k].pool.release(a2)
+            srv1d.shards[k].pool.release(a1)
+    srv2d._rebuild_host(32, 2, key=(2, 2, 2, 2))
+    assert all(sv.pool.num_pages == 32 for sv in srv2d.shards)
 
 
 # ----------------------------------------------------------------------
