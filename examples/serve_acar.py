@@ -19,9 +19,17 @@ the step loop fuses up to K decode ticks into one device-resident
 launch (lane logits never touch the host between ticks) — again
 bit-identical answers, just fewer launches and host round-trips.
 
+Fleet selection uses registry arch names with optional page-layout
+variant suffixes (``arch:quant`` int8 KV pages, ``arch:swaN`` ring
+pages); ``--hetero-fleet`` serves the paper's headline mix (Mamba
+probe + quant and sliding-window members + a full-attention arena
+member) through the stepped engine's heterogeneous page layouts.
+
     PYTHONPATH=src python examples/serve_acar.py [--tasks 32]
         [--train-steps 300] [--scheduler | --step-loop | --shards 4]
         [--megastep 16] [--batch-size 8]
+        [--probe ARCH[:quant|:swaN]] [--ensemble SPEC ...]
+        [--hetero-fleet]
 """
 import argparse
 
@@ -34,6 +42,9 @@ if __name__ == "__main__":
     ap.add_argument("--shards", type=int, default=None)
     ap.add_argument("--megastep", type=int, default=1)
     ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--probe", default=None)
+    ap.add_argument("--ensemble", nargs="+", default=None)
+    ap.add_argument("--hetero-fleet", action="store_true")
     args = ap.parse_args()
     if args.shards:
         # must happen before the first jax backend init (merges into
@@ -52,4 +63,10 @@ if __name__ == "__main__":
         argv.extend(["--shards", str(args.shards)])
     if args.megastep != 1:
         argv.extend(["--megastep", str(args.megastep)])
+    if args.probe:
+        argv.extend(["--probe", args.probe])
+    if args.ensemble:
+        argv.extend(["--ensemble"] + args.ensemble)
+    if args.hetero_fleet:
+        argv.append("--hetero-fleet")
     serve_main(argv)

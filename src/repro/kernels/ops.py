@@ -16,6 +16,7 @@ from repro.kernels import decode_attention as _da
 from repro.kernels import decode_attention_quant as _daq
 from repro.kernels import fused_swiglu as _fs
 from repro.kernels import paged_decode_attention as _pda
+from repro.kernels import paged_decode_attention_quant as _pdaq
 from repro.kernels import rglru_scan as _rg
 from repro.kernels import ref
 from repro.kernels import selective_scan as _ss
@@ -55,6 +56,18 @@ def chunked_prefill_attention(q, k_pages, v_pages, block_table,
     return _cpa.chunked_prefill_attention(
         q, k_pages, v_pages, block_table, q_positions,
         prompt_len=prompt_len, interpret=bool(interpret))
+
+
+def paged_decode_attention_quant(q, k_pages, k_scale_pages, v_pages,
+                                 v_scale_pages, block_table, lengths,
+                                 *, interpret: Optional[bool] = None):
+    if interpret is None and not _on_tpu():
+        return ref.paged_decode_attention_quant_ref(
+            q, k_pages, k_scale_pages, v_pages, v_scale_pages,
+            block_table, lengths)
+    return _pdaq.paged_decode_attention_quant(
+        q, k_pages, k_scale_pages, v_pages, v_scale_pages,
+        block_table, lengths, interpret=bool(interpret))
 
 
 def decode_attention_quant(q, k_codes, k_scale, v_codes, v_scale,

@@ -67,6 +67,47 @@ def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
     return out.reshape(b, h, v_cache.shape[-1]).astype(q.dtype)
 
 
+def paged_decode_attention_quant_ref(q: jax.Array, k_pages: jax.Array,
+                                     k_scale_pages: jax.Array,
+                                     v_pages: jax.Array,
+                                     v_scale_pages: jax.Array,
+                                     block_table: jax.Array,
+                                     lengths: jax.Array) -> jax.Array:
+    """Single-token GQA decode over int8-quantised paged KV.
+
+    q: (B, H, Dk); k_pages/v_pages: (P, page_size, KV, Dk/Dv) int8
+    codes; k_scale_pages/v_scale_pages: (P, page_size, KV) f32
+    per-vector scales; block_table: (B, NB) int32 page ids; lengths:
+    (B,) int32 valid positions per row. Scales fold into the
+    attention math exactly as in
+    ``models.attention.decode_attention_quant``:
+        scores_s = (q . k_codes_s) * k_scale_s
+        out      = sum_s (p_s * v_scale_s) * v_codes_s
+    Math in f32; returns (B, H, Dv).
+    """
+    b, h, dk = q.shape
+    page_size, kv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_table.shape[1]
+    g = h // kv
+    k_cache = k_pages[block_table].reshape(b, nb * page_size, kv, dk)
+    v_cache = v_pages[block_table].reshape(b, nb * page_size, kv,
+                                           v_pages.shape[-1])
+    k_scale = k_scale_pages[block_table].reshape(b, nb * page_size, kv)
+    v_scale = v_scale_pages[block_table].reshape(b, nb * page_size, kv)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dk))
+    qr = q.reshape(b, kv, g, dk).astype(jnp.float32) * scale
+    scores = jnp.einsum("bkgd,bskd->bkgs", qr,
+                        k_cache.astype(jnp.float32))
+    scores = scores * k_scale.transpose(0, 2, 1)[:, :, None, :]
+    valid = jnp.arange(nb * page_size)[None] < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    pv = probs * v_scale.transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum("bkgs,bskd->bkgd", pv,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, h, v_cache.shape[-1]).astype(q.dtype)
+
+
 def chunked_prefill_attention_ref(q: jax.Array, k_pages: jax.Array,
                                   v_pages: jax.Array,
                                   block_table: jax.Array,

@@ -8,6 +8,17 @@ distribution, and ensemble calls saved.
 
     PYTHONPATH=src python -m repro.launch.serve --tasks 32 \
         --train-steps 300
+
+Fleet members are registry arch names, optionally with a page-layout
+variant suffix: ``arch:quant`` serves from int8-quantised KV pages,
+``arch:swaN`` serves with an N-token sliding window (ring pages in
+the stepped engine). Variants share the base arch's training — the
+cache layout only changes how the member serves. ``--hetero-fleet``
+is the paper's headline mix in one flag (Mamba probe, quant + SWA
+members, a full-attention arena member):
+
+    PYTHONPATH=src python -m repro.launch.serve --hetero-fleet \
+        --step-loop --tasks 32
 """
 from __future__ import annotations
 
@@ -29,26 +40,55 @@ from repro.serving import BatchedACAREngine, ZooModel
 
 DEFAULT_PROBE = "smollm-135m"
 DEFAULT_ENSEMBLE = ("llama3-8b", "deepseek-7b", "recurrentgemma-2b")
+# the paper's headline heterogeneous mix: a cheap recurrent probe, a
+# quant-KV member and a sliding-window member beside a full-attention
+# arena member — all four page layouts in one stepped fleet
+HETERO_PROBE = "falcon-mamba-7b"
+HETERO_ENSEMBLE = ("smollm-135m:quant", "smollm-135m:swa16",
+                   "llama3-8b")
+
+
+def parse_member(spec: str):
+    """``arch[:quant|:swaN]`` -> (base arch, cfg variant applier).
+
+    The variant changes the member's serving cache layout only (int8
+    KV pages / ring pages); training always runs on the base arch."""
+    arch, _, var = spec.partition(":")
+    if arch not in ARCH_IDS:
+        raise SystemExit(
+            f"unknown arch {arch!r} (choose from {sorted(ARCH_IDS)})")
+    if not var:
+        return arch, lambda cfg: cfg
+    if var == "quant":
+        return arch, lambda cfg: cfg.replace(kv_quant=True)
+    if var.startswith("swa"):
+        window = int(var[3:] or 16)
+        return arch, lambda cfg: cfg.replace(window=window)
+    raise SystemExit(
+        f"unknown member variant {spec!r} "
+        "(use arch, arch:quant, or arch:swaN)")
 
 
 def build_zoo(archs: Sequence[str], train_steps: int, seed: int = 0,
               ckpts: Optional[Dict[str, str]] = None,
               verbose: bool = True) -> List[ZooModel]:
-    """Train (or restore) reduced arithmetic models for each arch."""
+    """Train (or restore) reduced arithmetic models for each member
+    spec (``arch`` or ``arch:variant``)."""
     zoo = []
-    for i, arch in enumerate(archs):
-        cfg = reduced_for_data(arch, "arithmetic")
-        if ckpts and arch in ckpts:
+    for i, spec in enumerate(archs):
+        arch, variant = parse_member(spec)
+        cfg = variant(reduced_for_data(arch, "arithmetic"))
+        if ckpts and spec in ckpts:
             template = params_lib.init_params(
                 cfg, jax.random.PRNGKey(seed + i))
-            prm = restore_checkpoint(ckpts[arch], template)
+            prm = restore_checkpoint(ckpts[spec], template)
         else:
             if verbose:
-                print(f"-- training {arch} ({train_steps} steps)")
+                print(f"-- training {spec} ({train_steps} steps)")
             _, prm, _ = train(arch=arch, data="arithmetic",
                               steps=train_steps, batch=64, seq=24,
                               lr=2e-3, seed=seed + i, verbose=False)
-        zoo.append(ZooModel(name=arch, cfg=cfg, params=prm))
+        zoo.append(ZooModel(name=spec, cfg=cfg, params=prm))
     return zoo
 
 
@@ -71,6 +111,12 @@ def serve(tasks: Sequence[Task], probe: ZooModel,
     decode ticks into one device launch (bit-identical outputs, fewer
     host round-trips); otherwise the whole suite runs as one batch."""
     engine = BatchedACAREngine(acfg, probe, ensemble)
+    if verbose:
+        from repro.models.transformer import resolve_layout
+        layouts = {m.name: (resolve_layout(m.cfg) or "dense*")
+                   for m in [probe] + list(ensemble)}
+        print("fleet layouts     : " + ", ".join(
+            f"{n}={l}" for n, l in layouts.items()))
     if step_loop or data_shards is not None or megastep > 1:
         from repro.serving.queue import MicroBatchPolicy
         res = engine.run_stepped(
@@ -132,9 +178,19 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tasks", type=int, default=32)
     ap.add_argument("--train-steps", type=int, default=300)
-    ap.add_argument("--probe", default=DEFAULT_PROBE, choices=ARCH_IDS)
+    ap.add_argument("--probe", default=DEFAULT_PROBE,
+                    help="probe member spec: a registry arch name, "
+                         "optionally with a page-layout variant "
+                         "suffix (arch, arch:quant, arch:swaN)")
     ap.add_argument("--ensemble", nargs="+",
-                    default=list(DEFAULT_ENSEMBLE))
+                    default=list(DEFAULT_ENSEMBLE),
+                    help="ensemble member specs (same syntax as "
+                         "--probe)")
+    ap.add_argument("--hetero-fleet", action="store_true",
+                    help="serve the paper's heterogeneous mix "
+                         f"(probe {HETERO_PROBE}, ensemble "
+                         f"{', '.join(HETERO_ENSEMBLE)}) — overrides "
+                         "--probe/--ensemble")
     ap.add_argument("--probe-temperature", type=float, default=0.7)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scheduler", action="store_true",
@@ -158,6 +214,9 @@ def main(argv=None):
                     help="micro-batch size budget for --scheduler")
     args = ap.parse_args(argv)
 
+    if args.hetero_fleet:
+        args.probe = HETERO_PROBE
+        args.ensemble = list(HETERO_ENSEMBLE)
     zoo = build_zoo([args.probe] + list(args.ensemble),
                     args.train_steps, seed=args.seed)
     probe, ensemble = zoo[0], zoo[1:]

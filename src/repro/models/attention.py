@@ -131,12 +131,13 @@ def decode_attention(q, k_cache, v_cache, k_positions, pos) -> jax.Array:
     """Single-token attention against a cache.
 
     q: (B,H,Dk); k_cache: (B,S,KV,Dk); v_cache: (B,S,KV,Dv);
-    k_positions: (S,) int32 — absolute position held in each slot
-    (negative = empty); pos: scalar int32 current position, or (B,)
-    int32 per-row positions (the step-level serving loop decodes mixed
-    batches whose rows sit at different depths; per-row masking is the
-    only difference, so each row's output is bit-identical to the
-    scalar-pos call at that row's position).
+    k_positions: (S,) or (B,S) int32 — absolute position held in each
+    slot (negative = empty; ring pages hold per-row slot contents, so
+    the step loop passes the 2-D form); pos: scalar int32 current
+    position, or (B,) int32 per-row positions (the step-level serving
+    loop decodes mixed batches whose rows sit at different depths;
+    per-row masking is the only difference, so each row's output is
+    bit-identical to the scalar-pos call at that row's position).
     Returns (B,H,Dv).
     """
     b, h, dk = q.shape
@@ -151,13 +152,10 @@ def decode_attention(q, k_cache, v_cache, k_positions, pos) -> jax.Array:
     # cache lengths — see EXPERIMENTS.md SPerf C2).
     scores = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
                         preferred_element_type=jnp.float32)  # (B,KV,G,S)
-    if jnp.ndim(pos) == 0:
-        valid = ((k_positions >= 0)
-                 & (k_positions <= pos))[None, None, None]
-    else:
-        valid = ((k_positions[None] >= 0)
-                 & (k_positions[None] <= pos[:, None]))[:, None, None]
-    scores = jnp.where(valid, scores, _NEG_INF)
+    kp = k_positions if k_positions.ndim == 2 else k_positions[None]
+    p_col = pos[:, None] if jnp.ndim(pos) else pos
+    valid = (kp >= 0) & (kp <= p_col)                    # (1|B, S)
+    scores = jnp.where(valid[:, None, None], scores, _NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", probs.astype(v_cache.dtype),
                      v_cache, preferred_element_type=jnp.float32)
@@ -178,7 +176,11 @@ def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """
     xf = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf), axis=-1)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
+    # constant-reciprocal multiply, not divide: XLA rewrites /127 to
+    # *(1/127) only in some fusion contexts, and the prefill paths
+    # quantise in different ones (inside vs outside the layer scan) —
+    # the explicit multiply keeps the stored scales bitwise identical
+    scale = jnp.maximum(amax, 1e-8) * (1.0 / 127.0)
     codes = jnp.clip(jnp.round(xf / scale[..., None]),
                      -127, 127).astype(jnp.int8)
     return codes, scale
@@ -189,7 +191,10 @@ def decode_attention_quant(q, k_codes, k_scale, v_codes, v_scale,
     """decode_attention against an int8 cache.
 
     q: (B,H,Dk); k_codes/v_codes: (B,S,KV,D) int8;
-    k_scale/v_scale: (B,S,KV) f32.
+    k_scale/v_scale: (B,S,KV) f32; k_positions: (S,) int32;
+    pos: scalar int32, or (B,) int32 per-row positions (step-level
+    decode batches mix rows at different depths — per-row masking
+    keeps each row bit-identical to the scalar-pos call).
     """
     b, h, dk = q.shape
     kv = k_codes.shape[2]
@@ -199,8 +204,9 @@ def decode_attention_quant(q, k_codes, k_scale, v_codes, v_scale,
     scores = jnp.einsum("bkgd,bskd->bkgs", qr, k_codes,
                         preferred_element_type=jnp.float32)
     scores = scores * k_scale.transpose(0, 2, 1)[:, :, None, :]
-    valid = (k_positions >= 0) & (k_positions <= pos)
-    scores = jnp.where(valid[None, None, None], scores, _NEG_INF)
+    p_col = pos[:, None] if jnp.ndim(pos) else pos
+    valid = (k_positions[None] >= 0) & (k_positions[None] <= p_col)
+    scores = jnp.where(valid[:, None, None], scores, _NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     # fold the v scales into the probabilities (linearity)
     pv = probs * v_scale.transpose(0, 2, 1)[:, :, None, :]
@@ -304,8 +310,17 @@ def gqa_decode(cfg: ModelConfig, p: dict, x_t: jax.Array, cache: dict,
         v_scale = jax.lax.dynamic_update_slice(
             cache["v_scale"], vs[:, None].astype(
                 cache["v_scale"].dtype), (0, slot, 0))
-        out = decode_attention_quant(q, k_cache, k_scale, v_cache,
-                                     v_scale, k_positions, pos)
+        if cfg.use_pallas and not ring:
+            # TPU deployment: int8 flash-decode kernel — scales fold
+            # in-kernel, HBM reads stay int8. The op's off-TPU
+            # dispatch is the jnp quant path with the same linear
+            # k_positions/pos masking, so CPU bits are unchanged.
+            from repro.kernels import ops
+            out = ops.decode_attention_quant(
+                q, k_cache, k_scale, v_cache, v_scale, pos + 1)
+        else:
+            out = decode_attention_quant(q, k_cache, k_scale, v_cache,
+                                         v_scale, k_positions, pos)
         out = out.reshape(b, cfg.num_heads * hd)
         y = jnp.einsum("bh,hd->bd", out, p["wo"])
         return y, {"k": k_cache, "v": v_cache,
@@ -392,6 +407,154 @@ def gqa_decode_paged(cfg: ModelConfig, p: dict, x_t: jax.Array,
     out = tp_all_gather(out)
     y = jnp.einsum("bh,hd->bd", out, p["wo"])
     return y, k_pages, v_pages
+
+
+def gqa_decode_quant_paged(cfg: ModelConfig, p: dict, x_t: jax.Array,
+                           pages: dict, block_table: jax.Array,
+                           pos: jax.Array, *, cache_len: int
+                           ) -> Tuple[jax.Array, dict]:
+    """Single-token GQA decode against int8-quantised KV pages.
+
+    x_t: (B, d); pages: one layer's slice of the quant pool —
+    {"k","v"}: (P, page_size, KV, Dh) int8 codes, {"k_scale",
+    "v_scale"}: (P, page_size, KV) f32 per-vector scales;
+    block_table: (B, NB) page ids; pos: scalar or (B,) int32;
+    cache_len: static dense-equivalent cache length.
+
+    Bit-equivalence contract: identical to the dense *quant* cache
+    path (``gqa_decode`` with ``k_scale`` in the cache) — the token's
+    K/V quantise through the same ``quantize_kv``, and the gathered
+    page view sliced to ``cache_len`` feeds the same
+    ``decode_attention_quant``. Stale bytes in recycled pages are
+    finite int8 codes x finite f32 scales, masked to the same -1e30
+    the dense path's zero-initialised slots are (probabilities exactly
+    zero either way).
+    """
+    b, _ = x_t.shape
+    hd = cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+    q = jnp.einsum("bd,dh->bh", x_t, p["wq"]).reshape(
+        b, cfg.num_heads, hd)
+    k = jnp.einsum("bd,dh->bh", x_t, p["wk"]).reshape(b, kv, hd)
+    v = jnp.einsum("bd,dh->bh", x_t, p["wv"]).reshape(b, kv, hd)
+    per_row = jnp.ndim(pos) == 1
+    if cfg.use_rope:
+        pos_b = pos[:, None] if per_row else jnp.broadcast_to(
+            pos, (1, 1))
+        q = apply_rope(q[:, None], pos_b, cfg.rope_theta)[:, 0]
+        k = apply_rope(k[:, None], pos_b, cfg.rope_theta)[:, 0]
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+
+    ps = pages["k"].shape[1]
+    if per_row:
+        page_ids = jnp.take_along_axis(
+            block_table, (pos // ps)[:, None], axis=1)[:, 0]  # (B,)
+        slot = pos % ps
+    else:
+        page_ids = jnp.take(block_table, pos // ps, axis=1)
+        slot = pos % ps
+    pages = {
+        "k": pages["k"].at[page_ids, slot].set(kq),
+        "v": pages["v"].at[page_ids, slot].set(vq),
+        "k_scale": pages["k_scale"].at[page_ids, slot].set(
+            ks.astype(pages["k_scale"].dtype)),
+        "v_scale": pages["v_scale"].at[page_ids, slot].set(
+            vs.astype(pages["v_scale"].dtype)),
+    }
+
+    if cfg.use_pallas:
+        # TPU deployment: block-table int8 flash-decode kernel reads
+        # codes + scale planes in place. Off-TPU the op dispatches to
+        # the gather-based oracle.
+        from repro.kernels import ops
+        lengths = jnp.broadcast_to(pos + 1, (b,)).astype(jnp.int32)
+        out = ops.paged_decode_attention_quant(
+            q, pages["k"], pages["k_scale"], pages["v"],
+            pages["v_scale"], block_table, lengths)
+    else:
+        k_cache = pages["k"][block_table].reshape(
+            b, -1, kv, hd)[:, :cache_len]
+        v_cache = pages["v"][block_table].reshape(
+            b, -1, kv, hd)[:, :cache_len]
+        k_scale = pages["k_scale"][block_table].reshape(
+            b, -1, kv)[:, :cache_len]
+        v_scale = pages["v_scale"][block_table].reshape(
+            b, -1, kv)[:, :cache_len]
+        out = decode_attention_quant(q, k_cache, k_scale, v_cache,
+                                     v_scale, jnp.arange(cache_len),
+                                     pos)
+    out = out.reshape(b, cfg.num_heads * hd)
+    # tensor parallelism: gather head-local outputs before the
+    # replicated output projection (see ``gqa_decode_paged``)
+    out = tp_all_gather(out)
+    y = jnp.einsum("bh,hd->bd", out, p["wo"])
+    return y, pages
+
+
+def gqa_decode_ring_paged(cfg: ModelConfig, p: dict, x_t: jax.Array,
+                          pages: dict, block_table: jax.Array,
+                          pos: jax.Array, *, cache_len: int
+                          ) -> Tuple[jax.Array, dict]:
+    """Single-token sliding-window GQA decode against ring pages.
+
+    x_t: (B, d); pages: one layer's {"k","v"} (P, page_size, KV, Dh);
+    block_table: (B, NB) page ids covering exactly
+    ceil(cache_len/page_size) pages (NB never grows past the window);
+    pos: scalar or (B,) int32; cache_len: the ring length —
+    min(prompt + max_new, window), already window-capped by the
+    caller.
+
+    The pages hold the same ring the dense path keeps (slot = absolute
+    position mod cache_len): the token's K/V scatter to each row's
+    current slot, and masking uses the absolute position each slot
+    currently holds — bit-identical per row to ``gqa_decode`` with
+    ``ring=True`` at that row's position. Ring pages are lane-private
+    (forked whole at spawn, never COW-shared), so the in-place slot
+    write is safe.
+    """
+    b, _ = x_t.shape
+    hd = cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+    q = jnp.einsum("bd,dh->bh", x_t, p["wq"]).reshape(
+        b, cfg.num_heads, hd)
+    k = jnp.einsum("bd,dh->bh", x_t, p["wk"]).reshape(b, kv, hd)
+    v = jnp.einsum("bd,dh->bh", x_t, p["wv"]).reshape(b, kv, hd)
+    per_row = jnp.ndim(pos) == 1
+    if cfg.use_rope:
+        pos_b = pos[:, None] if per_row else jnp.broadcast_to(
+            pos, (1, 1))
+        q = apply_rope(q[:, None], pos_b, cfg.rope_theta)[:, 0]
+        k = apply_rope(k[:, None], pos_b, cfg.rope_theta)[:, 0]
+
+    pos_rows = pos if per_row else jnp.broadcast_to(pos, (b,))
+    ps = pages["k"].shape[1]
+    slot = jnp.mod(pos_rows, cache_len)                   # (B,)
+    page_ids = jnp.take_along_axis(
+        block_table, (slot // ps)[:, None], axis=1)[:, 0]
+    offset = slot % ps
+    pages = {
+        "k": pages["k"].at[page_ids, offset].set(
+            k.astype(pages["k"].dtype)),
+        "v": pages["v"].at[page_ids, offset].set(
+            v.astype(pages["v"].dtype)),
+    }
+
+    k_cache = pages["k"][block_table].reshape(
+        b, -1, kv, hd)[:, :cache_len]
+    v_cache = pages["v"][block_table].reshape(
+        b, -1, kv, hd)[:, :cache_len]
+    # absolute position currently held in each ring slot, per row
+    slots = jnp.arange(cache_len)[None]                   # (1, CL)
+    k_positions = pos_rows[:, None] - jnp.mod(
+        pos_rows[:, None] - slots, cache_len)             # (B, CL)
+    out = decode_attention(q, k_cache, v_cache, k_positions, pos_rows)
+    out = out.reshape(b, cfg.num_heads * hd)
+    # tensor parallelism: gather head-local outputs before the
+    # replicated output projection (see ``gqa_decode_paged``)
+    out = tp_all_gather(out)
+    y = jnp.einsum("bh,hd->bd", out, p["wo"])
+    return y, pages
 
 
 def gqa_prefill_chunk_paged(cfg: ModelConfig, p: dict, x: jax.Array,

@@ -526,41 +526,78 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
 # ----------------------------------------------------------------------
 # paged KV-cache path (serving/kv_pool.py page pool + block tables)
 # ----------------------------------------------------------------------
-def paged_supported(cfg: ModelConfig) -> bool:
-    """True when the config can run the paged KV path bit-identically
-    to the dense path: a uniform GQA stack with a linear cache.
-    Sliding-window layers keep O(window) ring buffers (already
-    sub-linear — paging buys nothing), and quantised caches carry
-    scale planes the page layout doesn't model. MoE configs qualify
-    only with the capacity-free ``MoEConfig.impl == "gather"``
+def resolve_layout(cfg: ModelConfig) -> Optional[str]:
+    """Page-pool layout descriptor for ``cfg``, or None when only the
+    dense (contiguous-cache) path can serve it.
+
+    - ``"dense"``: bf16 K/V pages, linear cache, COW tail pages.
+    - ``"quant"``: int8 code pages + per-vector f32 scale planes
+      (``attn.quantize_kv``) — same page/COW geometry as dense at
+      roughly half the bytes per position; bit-identical to the quant
+      *dense* cache, not to bf16.
+    - ``"ring"``: sliding-window layers (``cfg.window``) wrap their
+      pages in place, capping pages-per-row at ceil(window/page).
+    - ``"lanes"``: fixed-size recurrent-state lanes for SSM members —
+      one lane holds a row's conv taps + SSM state, no growth with
+      sequence length.
+
+    A uniform GQA stack is required for the kv layouts; MoE configs
+    qualify only with the capacity-free ``MoEConfig.impl == "gather"``
     dispatch (per-token expert math — batch-composition invariant,
     which the bucketed prefill relies on; the capacity path cumsums
     across rows) and a uniform stack (``first_moe_layer == 0`` — the
-    paged bodies scan ``params["layers"]`` alone).
+    paged bodies scan ``params["layers"]`` alone). Hybrid stacks
+    (recurrentgemma: rglru + SWA layers interleaved) stay on the dense
+    fallback — a per-block ring+lane mix is a ROADMAP follow-up.
     """
+    if cfg.family == "ssm":
+        return "lanes"
     moe_ok = cfg.moe is None or (cfg.moe.impl == "gather"
                                  and cfg.moe.first_moe_layer == 0)
-    return (cfg.family in ("dense", "moe") and cfg.attn_kind == "gqa"
-            and cfg.window is None and not cfg.kv_quant
-            and moe_ok and cfg.frontend is None)
+    if not (cfg.family in ("dense", "moe") and cfg.attn_kind == "gqa"
+            and moe_ok and cfg.frontend is None):
+        return None
+    if cfg.kv_quant:
+        # quantised sliding-window caches would need ring scale planes
+        # too; nothing in the zoo combines them — keep it dense
+        return "quant" if cfg.window is None else None
+    if cfg.window is not None:
+        return "ring"
+    return "dense"
+
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """True when some page layout serves the config bit-identically to
+    its dense reference path (see ``resolve_layout``)."""
+    return resolve_layout(cfg) is not None
 
 
 def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
-                  k_pages: jax.Array, v_pages: jax.Array,
-                  prefill_table: jax.Array, moe_shards: int = 1
-                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                  pages: Dict[str, jax.Array],
+                  prefill_table: jax.Array, moe_shards: int = 1, *,
+                  cache_len: Optional[int] = None
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Prompt prefill that scatters each layer's K/V into pool pages.
 
-    tokens: (B, S); k_pages/v_pages: (L, P, page_size, KV, Dh);
-    prefill_table: (B, NBp) int32 page ids covering ceil(S/page_size)
-    pages per row (rows must not alias writable pages). Returns
-    (last-position logits, updated k_pages, updated v_pages). The
+    tokens: (B, S); pages: the pool's page pytree — every leaf has
+    leading axes (L, P, ...): dense holds {k, v} bf16
+    (L, P, page_size, KV, Dh); quant adds int8 codes plus
+    {k_scale, v_scale} f32 (L, P, page_size, KV) planes; ring is the
+    dense leaf set over ceil(window/page) pages per row.
+    prefill_table: (B, NBp) int32 page ids covering the row's prompt
+    pages (rows must not alias writable pages); cache_len: the
+    dense-equivalent total cache length (prompt + max_new) — required
+    for ring layouts, where the pages hold the min(cache_len, window)
+    ring snapshot. Returns (last-position logits, updated pages). The
     hidden-state math is the dense ``prefill`` bit-for-bit — only the
-    cache packing differs.
+    cache packing differs; quant packing runs the same
+    ``attn.quantize_kv`` the dense quant cache does, so codes and
+    scales match that path bit-for-bit.
     """
-    assert paged_supported(cfg), cfg.name
+    layout = resolve_layout(cfg)
+    assert layout in ("dense", "quant", "ring"), cfg.name
     b, s = tokens.shape
-    ps = k_pages.shape[2]
+    ps = pages["k"].shape[2]
     nbp = prefill_table.shape[1]
     positions = jnp.arange(s)
     x = _embed_inputs(cfg, params, tokens, None)
@@ -584,33 +621,48 @@ def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
     x, (ks, vs) = stack_scan(cfg, body, x, params["layers"],
                              cfg.num_layers)
-    # pack (L, B, S, KV, Dh) into pages: pad S to the page boundary and
+    logits = _logits(cfg, params, x[:, -1])
+
+    if layout == "ring":
+        # compress to the ring snapshot the dense path stores: slot =
+        # absolute position mod cache_len over the surviving window
+        cl = _attn_cache_len(cfg, s if cache_len is None else cache_len)
+        ks = jax.vmap(lambda a: ring_compress(a, cl))(ks)
+        vs = jax.vmap(lambda a: ring_compress(a, cl))(vs)
+
+    entry = {"k": ks, "v": vs}
+    if layout == "quant":
+        kq, ksc = attn.quantize_kv(ks)
+        vq, vsc = attn.quantize_kv(vs)
+        entry = {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc}
+
+    # pack (L, B, S', ...) into pages: pad S' to the page boundary and
     # scatter page-shaped chunks at the block-table ids (pad chunks land
     # in the partial tail page's dead slots, matching the dense cache's
     # zero padding)
     s_pad = nbp * ps
-    if s_pad != s:
-        pad = [(0, 0)] * ks.ndim
-        pad[2] = (0, s_pad - s)
-        ks = jnp.pad(ks, pad)
-        vs = jnp.pad(vs, pad)
-    kv, hd = ks.shape[-2], ks.shape[-1]
-    ks = ks.reshape(cfg.num_layers, b, nbp, ps, kv, hd).astype(
-        k_pages.dtype)
-    vs = vs.reshape(cfg.num_layers, b, nbp, ps, kv, hd).astype(
-        v_pages.dtype)
-    k_pages = k_pages.at[:, prefill_table].set(ks)
-    v_pages = v_pages.at[:, prefill_table].set(vs)
-    return _logits(cfg, params, x[:, -1]), k_pages, v_pages
+
+    def pack(a):
+        if s_pad != a.shape[2]:
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, s_pad - a.shape[2])
+            a = jnp.pad(a, pad)
+        return a.reshape((cfg.num_layers, b, nbp, ps) + a.shape[3:])
+
+    pages = {name: pages[name].at[:, prefill_table].set(
+                 pack(entry[name]).astype(pages[name].dtype))
+             for name in pages}
+    return logits, pages
 
 
 def prefill_chunk_paged(cfg: ModelConfig, params: dict,
-                        tokens: jax.Array, k_pages: jax.Array,
-                        v_pages: jax.Array, block_table: jax.Array,
+                        tokens: jax.Array,
+                        pages: Dict[str, jax.Array],
+                        block_table: jax.Array,
                         start_pos: jax.Array, *, prompt_len: int,
                         moe_shards: int = 1
-                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One chunk of a paged prompt prefill.
+                        ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One chunk of a paged prompt prefill (dense layout only).
 
     tokens: (B, C) — each row's prompt slice covering absolute
     positions [start_pos[b], start_pos[b] + C); start_pos: (B,) int32
@@ -628,8 +680,15 @@ def prefill_chunk_paged(cfg: ModelConfig, params: dict,
     one-shot path writes and always reduces over the full static
     ``prompt_len`` key axis (see ``attn.gqa_prefill_chunk_paged``), so
     no floating-point reduction regroups across chunk boundaries.
+
+    Only the dense layout chunks: a quant chunk would attend the
+    already-quantised int8 prefix where the dense quant reference
+    attends full precision (quantisation only happens *into* the
+    cache); a ring chunk overwrites positions the later chunks still
+    attend; a lane prefill is one sequential scan. Those layouts
+    prefill one-shot (``prefill_paged`` / the sampler's lane prefill).
     """
-    assert paged_supported(cfg), cfg.name
+    assert resolve_layout(cfg) == "dense", cfg.name
     # the one-shot path switches to blockwise online softmax exactly
     # when prompt_len is a multiple of the flash block (attention.py
     # flash_attention); chunked prefill keeps the plain masked softmax
@@ -643,52 +702,88 @@ def prefill_chunk_paged(cfg: ModelConfig, params: dict,
     x = _embed_inputs(cfg, params, tokens, None)
 
     def body(x, xs):
-        lp, kp, vp = xs
+        lp, pg = xs
         h = norm_apply(cfg, lp["attn_norm"], x)
         a, kp, vp = attn.gqa_prefill_chunk_paged(
-            cfg, lp["attn"], h, kp, vp, block_table, start_pos,
-            prompt_len=prompt_len)
+            cfg, lp["attn"], h, pg["k"], pg["v"], block_table,
+            start_pos, prompt_len=prompt_len)
         x = x + a
         h = norm_apply(cfg, lp["mlp_norm"], x)
         y, _ = mlp_apply(cfg, lp["mlp"], h, moe_shards)
-        return x + y, (kp, vp)
+        return x + y, {"k": kp, "v": vp}
 
-    x, (k_pages, v_pages) = stack_scan(
-        cfg, body, x, (params["layers"], k_pages, v_pages),
-        cfg.num_layers)
-    return _logits(cfg, params, x[:, -1]), k_pages, v_pages
+    x, pages = stack_scan(
+        cfg, body, x, (params["layers"], pages), cfg.num_layers)
+    return _logits(cfg, params, x[:, -1]), pages
 
 
 def decode_step_paged(cfg: ModelConfig, params: dict,
-                      k_pages: jax.Array, v_pages: jax.Array,
+                      pages: Dict[str, jax.Array],
                       block_table: jax.Array, token: jax.Array,
                       pos: jax.Array, *, cache_len: int
-                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One decode step over the paged cache. token: (B,) int32;
-    pos: scalar int32, or (B,) int32 per-row positions (the step-level
-    loop advances mixed batches whose rows sit at different depths);
-    cache_len: static dense-equivalent cache length.
-    Writes each layer's K/V at ``pos`` into the row's block-table page
-    and returns (logits, updated k_pages, updated v_pages)."""
-    assert paged_supported(cfg), cfg.name
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step over the paged state, dispatching on the
+    config's layout. token: (B,) int32; pos: scalar int32, or (B,)
+    int32 per-row positions (the step-level loop advances mixed
+    batches whose rows sit at different depths); cache_len: static
+    dense-equivalent cache length (prompt + max_new — ring layouts cap
+    it at the window internally; lanes ignore it and ``pos``: the
+    recurrent state is position free).
+
+    Dense/quant write each layer's K/V (codes + scales) at ``pos``
+    into the row's block-table page; ring writes at
+    ``pos mod min(cache_len, window)``; lanes gather each row's
+    recurrent state at its block-table lane id, run the SSM step, and
+    scatter the new state back. Returns (logits, updated pages)."""
+    layout = resolve_layout(cfg)
+    assert layout is not None, cfg.name
     x = jnp.take(params["embedding"], token, axis=0)
     x = shard(x, "batch", "embed")
 
+    if layout == "lanes":
+        lanes = block_table[:, 0]
+
+        def lane_body(x, xs):
+            lp, pg = xs
+            h = norm_apply(cfg, lp["norm"], x)
+            st = jax.tree.map(lambda a: a[lanes], pg)
+            y, new_st = ssm_mod.mamba_step(cfg, lp["ssm"], h, st)
+            # lane arena dtypes equal the state dtypes mamba emits
+            # (conv: cfg.dtype taps, h: f32), so the scatter is a pure
+            # copy — the gathered state round-trips bit-exactly
+            pg = jax.tree.map(lambda a, ns: a.at[lanes].set(ns),
+                              pg, new_st)
+            return x + y, pg
+
+        x, pages = stack_scan(cfg, lane_body, x,
+                              (params["layers"], pages),
+                              cfg.num_layers)
+        return _logits(cfg, params, x), pages
+
     def body(x, xs):
-        lp, kp, vp = xs
+        lp, pg = xs
         h = norm_apply(cfg, lp["attn_norm"], x)
-        a, kp, vp = attn.gqa_decode_paged(
-            cfg, lp["attn"], h, kp, vp, block_table, pos,
-            cache_len=cache_len)
+        if layout == "quant":
+            a, pg = attn.gqa_decode_quant_paged(
+                cfg, lp["attn"], h, pg, block_table, pos,
+                cache_len=cache_len)
+        elif layout == "ring":
+            a, pg = attn.gqa_decode_ring_paged(
+                cfg, lp["attn"], h, pg, block_table, pos,
+                cache_len=min(cache_len, cfg.window))
+        else:
+            a, kp, vp = attn.gqa_decode_paged(
+                cfg, lp["attn"], h, pg["k"], pg["v"], block_table,
+                pos, cache_len=cache_len)
+            pg = {"k": kp, "v": vp}
         x = x + a
         h = norm_apply(cfg, lp["mlp_norm"], x)
         x = x + mlp_apply_token(cfg, lp["mlp"], h)
-        return x, (kp, vp)
+        return x, pg
 
-    x, (k_pages, v_pages) = stack_scan(
-        cfg, body, x, (params["layers"], k_pages, v_pages),
-        cfg.num_layers)
-    return _logits(cfg, params, x), k_pages, v_pages
+    x, pages = stack_scan(cfg, body, x, (params["layers"], pages),
+                          cfg.num_layers)
+    return _logits(cfg, params, x), pages
 
 
 # ----------------------------------------------------------------------

@@ -3,8 +3,9 @@ from repro.sampling.sampler import (
     decode_megastep_rows_sharded, decode_paged, decode_step_rows,
     decode_step_rows_sharded, decode_text, fork_pages,
     fork_pages_sharded, generate, generate_samples, member_row_keys,
-    prefill_chunk_paged, prefill_chunk_paged_sharded, prefill_paged,
-    probe_row_keys, sample_token, sample_token_rows, tile_cache)
+    prefill_chunk_paged, prefill_chunk_paged_sharded, prefill_lanes,
+    prefill_paged, prefill_paged_sharded, probe_row_keys,
+    sample_token, sample_token_rows, tile_cache)
 
 __all__ = ["GenerateOutput", "batch_invariant",
            "decode_megastep_rows", "decode_megastep_rows_sharded",
@@ -12,6 +13,7 @@ __all__ = ["GenerateOutput", "batch_invariant",
            "decode_step_rows_sharded", "decode_text", "fork_pages",
            "fork_pages_sharded", "generate", "generate_samples",
            "member_row_keys", "prefill_chunk_paged",
-           "prefill_chunk_paged_sharded", "prefill_paged",
+           "prefill_chunk_paged_sharded", "prefill_lanes",
+           "prefill_paged", "prefill_paged_sharded",
            "probe_row_keys", "sample_token", "sample_token_rows",
            "tile_cache"]

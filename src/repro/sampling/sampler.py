@@ -255,30 +255,58 @@ def generate_samples(cfg: ModelConfig, params: dict,
 # paged KV-cache path (serving/kv_pool.py owns allocation; these are
 # the jitted device programs it drives)
 # ----------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("cfg",))
+@functools.partial(jax.jit, static_argnames=("cfg", "cache_len"))
 def prefill_paged(cfg: ModelConfig, params: dict,
-                  prompt_tokens: jax.Array, k_pages: jax.Array,
-                  v_pages: jax.Array, prefill_table: jax.Array):
+                  prompt_tokens: jax.Array, pages,
+                  prefill_table: jax.Array,
+                  cache_len: Optional[int] = None):
     """Prompt prefill scattering K/V into pool pages.
 
-    prompt_tokens: (B, S); k_pages/v_pages: (L, P, page_size, KV, Dh);
-    prefill_table: (B, NBp) int32. Returns (logits0 (B, V), k_pages,
-    v_pages). Logits are bit-identical to the dense ``T.prefill`` —
-    only the cache packing differs."""
-    return T.prefill_paged(cfg, params, prompt_tokens, k_pages,
-                           v_pages, prefill_table)
+    prompt_tokens: (B, S); pages: the pool's page pytree (leaves
+    (L, P, page_size, ...) — dense {k, v}, quant adds the f32
+    {k_scale, v_scale} planes); prefill_table: (B, NBp) int32;
+    cache_len: dense-equivalent total length, required for ring
+    layouts. Returns (logits0 (B, V), pages). Logits are bit-identical
+    to the dense ``T.prefill`` — only the cache packing differs."""
+    return T.prefill_paged(cfg, params, prompt_tokens, pages,
+                           prefill_table, cache_len=cache_len)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def prefill_lanes(cfg: ModelConfig, params: dict,
+                  prompt_tokens: jax.Array, pages,
+                  lane_ids: jax.Array):
+    """Prompt prefill for a recurrent-state (SSM) member, scattering
+    each row's final state into its pool lane.
+
+    prompt_tokens: (B, S); pages: the lane arena pytree (leaves
+    (L, LANES, ...) — the per-layer {conv, h} state with a lane axis
+    where the kv layouts have a page axis); lane_ids: (B,) int32 lane
+    per row. The prefill itself is the dense ``T.prefill`` scan
+    bit-for-bit; only the state parking differs. Returns
+    (logits0 (B, V), pages)."""
+    logits0, cache = T.prefill(cfg, params, prompt_tokens)
+    states = cache["layers"]                  # leaves (L, B, ...)
+    for arena, st in zip(jax.tree.leaves(pages),
+                         jax.tree.leaves(states)):
+        # the scatter must be a pure copy: a dtype cast here would
+        # drift the parked state off the dense reference path
+        assert arena.dtype == st.dtype, (arena.dtype, st.dtype)
+    pages = jax.tree.map(
+        lambda a, st: a.at[:, lane_ids].set(st), pages, states)
+    return logits0, pages
 
 
 @jax.jit
-def fork_pages(k_pages: jax.Array, v_pages: jax.Array,
-               src: jax.Array, dst: jax.Array):
-    """Copy-on-write materialisation: page ``dst[i]`` becomes a private
-    copy of ``src[i]`` across every layer. ``src`` may repeat (one
-    canonical prompt-tail page forked to N samples); ``dst`` must not.
-    """
-    k_pages = k_pages.at[:, dst].set(k_pages[:, src])
-    v_pages = v_pages.at[:, dst].set(v_pages[:, src])
-    return k_pages, v_pages
+def fork_pages(pages, src: jax.Array, dst: jax.Array):
+    """Page/lane fork: index ``dst[i]`` becomes a private copy of
+    ``src[i]`` across every layer and every leaf of the pytree (axis 1
+    is the page axis for dense/quant/ring kv leaves and the lane axis
+    for recurrent-state leaves — one program serves COW tail
+    materialisation, whole-ring forks and lane state copies alike).
+    ``src`` may repeat (one canonical prompt page forked to N
+    samples); ``dst`` must not."""
+    return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), pages)
 
 
 @functools.partial(
@@ -286,38 +314,35 @@ def fork_pages(k_pages: jax.Array, v_pages: jax.Array,
     static_argnames=("cfg", "start_pos", "max_new_tokens",
                      "temperature", "eos_id", "pad_id"))
 def decode_paged(cfg: ModelConfig, params: dict, logits0: jax.Array,
-                 k_pages: jax.Array, v_pages: jax.Array,
-                 block_table: jax.Array, key: jax.Array, *,
+                 pages, block_table: jax.Array, key: jax.Array, *,
                  start_pos: int, max_new_tokens: int,
                  temperature: float = 0.0, eos_id: int = -1,
                  pad_id: int = 0,
                  row_keys: Optional[jax.Array] = None):
-    """Fixed-length decode over a paged cache, from prefill logits.
+    """Fixed-length decode over paged state, from prefill logits.
 
     logits0: (B, V) last-prompt-position logits (freshly computed or
     reused from a retained probe prefill — bit-identical either way);
-    block_table: (B, NB) page ids per row. The N-sample probe wave
-    passes block tables whose prompt-prefix entries point at *shared*
-    read-only pages — that sharing, not a tiled cache copy, is what
-    replaced ``tile_cache`` for the probe. Returns (GenerateOutput,
-    k_pages, v_pages); emitted tokens are bit-identical to the dense
-    ``generate``/``generate_samples`` over the same prompts and key.
+    pages: the pool's page pytree; block_table: (B, NB) page ids per
+    row. The N-sample probe wave passes block tables whose
+    prompt-prefix entries point at *shared* read-only pages — that
+    sharing, not a tiled cache copy, is what replaced ``tile_cache``
+    for the probe. Returns (GenerateOutput, pages); emitted tokens are
+    bit-identical to the dense ``generate``/``generate_samples`` over
+    the same prompts and key.
     """
     b = logits0.shape[0]
     cache_len = start_pos + max_new_tokens
 
     def decode_fn(pages, token, pos):
-        kp, vp = pages
-        logits, kp, vp = T.decode_step_paged(
-            cfg, params, kp, vp, block_table, token, pos,
-            cache_len=cache_len)
-        return logits, (kp, vp)
+        return T.decode_step_paged(cfg, params, pages, block_table,
+                                   token, pos, cache_len=cache_len)
 
-    out, (k_pages, v_pages) = _decode_scan(
-        cfg, params, (k_pages, v_pages), logits0, start_pos, b,
-        max_new_tokens, temperature, key, eos_id, pad_id,
-        decode_fn=decode_fn, row_keys=row_keys)
-    return out, k_pages, v_pages
+    out, pages = _decode_scan(
+        cfg, params, pages, logits0, start_pos, b, max_new_tokens,
+        temperature, key, eos_id, pad_id, decode_fn=decode_fn,
+        row_keys=row_keys)
+    return out, pages
 
 
 # ----------------------------------------------------------------------
@@ -327,24 +352,25 @@ def decode_paged(cfg: ModelConfig, params: dict, logits0: jax.Array,
 @functools.partial(
     jax.jit, static_argnames=("cfg", "prompt_len"))
 def prefill_chunk_paged(cfg: ModelConfig, params: dict,
-                        tokens: jax.Array, k_pages: jax.Array,
-                        v_pages: jax.Array, block_table: jax.Array,
+                        tokens: jax.Array, pages,
+                        block_table: jax.Array,
                         start_pos: jax.Array, *, prompt_len: int):
-    """One prompt chunk appended to the paged cache. tokens: (B, C)
-    covering absolute positions [start_pos[b], start_pos[b] + C) per
-    row — start offsets are traced, so mixed-depth rows share one
-    compiled program; block_table: (B, NB). Returns (chunk-final
-    logits (B, V), k_pages, v_pages); bit-identical composition with
-    ``prefill_paged`` — see ``models.transformer.prefill_chunk_paged``.
+    """One prompt chunk appended to the paged cache (dense layout).
+    tokens: (B, C) covering absolute positions
+    [start_pos[b], start_pos[b] + C) per row — start offsets are
+    traced, so mixed-depth rows share one compiled program;
+    block_table: (B, NB). Returns (chunk-final logits (B, V), pages);
+    bit-identical composition with ``prefill_paged`` — see
+    ``models.transformer.prefill_chunk_paged``.
     """
-    return T.prefill_chunk_paged(cfg, params, tokens, k_pages,
-                                 v_pages, block_table, start_pos,
+    return T.prefill_chunk_paged(cfg, params, tokens, pages,
+                                 block_table, start_pos,
                                  prompt_len=prompt_len)
 
 
 def _decode_step_rows_impl(cfg: ModelConfig, params: dict,
-                           logits: jax.Array, k_pages: jax.Array,
-                           v_pages: jax.Array, block_table: jax.Array,
+                           logits: jax.Array, pages,
+                           block_table: jax.Array,
                            pos: jax.Array, row_keys: jax.Array,
                            steps: jax.Array, done: jax.Array, *,
                            cache_len: int, temperature: float,
@@ -356,11 +382,11 @@ def _decode_step_rows_impl(cfg: ModelConfig, params: dict,
     tok_logp = jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
     emit = jnp.where(done, pad_id, tok)
     new_done = done | (tok == eos_id)
-    next_logits, k_pages, v_pages = T.decode_step_paged(
-        cfg, params, k_pages, v_pages, block_table, emit, pos,
+    next_logits, pages = T.decode_step_paged(
+        cfg, params, pages, block_table, emit, pos,
         cache_len=cache_len)
     return (emit, jnp.where(done, 0.0, tok_logp), ~done, new_done,
-            next_logits, k_pages, v_pages)
+            next_logits, pages)
 
 
 @functools.partial(
@@ -368,31 +394,31 @@ def _decode_step_rows_impl(cfg: ModelConfig, params: dict,
     static_argnames=("cfg", "cache_len", "temperature", "eos_id",
                      "pad_id"))
 def decode_step_rows(cfg: ModelConfig, params: dict,
-                     logits: jax.Array, k_pages: jax.Array,
-                     v_pages: jax.Array, block_table: jax.Array,
+                     logits: jax.Array, pages,
+                     block_table: jax.Array,
                      pos: jax.Array, row_keys: jax.Array,
                      steps: jax.Array, done: jax.Array, *,
                      cache_len: int, temperature: float,
                      eos_id: int, pad_id: int):
     """One decode step for a mixed batch of rows.
 
-    logits: (B, V) each row's pending next-token logits; pos: (B,)
-    per-row write position; steps: (B,) per-row decode-step index;
-    done: (B,) rows already past EOS. Mirrors one iteration of
-    ``_decode_scan``'s body exactly (same sampling, logprob, emit and
-    done arithmetic), so replaying it step-by-step over any batch
-    composition emits the same per-row tokens the fixed-length scan
-    does. Returns (emit, logprob, live, new_done, next_logits,
-    k_pages, v_pages)."""
+    logits: (B, V) each row's pending next-token logits; pages: the
+    pool's page pytree (any layout — ``T.decode_step_paged``
+    dispatches); pos: (B,) per-row write position; steps: (B,)
+    per-row decode-step index; done: (B,) rows already past EOS.
+    Mirrors one iteration of ``_decode_scan``'s body exactly (same
+    sampling, logprob, emit and done arithmetic), so replaying it
+    step-by-step over any batch composition emits the same per-row
+    tokens the fixed-length scan does. Returns (emit, logprob, live,
+    new_done, next_logits, pages)."""
     return _decode_step_rows_impl(
-        cfg, params, logits, k_pages, v_pages, block_table, pos,
+        cfg, params, logits, pages, block_table, pos,
         row_keys, steps, done, cache_len=cache_len,
         temperature=temperature, eos_id=eos_id, pad_id=pad_id)
 
 
 def _decode_megastep_rows_impl(cfg: ModelConfig, params: dict,
-                               logits: jax.Array, k_pages: jax.Array,
-                               v_pages: jax.Array,
+                               logits: jax.Array, pages,
                                block_table: jax.Array, pos: jax.Array,
                                row_keys: jax.Array, steps: jax.Array,
                                done: jax.Array, *, n_ticks: int,
@@ -413,21 +439,21 @@ def _decode_megastep_rows_impl(cfg: ModelConfig, params: dict,
     the true position, and the host replay drops masked emissions.
     """
     def body(carry, _):
-        lg, kp, vp, pos_, steps_, done_ = carry
+        lg, pg, pos_, steps_, done_ = carry
         tok = sample_token_rows(lg, temperature, row_keys, steps_)
         emit = jnp.where(done_, pad_id, tok)
         new_done = done_ | (tok == eos_id)
         write_pos = jnp.minimum(pos_, cache_len - 1)
-        next_lg, kp, vp = T.decode_step_paged(
-            cfg, params, kp, vp, block_table, emit, write_pos,
+        next_lg, pg = T.decode_step_paged(
+            cfg, params, pg, block_table, emit, write_pos,
             cache_len=cache_len)
-        return ((next_lg, kp, vp, pos_ + 1, steps_ + 1, new_done),
+        return ((next_lg, pg, pos_ + 1, steps_ + 1, new_done),
                 (emit, new_done))
 
-    init = (logits, k_pages, v_pages, pos, steps, done)
-    (lg, k_pages, v_pages, _, _, _), (emits, dones) = jax.lax.scan(
+    init = (logits, pages, pos, steps, done)
+    (lg, pages, _, _, _), (emits, dones) = jax.lax.scan(
         body, init, None, length=n_ticks)
-    return emits, dones, lg, k_pages, v_pages
+    return emits, dones, lg, pages
 
 
 @functools.partial(
@@ -435,8 +461,8 @@ def _decode_megastep_rows_impl(cfg: ModelConfig, params: dict,
     static_argnames=("cfg", "n_ticks", "cache_len", "temperature",
                      "eos_id", "pad_id"))
 def decode_megastep_rows(cfg: ModelConfig, params: dict,
-                         logits: jax.Array, k_pages: jax.Array,
-                         v_pages: jax.Array, block_table: jax.Array,
+                         logits: jax.Array, pages,
+                         block_table: jax.Array,
                          pos: jax.Array, row_keys: jax.Array,
                          steps: jax.Array, done: jax.Array, *,
                          n_ticks: int, cache_len: int,
@@ -452,11 +478,11 @@ def decode_megastep_rows(cfg: ModelConfig, params: dict,
     ``n_ticks`` is a pure performance knob: K=1 *is* the per-tick
     baseline, and any K produces bit-identical token streams.
 
-    Returns (emits (K, B), dones (K, B), next_logits (B, V), k_pages,
-    v_pages); ``next_logits`` keeps each lane's pending logits on
-    device for the next megastep."""
+    Returns (emits (K, B), dones (K, B), next_logits (B, V), pages);
+    ``next_logits`` keeps each lane's pending logits on device for the
+    next megastep."""
     return _decode_megastep_rows_impl(
-        cfg, params, logits, k_pages, v_pages, block_table, pos,
+        cfg, params, logits, pages, block_table, pos,
         row_keys, steps, done, n_ticks=n_ticks, cache_len=cache_len,
         temperature=temperature, eos_id=eos_id, pad_id=pad_id)
 
@@ -476,15 +502,24 @@ def _row_spec():
     return P("data")
 
 
-def _page_spec(m: int):
-    """Page-pool arrays (n_shards, L, P, page, KV, Dh): rows over
-    "data"; under tensor parallelism each model column stores only its
-    kv-head slice, so the KV axis shards over "model" (per-shard pool
-    bytes divide by m — capacity at a fixed byte budget scales x m)."""
+def _page_specs(pages, m: int):
+    """Per-leaf specs for a sharded page pytree. Code/value leaves
+    (n_shards, L, P, page, KV, Dh) and scale planes (n_shards, L, P,
+    page, KV) both put rows over "data"; under tensor parallelism each
+    model column stores only its kv-head slice, so the KV axis shards
+    over "model" (per-shard pool bytes divide by m — capacity at a
+    fixed byte budget scales x m). Only the "dense" and "quant"
+    layouts reach the sharded runners, so every leaf has KV at axis 4."""
     from jax.sharding import PartitionSpec as P
-    if m > 1:
-        return P("data", None, None, None, "model", None)
-    return P("data")
+
+    def leaf(a):
+        if m <= 1:
+            return P("data")
+        if a.ndim == 6:
+            return P("data", None, None, None, "model", None)
+        return P("data", None, None, None, "model")
+
+    return jax.tree.map(leaf, pages)
 
 
 def _param_spec(params, m: int):
@@ -510,16 +545,15 @@ def _shard_map(body, mesh, in_specs, out_specs):
 @functools.partial(
     jax.jit, static_argnames=("cfg", "prompt_len", "mesh"))
 def prefill_chunk_paged_sharded(cfg: ModelConfig, params: dict,
-                                tokens: jax.Array, k_pages: jax.Array,
-                                v_pages: jax.Array,
+                                tokens: jax.Array, pages,
                                 block_table: jax.Array,
                                 start_pos: jax.Array, *,
                                 prompt_len: int, mesh):
     """``prefill_chunk_paged`` across every shard of a serving mesh in
     one launch. All array operands carry a leading ``n_shards`` axis
-    (tokens: (n_sh, B, C); pages: (n_sh, L, P, page, KV, Dh); tables:
-    (n_sh, B, NBp); start_pos: (n_sh, B)); params replicate over
-    "data". Each shard's slice runs the exact single-device chunk
+    (tokens: (n_sh, B, C); page leaves: (n_sh, L, P, page, KV, ...);
+    tables: (n_sh, B, NBp); start_pos: (n_sh, B)); params replicate
+    over "data". Each shard's slice runs the exact single-device chunk
     program, so per-row results are bit-identical to unsharded
     execution — sharding is placement, not math. On a 2-D ("data",
     "model") mesh the program additionally runs tensor-parallel inside
@@ -528,20 +562,51 @@ def prefill_chunk_paged_sharded(cfg: ModelConfig, params: dict,
     keeps the reduction order — and therefore the bits — identical."""
     m = _mesh_model_size(mesh)
     lcfg = tp_local_cfg(cfg, m)
-    row, pg = _row_spec(), _page_spec(m)
+    row, pg = _row_spec(), _page_specs(pages, m)
 
-    def body(p, tk, kp, vp, table, starts):
+    def body(p, tk, pgs, table, starts):
         with _tp_trace_ctx(m):
-            lg, kp1, vp1 = T.prefill_chunk_paged(
-                lcfg, p, tk[0], kp[0], vp[0], table[0], starts[0],
-                prompt_len=prompt_len)
-        return lg[None], kp1[None], vp1[None]
+            lg, pgs1 = T.prefill_chunk_paged(
+                lcfg, p, tk[0],
+                jax.tree.map(lambda a: a[0], pgs),
+                table[0], starts[0], prompt_len=prompt_len)
+        return lg[None], jax.tree.map(lambda a: a[None], pgs1)
 
     return _shard_map(
         body, mesh,
-        (_param_spec(params, m), row, pg, pg, row, row),
-        (row, pg, pg))(
-        params, tokens, k_pages, v_pages, block_table, start_pos)
+        (_param_spec(params, m), row, pg, row, row),
+        (row, pg))(
+        params, tokens, pages, block_table, start_pos)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh"))
+def prefill_paged_sharded(cfg: ModelConfig, params: dict,
+                          prompt_tokens: jax.Array, pages,
+                          prefill_table: jax.Array, *, mesh):
+    """``prefill_paged`` across every shard of a serving mesh in one
+    launch — the whole-prompt program the step loop uses for layouts
+    that cannot compose chunk-by-chunk (quant: a chunk would re-read
+    the already-quantised prefix). prompt_tokens: (n_sh, B, S);
+    prefill_table: (n_sh, B, NBp); page leaves carry the leading
+    ``n_shards`` axis. Only dense/quant layouts reach the sharded
+    runners, so no ``cache_len`` (ring-only) is needed. Returns
+    (logits0 (n_sh, B, V), pages)."""
+    m = _mesh_model_size(mesh)
+    lcfg = tp_local_cfg(cfg, m)
+    row, pg = _row_spec(), _page_specs(pages, m)
+
+    def body(p, tk, pgs, table):
+        with _tp_trace_ctx(m):
+            lg, pgs1 = T.prefill_paged(
+                lcfg, p, tk[0],
+                jax.tree.map(lambda a: a[0], pgs), table[0])
+        return lg[None], jax.tree.map(lambda a: a[None], pgs1)
+
+    return _shard_map(
+        body, mesh,
+        (_param_spec(params, m), row, pg, row),
+        (row, pg))(
+        params, prompt_tokens, pages, prefill_table)
 
 
 @functools.partial(
@@ -549,8 +614,7 @@ def prefill_chunk_paged_sharded(cfg: ModelConfig, params: dict,
     static_argnames=("cfg", "cache_len", "temperature", "eos_id",
                      "pad_id", "mesh"))
 def decode_step_rows_sharded(cfg: ModelConfig, params: dict,
-                             logits: jax.Array, k_pages: jax.Array,
-                             v_pages: jax.Array,
+                             logits: jax.Array, pages,
                              block_table: jax.Array, pos: jax.Array,
                              row_keys: jax.Array, steps: jax.Array,
                              done: jax.Array, *, cache_len: int,
@@ -564,21 +628,24 @@ def decode_step_rows_sharded(cfg: ModelConfig, params: dict,
     whatever shard hosts it and whatever the model-axis size."""
     m = _mesh_model_size(mesh)
     lcfg = tp_local_cfg(cfg, m)
-    row, pg = _row_spec(), _page_spec(m)
+    row, pg = _row_spec(), _page_specs(pages, m)
 
-    def body(p, lg, kp, vp, table, pos_, keys, steps_, done_):
+    def body(p, lg, pgs, table, pos_, keys, steps_, done_):
         with _tp_trace_ctx(m):
-            out = _decode_step_rows_impl(
-                lcfg, p, lg[0], kp[0], vp[0], table[0], pos_[0],
-                keys[0], steps_[0], done_[0], cache_len=cache_len,
-                temperature=temperature, eos_id=eos_id, pad_id=pad_id)
-        return tuple(o[None] for o in out)
+            *out, pgs1 = _decode_step_rows_impl(
+                lcfg, p, lg[0],
+                jax.tree.map(lambda a: a[0], pgs),
+                table[0], pos_[0], keys[0], steps_[0], done_[0],
+                cache_len=cache_len, temperature=temperature,
+                eos_id=eos_id, pad_id=pad_id)
+        return (tuple(o[None] for o in out)
+                + (jax.tree.map(lambda a: a[None], pgs1),))
 
     return _shard_map(
         body, mesh,
-        (_param_spec(params, m), row, pg, pg, row, row, row, row, row),
-        (row, row, row, row, row, pg, pg))(
-        params, logits, k_pages, v_pages, block_table, pos, row_keys,
+        (_param_spec(params, m), row, pg, row, row, row, row, row),
+        (row, row, row, row, row, pg))(
+        params, logits, pages, block_table, pos, row_keys,
         steps, done)
 
 
@@ -587,9 +654,7 @@ def decode_step_rows_sharded(cfg: ModelConfig, params: dict,
     static_argnames=("cfg", "n_ticks", "cache_len", "temperature",
                      "eos_id", "pad_id", "mesh"))
 def decode_megastep_rows_sharded(cfg: ModelConfig, params: dict,
-                                 logits: jax.Array,
-                                 k_pages: jax.Array,
-                                 v_pages: jax.Array,
+                                 logits: jax.Array, pages,
                                  block_table: jax.Array,
                                  pos: jax.Array, row_keys: jax.Array,
                                  steps: jax.Array, done: jax.Array, *,
@@ -607,28 +672,29 @@ def decode_megastep_rows_sharded(cfg: ModelConfig, params: dict,
     device program."""
     m = _mesh_model_size(mesh)
     lcfg = tp_local_cfg(cfg, m)
-    row, pg = _row_spec(), _page_spec(m)
+    row, pg = _row_spec(), _page_specs(pages, m)
 
-    def body(p, lg, kp, vp, table, pos_, keys, steps_, done_):
+    def body(p, lg, pgs, table, pos_, keys, steps_, done_):
         with _tp_trace_ctx(m):
-            out = _decode_megastep_rows_impl(
-                lcfg, p, lg[0], kp[0], vp[0], table[0], pos_[0],
-                keys[0], steps_[0], done_[0], n_ticks=n_ticks,
-                cache_len=cache_len, temperature=temperature,
-                eos_id=eos_id, pad_id=pad_id)
-        return tuple(o[None] for o in out)
+            *out, pgs1 = _decode_megastep_rows_impl(
+                lcfg, p, lg[0],
+                jax.tree.map(lambda a: a[0], pgs),
+                table[0], pos_[0], keys[0], steps_[0], done_[0],
+                n_ticks=n_ticks, cache_len=cache_len,
+                temperature=temperature, eos_id=eos_id, pad_id=pad_id)
+        return (tuple(o[None] for o in out)
+                + (jax.tree.map(lambda a: a[None], pgs1),))
 
     return _shard_map(
         body, mesh,
-        (_param_spec(params, m), row, pg, pg, row, row, row, row, row),
-        (row, row, row, pg, pg))(
-        params, logits, k_pages, v_pages, block_table, pos, row_keys,
+        (_param_spec(params, m), row, pg, row, row, row, row, row),
+        (row, row, row, pg))(
+        params, logits, pages, block_table, pos, row_keys,
         steps, done)
 
 
 @functools.partial(jax.jit, static_argnames=("mesh",))
-def fork_pages_sharded(k_pages: jax.Array, v_pages: jax.Array,
-                       src: jax.Array, dst: jax.Array, *, mesh):
+def fork_pages_sharded(pages, src: jax.Array, dst: jax.Array, *, mesh):
     """Per-shard ``fork_pages`` in one launch. src/dst: (n_sh, K)
     shard-local page ids; shards with nothing to fork pass
     ``src == dst`` self-copies (the identity write), so one shard's
@@ -636,14 +702,15 @@ def fork_pages_sharded(k_pages: jax.Array, v_pages: jax.Array,
     column copies its own kv-head slice of the pages — page ids are
     column-invariant, so the fork stays a pure local copy."""
     m = _mesh_model_size(mesh)
-    row, pg = _row_spec(), _page_spec(m)
+    row, pg = _row_spec(), _page_specs(pages, m)
 
-    def body(kp, vp, s, d):
-        kp1, vp1 = fork_pages(kp[0], vp[0], s[0], d[0])
-        return kp1[None], vp1[None]
+    def body(pgs, s, d):
+        pgs1 = fork_pages(jax.tree.map(lambda a: a[0], pgs),
+                          s[0], d[0])
+        return (jax.tree.map(lambda a: a[None], pgs1),)
 
-    return _shard_map(body, mesh, (pg, pg, row, row), (pg, pg))(
-        k_pages, v_pages, src, dst)
+    return _shard_map(body, mesh, (pg, row, row), (pg,))(
+        pages, src, dst)[0]
 
 
 def decode_text(tokens, detok) -> list:

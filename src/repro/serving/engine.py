@@ -51,7 +51,7 @@ from repro.core.sigma import (
     MODE_NAMES, majority_vote_batch, route_batch, sigma_batch)
 from repro.data import tokenizer as tok
 from repro.data.tasks import Task
-from repro.models.transformer import paged_supported
+from repro.models.transformer import resolve_layout
 from repro.sampling import (
     batch_invariant, generate, generate_samples, member_row_keys,
     probe_row_keys)
@@ -163,6 +163,7 @@ class BatchedACAREngine:
         self.kv_page_size = kv_page_size
         self.kv_prefix_cache = kv_prefix_cache
         self._kv_servers: Dict[int, PagedKVServer] = {}
+        self._stepped_servers: Dict[int, PagedKVServer] = {}
         self._kv_emitted: Dict[Tuple[str, str], int] = {}
         self.route_fn = route_fn or route_batch
         # a route_fn may take (sigma, admission_indices) so forced-mode
@@ -184,8 +185,12 @@ class BatchedACAREngine:
         """One server per distinct params object: an ensemble member
         that *is* the probe model shares the probe's server, which is
         what makes probe->ensemble prefill-page reuse sound (KV is a
-        function of params, not just configs)."""
-        if self.paged is False or not paged_supported(zm.cfg):
+        function of params, not just configs). Wave-path serving
+        speaks the dense and quant page layouts; ring and lanes
+        members serve dense in wave mode and take their layouts
+        through ``_stepped_server`` in the step loop."""
+        if (self.paged is False
+                or resolve_layout(zm.cfg) not in ("dense", "quant")):
             return None
         key = id(zm.params)
         srv = self._kv_servers.get(key)
@@ -196,10 +201,38 @@ class BatchedACAREngine:
             self._kv_servers[key] = srv
         return srv
 
+    def _stepped_server(self, zm: ZooModel) -> Optional[PagedKVServer]:
+        """Server for the step-level loop, which additionally speaks
+        the ring (sliding-window) and lanes (recurrent-state) layouts.
+        Dense/quant members return the *same object* as
+        ``_kv_server`` — ``_kv_reuse_member`` compares servers by
+        identity, so splitting them would silently disable
+        probe->ensemble page reuse."""
+        if self.paged is False:
+            return None
+        layout = resolve_layout(zm.cfg)
+        if layout is None:
+            return None
+        if layout in ("dense", "quant"):
+            return self._kv_server(zm)
+        key = id(zm.params)
+        srv = self._stepped_servers.get(key)
+        if srv is None:
+            srv = PagedKVServer(zm.cfg, page_size=self.kv_page_size,
+                                prefix_cache_entries=self.kv_prefix_cache)
+            srv.stats.model = zm.name
+            self._stepped_servers[key] = srv
+        return srv
+
     def kv_stats(self) -> Dict[str, KVStats]:
-        """Measured paged-KV accounting per model server."""
-        return {srv.stats.model: srv.stats
-                for srv in self._kv_servers.values()}
+        """Measured paged-KV accounting per model server (wave and
+        stepped server caches merged; dense/quant members live in
+        both roles as one server)."""
+        out = {srv.stats.model: srv.stats
+               for srv in self._kv_servers.values()}
+        for srv in self._stepped_servers.values():
+            out.setdefault(srv.stats.model, srv.stats)
+        return out
 
     def _kv_reuse_member(self, zm: ZooModel,
                          kv_srv: Optional[PagedKVServer]) -> bool:
@@ -705,7 +738,9 @@ class BatchedACAREngine:
         servers are runner-owned (aggregated per model), not in
         ``self._kv_servers``."""
         stats = kv.values() if kv is not None else \
-            [srv.stats for srv in self._kv_servers.values()]
+            [srv.stats for srv in (list(self._kv_servers.values())
+                                   + list(self._stepped_servers
+                                          .values()))]
         for st in stats:
             metrics.set_gauge(
                 "acar_kv_pages_in_use", st.pages_in_use,

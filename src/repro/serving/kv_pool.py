@@ -18,14 +18,33 @@ allocation:
   *share* the read-only full prompt pages (one ref per owner) and only
   hold private pages for the region decode writes — the partial
   prompt-tail page is materialised per sample by a copy-on-write fork.
-* **PagedKVServer** — per-model serving state: the device page arrays
-  (``(L, P, page_size, KV, Dh)`` for K and V), the pool, a ref-counted
-  prompt-prefix cache (cross-request reuse of identical prompts), and
-  the wave orchestration the engine calls: ``probe_wave`` (N samples,
-  one prefill, shared prefix pages), ``reuse_decode`` (ensemble member
+* **PagedKVServer** — per-model serving state: the device page pytree
+  (``self.pages``), the pool, a ref-counted prompt-prefix cache
+  (cross-request reuse of identical prompts), and the wave
+  orchestration the engine calls: ``probe_wave`` (N samples, one
+  prefill, shared prefix pages), ``reuse_decode`` (ensemble member
   seeded from the probe's retained prompt pages — prefill skipped
   entirely), and ``generate`` (paged single-sample waves for members
   that cannot reuse).
+
+The page pytree is heterogeneous — one server serves one *layout*
+(``models.transformer.resolve_layout``), and every leaf keeps the
+page/lane id on axis 1 so one fork/scatter program covers them all:
+
+* ``"dense"`` — ``{k, v}`` of ``(L, P, page_size, KV, Dh)`` in the
+  model dtype (the original layout).
+* ``"quant"`` — ``{k, v}`` int8 codes plus ``{k_scale, v_scale}``
+  ``(L, P, page_size, KV)`` f32 per-vector scale planes
+  (``models.attention.quantize_kv``): Dh + 4 bytes per position
+  instead of 2*Dh — roughly 2x the rows per device at the same pool
+  bytes.
+* ``"ring"`` — dense-dtype pages, but a row only ever holds
+  ``ceil(min(prompt+new, window)/page_size)`` pages; positions wrap in
+  place (sliding-window members' KV stops growing with the prompt).
+* ``"lanes"`` — recurrent-state lanes for SSM members:
+  ``{conv: (L, LANES, conv_width-1, d_in), h: (L, LANES, d_in, N)}``;
+  a "page" is one sequence's whole state, block tables are one lane id
+  wide, and fork is a state copy.
 
 Bit-equivalence contract: the paged execution path produces tokens
 bit-identical to the dense path. The gathered page view sliced to the
@@ -69,6 +88,23 @@ class PageAccountingError(PagePoolError):
 def pages_for(n_tokens: int, page_size: int) -> int:
     """Pages needed to hold ``n_tokens`` positions."""
     return -(-int(n_tokens) // page_size) if n_tokens > 0 else 0
+
+
+@dataclass(frozen=True)
+class RowGeometry:
+    """Per-layout page accounting for one row of ``prompt_len`` tokens
+    decoding up to ``max_new`` more. ``n_shared`` prompt pages are
+    read-only shareable across a row's lanes; ``nbp`` pages hold the
+    prompt (shared + the COW tail for dense/quant, the whole private
+    snapshot for ring/lanes); each decode lane holds ``n_tail``
+    private pages and a block table ``nb`` entries wide; the decode
+    attention span is ``cache_len`` positions."""
+    n_shared: int
+    tail_tokens: int        # tokens in the COW prompt-tail page
+    nbp: int                # prompt pages per row
+    nb: int                 # block-table width per decode lane
+    n_tail: int             # private pages per decode lane
+    cache_len: int          # decode attention span (dense-equivalent)
 
 
 # ----------------------------------------------------------------------
@@ -272,32 +308,101 @@ class PagedKVServer:
 
     def __init__(self, cfg: ModelConfig, *, page_size: int = 8,
                  prefix_cache_entries: int = 32):
-        from repro.models.transformer import paged_supported
-        if not paged_supported(cfg):
+        from repro.models.transformer import resolve_layout
+        layout = resolve_layout(cfg)
+        if layout is None:
             raise ValueError(
                 f"config {cfg.name!r} is not paged-KV capable "
                 "(GQA, linear cache, and dense or gather-dispatch "
-                "MoE FFN required)")
+                "MoE FFN required; hybrid stacks stay dense)")
         self.cfg = cfg
+        self.layout = layout
         self.page_size = int(page_size)
-        self.prefix_cache_entries = int(prefix_cache_entries)
+        # ring pages are per-lane snapshots and lane state depends on
+        # the decode horizon; neither is a reusable read-only prompt
+        # prefix, so the prefix cache only runs for dense/quant
+        self.prefix_cache_entries = (int(prefix_cache_entries)
+                                     if layout in ("dense", "quant")
+                                     else 0)
         # simulated shard loss (serving/faults.py): a lost server's
         # pool is abandoned — allocations and prefix hits must fail so
         # no new row can land on dead pages
         self.lost = False
         self.pool: Optional[PagePool] = None
-        self.k_pages = None
-        self.v_pages = None
+        self.pages = None
         self._scratch: Optional[np.ndarray] = None
         self._prefix: "OrderedDict[bytes, _PrefixEntry]" = OrderedDict()
         self._prefix_seq = 0
         self._capacity_key: Optional[Tuple[int, int, int, int]] = None
-        itemsize = np.dtype(cfg.dtype).itemsize
         self.stats = KVStats(
             model=cfg.name, page_size=self.page_size,
-            page_bytes=(2 * cfg.num_layers * self.page_size
-                        * cfg.num_kv_heads * cfg.resolved_head_dim
-                        * itemsize))
+            page_bytes=self._page_bytes())
+
+    def _page_bytes(self) -> int:
+        """Bytes one page (all layers) holds under this layout — the
+        unit the capacity benchmarks compare across layouts."""
+        cfg = self.cfg
+        itemsize = np.dtype(cfg.dtype).itemsize
+        per_vec = {
+            "dense": 2 * cfg.resolved_head_dim * itemsize,
+            "ring": 2 * cfg.resolved_head_dim * itemsize,
+            # int8 codes + one f32 scale, K and V
+            "quant": 2 * (cfg.resolved_head_dim + 4),
+        }
+        if self.layout == "lanes":
+            from repro.models import ssm as ssm_mod
+            d_in, _, n = ssm_mod.ssm_dims(cfg)
+            w = cfg.ssm.conv_width
+            return cfg.num_layers * ((w - 1) * d_in * itemsize
+                                     + d_in * n * 4)
+        return (cfg.num_layers * self.page_size * cfg.num_kv_heads
+                * per_vec[self.layout])
+
+    # -- layout geometry -----------------------------------------------
+    @property
+    def chunked(self) -> bool:
+        """Whether this server's rows may prefill in chunks. Only the
+        dense layout composes chunk-by-chunk bit-identically (a quant
+        chunk would re-read the already-quantised prefix, ring pages
+        overwrite in place, lane prefill is one scan)."""
+        return self.layout == "dense"
+
+    def row_geometry(self, prompt_len: int,
+                     max_new_tokens: int) -> RowGeometry:
+        """Page accounting for one row under this server's layout."""
+        s, m, ps = int(prompt_len), int(max_new_tokens), self.page_size
+        if self.layout in ("dense", "quant"):
+            n_shared = s // ps
+            nbp = pages_for(s, ps)
+            nb = pages_for(s + m, ps)
+            return RowGeometry(
+                n_shared=n_shared, tail_tokens=s - n_shared * ps,
+                nbp=nbp, nb=nb, n_tail=nb - n_shared, cache_len=s + m)
+        if self.layout == "ring":
+            cl = min(s + m, self.cfg.window)
+            nb = pages_for(cl, ps)
+            # no read-only sharing: every lane writes into (and wraps
+            # over) its whole snapshot, so lanes fork all nbp pages
+            return RowGeometry(n_shared=0, tail_tokens=0, nbp=nb,
+                               nb=nb, n_tail=nb, cache_len=cl)
+        # lanes: one "page" is the row's entire recurrent state
+        return RowGeometry(n_shared=0, tail_tokens=0, nbp=1, nb=1,
+                           n_tail=1, cache_len=s + m)
+
+    def table_width(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Block-table width one decode lane needs."""
+        return self.row_geometry(prompt_len, max_new_tokens).nb
+
+    # -- back-compat array views ---------------------------------------
+    @property
+    def k_pages(self):
+        """Dense/quant K page leaf (capacity probes and older callers
+        read this; ``self.pages`` is the full layout pytree)."""
+        return None if self.pages is None else self.pages.get("k")
+
+    @property
+    def v_pages(self):
+        return None if self.pages is None else self.pages.get("v")
 
     # -- capacity ------------------------------------------------------
     def _ensure_capacity(self, batch: int, prompt_len: int,
@@ -314,19 +419,42 @@ class PagedKVServer:
             key = (max(batch, b0), max(prompt_len, s0),
                    max(n_samples, n0), max(max_new_tokens, m0))
         b, s, n, m = key
-        ps = self.page_size
-        nbp = pages_for(s, ps)
-        nb = pages_for(s + m, ps)
-        n_tail = nb - s // ps
-        need = (b * (nbp + n * n_tail)      # probe wave peak
-                + b * nb                    # one member wave (own prefill)
-                + self.prefix_cache_entries * nbp
-                + nbp)                      # scratch pages
-        self._rebuild(need, nbp, key)
+        g = self.row_geometry(s, m)
+        need = (b * (g.nbp + n * g.n_tail)  # probe wave peak
+                + b * g.nb                  # one member wave (own prefill)
+                + self.prefix_cache_entries * g.nbp
+                + g.nbp)                    # scratch pages
+        self._rebuild(need, g.nbp, key)
+
+    def _zero_pages(self, num_pages: int) -> dict:
+        """Freshly zeroed page pytree for this layout (axis 1 = page
+        or lane id on every leaf)."""
+        import jax.numpy as jnp
+        cfg = self.cfg
+        if self.layout == "lanes":
+            from repro.models import ssm as ssm_mod
+            d_in, _, n = ssm_mod.ssm_dims(cfg)
+            w = cfg.ssm.conv_width
+            # mirrors _ssm_cache's per-layer dtypes exactly: the lane
+            # scatter/gather must be a pure copy of the dense state
+            return {
+                "conv": jnp.zeros((cfg.num_layers, num_pages, w - 1,
+                                   d_in), jnp.dtype(cfg.dtype)),
+                "h": jnp.zeros((cfg.num_layers, num_pages, d_in, n),
+                               jnp.float32),
+            }
+        shape = (cfg.num_layers, num_pages, self.page_size,
+                 cfg.num_kv_heads, cfg.resolved_head_dim)
+        dt = jnp.int8 if self.layout == "quant" \
+            else jnp.dtype(cfg.dtype)
+        pages = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        if self.layout == "quant":
+            pages["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            pages["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+        return pages
 
     def _rebuild(self, num_pages: int, scratch_pages: int,
                  key: Tuple[int, int, int, int]) -> None:
-        import jax.numpy as jnp
         if self.pool is not None:
             self.drop_prefix_cache()
             # only the OLD scratch pages may remain held — they are
@@ -338,13 +466,8 @@ class PagedKVServer:
             if self.pool.pages_in_use > old_scratch:
                 raise PagePoolError(
                     "cannot rebuild the page pool while pages are held")
-        cfg = self.cfg
         self.pool = PagePool(num_pages, self.page_size)
-        dt = jnp.dtype(cfg.dtype)
-        shape = (cfg.num_layers, num_pages, self.page_size,
-                 cfg.num_kv_heads, cfg.resolved_head_dim)
-        self.k_pages = jnp.zeros(shape, dt)
-        self.v_pages = jnp.zeros(shape, dt)
+        self.pages = self._zero_pages(num_pages)
         # scratch pages soak up the prefill writes of bucket-padding
         # rows; never referenced by any block table, so their contents
         # are dead by construction
@@ -469,18 +592,16 @@ class PagedKVServer:
 
         b, s = ids.shape
         n = int(n_samples)
-        ps = self.page_size
         self._ensure_capacity(b, s, n, max_new_tokens)
-        n_shared = s // ps
-        tail_tokens = s - n_shared * ps
-        nbp = pages_for(s, ps)
-        nb = pages_for(s + max_new_tokens, ps)
-        n_tail = nb - n_shared
+        g = self.row_geometry(s, max_new_tokens)
 
         # 1. prompt pages per row: prefix-cache hit -> retain the
         # cached pages; miss -> allocate fresh ones (handle-owned).
-        # On any failure, release whatever this wave accumulated so an
-        # exhausted pool stays consistent instead of leaking refs.
+        # Ring/lanes rows have no read-only shareable prefix — all
+        # g.nbp prompt pages ride in ``shared`` and every lane forks
+        # the lot. On any failure, release whatever this wave
+        # accumulated so an exhausted pool stays consistent instead of
+        # leaking refs.
         shared_rows: List[np.ndarray] = []
         tail_rows: List[Optional[int]] = []
         miss: List[int] = []
@@ -497,10 +618,14 @@ class PagedKVServer:
                     tail_rows.append(entry.tail)
                     self.stats.prefill_tokens_reused_prefix += s
                 else:
-                    pages = self._alloc_retry(nbp)
-                    shared_rows.append(pages[:n_shared])
-                    tail_rows.append(int(pages[n_shared])
-                                     if tail_tokens else None)
+                    pages = self._alloc_retry(g.nbp)
+                    if self.layout in ("dense", "quant"):
+                        shared_rows.append(pages[:g.n_shared])
+                        tail_rows.append(int(pages[g.n_shared])
+                                         if g.tail_tokens else None)
+                    else:
+                        shared_rows.append(pages)
+                        tail_rows.append(None)
                     miss.append(r)
 
             # 2. one prefill over the uncached rows, gathered into a
@@ -510,18 +635,25 @@ class PagedKVServer:
             if miss:
                 bucket = bucket_size(len(miss), cap=b)
                 rows_idx = miss + [miss[0]] * (bucket - len(miss))
-                pf_table = np.empty((bucket, nbp), np.int32)
+                pf_table = np.empty((bucket, g.nbp), np.int32)
                 for i, r in enumerate(rows_idx):
                     if i < len(miss):
                         row_pages = list(shared_rows[r])
-                        if tail_tokens:
+                        if g.tail_tokens:
                             row_pages.append(tail_rows[r])
                         pf_table[i] = row_pages
                     else:
-                        pf_table[i] = self._scratch[:nbp]
-                lg, self.k_pages, self.v_pages = S.prefill_paged(
-                    self.cfg, params, jnp.asarray(ids[rows_idx]),
-                    self.k_pages, self.v_pages, jnp.asarray(pf_table))
+                        pf_table[i] = self._scratch[:g.nbp]
+                if self.layout == "lanes":
+                    lg, self.pages = S.prefill_lanes(
+                        self.cfg, params, jnp.asarray(ids[rows_idx]),
+                        self.pages, jnp.asarray(pf_table[:, 0]))
+                else:
+                    lg, self.pages = S.prefill_paged(
+                        self.cfg, params, jnp.asarray(ids[rows_idx]),
+                        self.pages, jnp.asarray(pf_table),
+                        cache_len=(s + max_new_tokens
+                                   if self.layout == "ring" else None))
                 lg = np.asarray(lg, np.float32)
                 for i, r in enumerate(miss):
                     logits0[r] = lg[i]
@@ -554,32 +686,43 @@ class PagedKVServer:
             live=np.ones(b, bool))
         sample_tails = None
         try:
-            # 4. sample-private pages + COW fork of the partial tail
-            sample_tails = self._alloc_retry(b * n * n_tail).reshape(
-                b, n, n_tail)
+            # 4. sample-private pages + fork of the prompt state each
+            # lane mutates: dense/quant COW-fork only the partial tail
+            # page; ring/lanes fork the row's whole prompt snapshot
+            sample_tails = self._alloc_retry(b * n * g.n_tail).reshape(
+                b, n, g.n_tail)
             self.stats.probe_pages_highwater = max(
                 self.stats.probe_pages_highwater,
-                b * (nbp + n * n_tail))
-            block_table = np.empty((b * n, nb), np.int32)
+                b * (g.nbp + n * g.n_tail))
+            block_table = np.empty((b * n, g.nb), np.int32)
             for r in range(b):
                 for j in range(n):
-                    block_table[r * n + j, :n_shared] = shared_rows[r]
-                    block_table[r * n + j, n_shared:] = sample_tails[r, j]
-            if tail_tokens:
+                    block_table[r * n + j, :g.n_shared] = \
+                        shared_rows[r][:g.n_shared]
+                    block_table[r * n + j, g.n_shared:] = \
+                        sample_tails[r, j]
+            if g.tail_tokens:
                 src = np.repeat(
                     np.asarray([tail_rows[r] for r in range(b)],
                                np.int32), n)
                 dst = sample_tails[:, :, 0].reshape(-1)
-                self.k_pages, self.v_pages = S.fork_pages(
-                    self.k_pages, self.v_pages, jnp.asarray(src),
-                    jnp.asarray(dst))
+                self.pages = S.fork_pages(
+                    self.pages, jnp.asarray(src), jnp.asarray(dst))
                 self.stats.cow_forks += b * n
+            elif g.n_shared == 0:
+                src = np.repeat(
+                    np.stack([shared_rows[r] for r in range(b)]),
+                    n, axis=0).reshape(-1)
+                dst = sample_tails.reshape(-1)
+                self.pages = S.fork_pages(
+                    self.pages, jnp.asarray(src), jnp.asarray(dst))
+                self.stats.cow_forks += b * n * g.nbp
 
             # 5. decode the expanded (B*N) wave over the shared pages
-            out, self.k_pages, self.v_pages = S.decode_paged(
+            out, self.pages = S.decode_paged(
                 self.cfg, params,
                 jnp.asarray(np.repeat(logits0, n, axis=0)),
-                self.k_pages, self.v_pages, jnp.asarray(block_table),
+                self.pages, jnp.asarray(block_table),
                 key, start_pos=s, max_new_tokens=max_new_tokens,
                 temperature=temperature, eos_id=eos_id, pad_id=pad_id,
                 row_keys=None if row_keys is None
@@ -612,33 +755,44 @@ class PagedKVServer:
 
         rows = [int(r) for r in rows]
         s = handle.prompt_len
-        ps = self.page_size
-        n_shared = s // ps
-        tail_tokens = s - n_shared * ps
-        nb = pages_for(s + max_new_tokens, ps)
-        n_tail = nb - n_shared
+        g = self.row_geometry(s, max_new_tokens)
+        if self.layout == "ring":
+            g0 = self.row_geometry(s, handle.max_new_tokens)
+            if g.cache_len != g0.cache_len:
+                raise ValueError(
+                    "ring prompt snapshot was compressed for "
+                    f"cache_len {g0.cache_len}; a member decoding to "
+                    f"cache_len {g.cache_len} cannot reuse it")
         for r in rows:
             if not handle.live[r]:
                 raise PageAccountingError(
                     f"reuse of row {r} after its pages were resolved")
 
         nr = len(rows)
-        tails = self._alloc_retry(nr * n_tail).reshape(nr, n_tail)
+        tails = self._alloc_retry(nr * g.n_tail).reshape(nr, g.n_tail)
         try:
-            block_table = np.empty((nr, nb), np.int32)
+            block_table = np.empty((nr, g.nb), np.int32)
             for i, r in enumerate(rows):
-                block_table[i, :n_shared] = handle.shared[r]
-                block_table[i, n_shared:] = tails[i]
-            if tail_tokens:
+                block_table[i, :g.n_shared] = \
+                    handle.shared[r][:g.n_shared]
+                block_table[i, g.n_shared:] = tails[i]
+            if g.tail_tokens:
                 src = np.asarray([handle.tails[r] for r in rows],
                                  np.int32)
-                self.k_pages, self.v_pages = S.fork_pages(
-                    self.k_pages, self.v_pages, jnp.asarray(src),
+                self.pages = S.fork_pages(
+                    self.pages, jnp.asarray(src),
                     jnp.asarray(tails[:, 0]))
                 self.stats.cow_forks += nr
-            out, self.k_pages, self.v_pages = S.decode_paged(
+            elif g.n_shared == 0:
+                src = np.stack([handle.shared[r]
+                                for r in rows]).reshape(-1)
+                self.pages = S.fork_pages(
+                    self.pages, jnp.asarray(src),
+                    jnp.asarray(tails.reshape(-1)))
+                self.stats.cow_forks += nr * g.nbp
+            out, self.pages = S.decode_paged(
                 self.cfg, params, jnp.asarray(handle.logits0[rows]),
-                self.k_pages, self.v_pages, jnp.asarray(block_table),
+                self.pages, jnp.asarray(block_table),
                 key, start_pos=s, max_new_tokens=max_new_tokens,
                 temperature=temperature, eos_id=eos_id, pad_id=pad_id,
                 row_keys=None if row_keys is None
@@ -670,35 +824,31 @@ class PagedKVServer:
     def stream_row_pages(self, prompt_len: int, lanes_per_row: int,
                          max_new_tokens: int) -> int:
         """Worst-case pages one step-loop row holds on this server:
-        shared prompt pages plus one private decode tail per lane
-        (probe samples and seeded ensemble decodes alike)."""
-        ps = self.page_size
-        nbp = pages_for(prompt_len, ps)
-        n_tail = pages_for(prompt_len + max_new_tokens, ps) \
-            - prompt_len // ps
-        return nbp + lanes_per_row * n_tail
+        the prompt pages (shared read-only for dense/quant, the
+        forkable snapshot for ring/lanes) plus each lane's private
+        pages (probe samples and seeded ensemble decodes alike)."""
+        g = self.row_geometry(prompt_len, max_new_tokens)
+        return g.nbp + lanes_per_row * g.n_tail
 
     def ensure_capacity_stream(self, max_rows: int, prompt_len: int,
                                lanes_per_row: int,
                                max_new_tokens: int) -> None:
         """Size the pool for the step-level loop's steady state:
         ``max_rows`` rows concurrently resident, each holding its
-        shared prompt pages and ``lanes_per_row`` private decode
-        tails — plus the prefix cache and a scratch region wide enough
-        for a *full* (prompt+decode) pad-row block table. Must run
-        before any pages are held (the step loop calls it at admission
-        of the first row)."""
-        ps = self.page_size
-        nbp = pages_for(prompt_len, ps)
-        nb = pages_for(prompt_len + max_new_tokens, ps)
+        prompt pages and ``lanes_per_row`` private lanes — plus the
+        prefix cache and a scratch region wide enough for a *full*
+        (prompt+decode) pad-row block table. Must run before any pages
+        are held (the step loop calls it at admission of the first
+        row)."""
+        g = self.row_geometry(prompt_len, max_new_tokens)
         need = (max_rows * self.stream_row_pages(
                     prompt_len, lanes_per_row, max_new_tokens)
-                + self.prefix_cache_entries * nbp
-                + nb)                                # scratch pages
+                + self.prefix_cache_entries * g.nbp
+                + g.nb)                              # scratch pages
         key = (max_rows, prompt_len, lanes_per_row, max_new_tokens)
         if (self._capacity_key is not None and self.pool is not None
                 and self.pool.num_pages >= need
                 and self._scratch is not None
-                and self._scratch.size >= nb):
+                and self._scratch.size >= g.nb):
             return
-        self._rebuild(need, nb, key)
+        self._rebuild(need, g.nb, key)

@@ -116,11 +116,10 @@ class _ShardView(PagedKVServer):
 
     Inherits every allocation/prefix-cache/stats method from
     ``PagedKVServer`` — the pool, scratch, and prefix cache are
-    genuinely shard-local — but never owns device arrays
-    (``k_pages``/``v_pages`` stay ``None``; the parent holds the one
-    global sharded array) and delegates capacity rebuilds to the
-    parent, which must resize every shard in lockstep to keep the
-    global array rectangular.
+    genuinely shard-local — but never owns device arrays (``pages``
+    stays ``None``; the parent holds the one global sharded pytree)
+    and delegates capacity rebuilds to the parent, which must resize
+    every shard in lockstep to keep the global arrays rectangular.
     """
 
     def __init__(self, parent: "ShardedPagedKVServer", index: int,
@@ -143,12 +142,30 @@ class ShardedPagedKVServer:
         self.cfg = cfg
         self.smesh = smesh
         self.page_size = int(page_size)
-        self.k_pages = None
-        self.v_pages = None
+        self.pages = None
         self.shards: List[_ShardView] = [
             _ShardView(self, i, cfg, page_size=page_size,
                        prefix_cache_entries=prefix_cache_entries)
             for i in range(smesh.n_shards)]
+        self.layout = self.shards[0].layout
+        if self.layout not in ("dense", "quant"):
+            # ring arenas and recurrent lanes stay single-device for
+            # now; ShardedStepLoopRunner routes those members to its
+            # dense fallback instead
+            raise ValueError(
+                f"config {cfg.name!r} resolves to layout "
+                f"{self.layout!r}; sharded paged serving supports "
+                "'dense' and 'quant' only")
+
+    @property
+    def k_pages(self):
+        """Global K code leaf (capacity probes read per-shard bytes off
+        this); ``self.pages`` is the full layout pytree."""
+        return None if self.pages is None else self.pages.get("k")
+
+    @property
+    def v_pages(self):
+        return None if self.pages is None else self.pages.get("v")
 
     @property
     def n_shards(self) -> int:
@@ -213,18 +230,30 @@ class ShardedPagedKVServer:
         shape = (self.n_shards, cfg.num_layers, num_pages,
                  self.page_size, cfg.num_kv_heads,
                  cfg.resolved_head_dim)
-        dt = jnp.dtype(cfg.dtype)
+        dt = jnp.int8 if self.layout == "quant" \
+            else jnp.dtype(cfg.dtype)
         if self.smesh.n_model > 1:
             # 2-D mesh: each model column holds only its kv-head
             # slice of every page — per-device page bytes shrink by
             # the model-axis size, which is exactly where the
             # capacity gain of tensor parallelism comes from
-            spec = P("data", None, None, None, "model", None)
+            code_spec = P("data", None, None, None, "model", None)
+            scale_spec = P("data", None, None, None, "model")
         else:
-            spec = P("data")
-        sharding = NamedSharding(self.smesh.mesh, spec)
-        self.k_pages = jax.device_put(jnp.zeros(shape, dt), sharding)
-        self.v_pages = jax.device_put(jnp.zeros(shape, dt), sharding)
+            code_spec = scale_spec = P("data")
+
+        def put(a, spec):
+            return jax.device_put(
+                a, NamedSharding(self.smesh.mesh, spec))
+
+        pages = {"k": put(jnp.zeros(shape, dt), code_spec),
+                 "v": put(jnp.zeros(shape, dt), code_spec)}
+        if self.layout == "quant":
+            pages["k_scale"] = put(jnp.zeros(shape[:-1], jnp.float32),
+                                   scale_spec)
+            pages["v_scale"] = put(jnp.zeros(shape[:-1], jnp.float32),
+                                   scale_spec)
+        self.pages = pages
 
     # -- fault simulation ----------------------------------------------
     def mark_shard_lost(self, index: int) -> None:

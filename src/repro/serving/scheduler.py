@@ -322,7 +322,9 @@ class ContinuousBatchingScheduler:
                  overlap: bool = True,
                  device_routing: bool = True,
                  kv_page_size: int = 8,
-                 kv_decode_tokens: int = 8):
+                 kv_decode_tokens: int = 8,
+                 kv_layout: str = "dense",
+                 kv_window: Optional[int] = None):
         self.acfg = acfg
         self.probe = probe
         self.ensemble = ensemble
@@ -336,9 +338,19 @@ class ContinuousBatchingScheduler:
         self.overlap = overlap
         self.device_routing = device_routing
         # virtual paged-KV budget model (the engine measures the real
-        # pool; the scheduler plans the same lifecycle in page units)
+        # pool; the scheduler plans the same lifecycle in page units).
+        # kv_layout prices the probe model's page layout: "dense" and
+        # "quant" share the dense geometry (quant shrinks bytes per
+        # page, not pages per row), "ring" caps a row's pages at the
+        # window, "lanes" prices one recurrent-state lane per stream
+        if kv_layout not in ("dense", "quant", "ring", "lanes"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if kv_layout == "ring" and not kv_window:
+            raise ValueError("kv_layout='ring' needs kv_window")
         self.kv_page_size = kv_page_size
         self.kv_decode_tokens = kv_decode_tokens
+        self.kv_layout = kv_layout
+        self.kv_window = kv_window
         self.metrics = PromCounters()
         self.stats = SchedulerStats()
 
@@ -550,6 +562,24 @@ class ContinuousBatchingScheduler:
                 help="escalated-row fill of the last decode wave in "
                      "each shape bucket")
 
+    def _row_page_plan(self, est_tokens: int) -> Tuple[int, int]:
+        """(prompt pages, per-stream private pages) for one row under
+        the planned layout — mirrors ``PagedKVServer.row_geometry``.
+        Ring rows never hold more than the window's worth of pages
+        however long the prompt runs (each stream rewrites its own
+        capped snapshot); a lanes row is one fixed-size
+        recurrent-state lane per stream regardless of length."""
+        ps, e = self.kv_page_size, est_tokens
+        if self.kv_layout == "ring":
+            capped = pages_for(
+                min(e + self.kv_decode_tokens, self.kv_window), ps)
+            return capped, capped
+        if self.kv_layout == "lanes":
+            return 1, 1
+        nbp = pages_for(e, ps)
+        tail = pages_for(e + self.kv_decode_tokens, ps) - e // ps
+        return nbp, tail
+
     def _account_kv_pages(self, probed: _ProbedBatch) -> None:
         """Virtual paged-KV lifecycle for one wave: prompt pages
         allocate once per cache-missed row (the N samples share them),
@@ -559,15 +589,13 @@ class ContinuousBatchingScheduler:
         ensemble wave completes (``_release_kv_pages``) — seeding the
         prefill of any ensemble member that is the probe model, which
         is counted as reused prefill tokens."""
-        ps = self.kv_page_size
         n = self.acfg.n_probe_samples
         alloc = tails = esc_shared = resolved = reused = 0
         for row in probed.rows:
             if row.cache_hit:
                 continue         # served from the probe cache: no KV
             e = row.request.est_tokens
-            nbp = pages_for(e, ps)
-            tail = pages_for(e + self.kv_decode_tokens, ps) - e // ps
+            nbp, tail = self._row_page_plan(e)
             alloc += nbp + n * tail
             tails += n * tail
             if row.mode == "single_agent":

@@ -246,11 +246,12 @@ class StepLoopRunner:
         servers; everything downstream goes through the per-row
         ``_probe_server``/``_member_server`` hooks."""
         engine = self.eng
-        self.probe_srv: PagedKVServer = engine._kv_server(engine.probe)
+        self.probe_srv: PagedKVServer = \
+            engine._stepped_server(engine.probe)
         if self.probe_srv is None:
             raise ValueError(
                 "run_stepped requires a paged-capable probe model "
-                "(models.transformer.paged_supported)")
+                "(models.transformer.resolve_layout)")
         self.page_size = self.probe_srv.page_size
         # one ensure_capacity_stream per distinct server; twin members
         # (same params as the probe) decode on the probe's server, so
@@ -258,7 +259,7 @@ class StepLoopRunner:
         self._servers: List[PagedKVServer] = [self.probe_srv]
         self._twins = 0
         for zm in engine.ensemble:
-            srv = engine._kv_server(zm)
+            srv = engine._stepped_server(zm)
             if srv is self.probe_srv and zm is not engine.probe:
                 self._twins += 1
             elif srv is not None and srv not in self._servers:
@@ -270,8 +271,11 @@ class StepLoopRunner:
         return self.probe_srv
 
     def _member_server(self, zm, row: _Row) -> Optional[PagedKVServer]:
-        """The server a (row, member) execution allocates against."""
-        return self.eng._kv_server(zm)
+        """The server a (row, member) execution allocates against.
+        The stepped engine speaks every page layout (dense, quant,
+        ring, lanes), so quantised-KV, sliding-window and recurrent
+        members all get paged servers here."""
+        return self.eng._stepped_server(zm)
 
     def _reuse_member(self, zm, row: _Row) -> bool:
         """Whether this member seeds its decode from the row's probe
@@ -286,12 +290,11 @@ class StepLoopRunner:
         return id(srv)
 
     # -- geometry ------------------------------------------------------
-    def _geometry(self, s: int):
-        ps = self.page_size
-        n_shared = s // ps
-        nbp = pages_for(s, ps)
-        nb = pages_for(s + self.max_new, ps)
-        return ps, n_shared, nbp, nb, nb - n_shared
+    def _geometry(self, srv, s: int):
+        """Per-layout page accounting for one row on ``srv`` (ring
+        rows cap their snapshot at the window; a lanes row is one
+        recurrent-state lane)."""
+        return srv.row_geometry(s, self.max_new)
 
     def _row_need(self, s: int) -> int:
         """Worst-case probe-server pages one row may still allocate."""
@@ -607,7 +610,7 @@ class StepLoopRunner:
     def _begin_prefill(self, row: _Row) -> None:
         srv = self._probe_server(row)
         s = row.s
-        ps, n_shared, nbp, _, _ = self._geometry(s)
+        g = self._geometry(srv, s)
         entry = srv._prefix_lookup(row.ids.tobytes())
         if entry is not None:
             srv.pool.retain(entry.shared)
@@ -619,33 +622,51 @@ class StepLoopRunner:
             row.from_cache = True
             row.prefill_pos = s
             srv.stats.prefill_tokens_reused_prefix += s
-            self._unreserve(row, nbp)
+            self._unreserve(row, g.nbp)
             self._begin_probe_decode(row)
             return
-        pages = srv._alloc_retry(nbp)
-        row.shared = pages[:n_shared]
-        row.tail = int(pages[n_shared]) if s % ps else None
-        self._unreserve(row, nbp)
+        pages = srv._alloc_retry(g.nbp)
+        if g.n_shared or g.tail_tokens:
+            row.shared = pages[:g.n_shared]
+            row.tail = int(pages[g.n_shared]) if g.tail_tokens \
+                else None
+        else:
+            # ring / lanes: the whole allocation is this row's private
+            # snapshot — there is no read-only shared prefix to alias
+            row.shared = pages
+            row.tail = None
+        self._unreserve(row, g.nbp)
 
     def _begin_probe_decode(self, row: _Row) -> None:
         srv = self._probe_server(row)
         s = row.s
-        ps, n_shared, _, nb, n_tail = self._geometry(s)
+        g = self._geometry(srv, s)
         row.sample_tails = srv._alloc_retry(
-            self.n * n_tail).reshape(self.n, n_tail)
-        self._unreserve(row, self.n * n_tail)
+            self.n * g.n_tail).reshape(self.n, g.n_tail)
+        self._unreserve(row, self.n * g.n_tail)
         keys = np.asarray(S.probe_row_keys(
             self.base_key, [row.admission], self.n))
         for j in range(self.n):
-            table = np.empty(nb, np.int32)
-            table[:n_shared] = row.shared
-            table[n_shared:] = row.sample_tails[j]
+            table = np.empty(g.nb, np.int32)
+            if g.n_shared:
+                table[:g.n_shared] = row.shared
+            table[g.n_shared:] = row.sample_tails[j]
             row.lanes.append(_Lane(block_table=table, row_key=keys[j],
                                    logits=row.logits0.copy(), tag=j))
-        if s % ps:
+        if g.tail_tokens:
             self._fork(srv, [row.tail] * self.n,
                        row.sample_tails[:, 0].tolist())
             srv.stats.cow_forks += self.n
+        elif g.n_shared == 0:
+            # ring / lanes: every page of the prompt snapshot is
+            # written during decode (ring wraps in place, lane state
+            # mutates every tick), so each probe sample forks the
+            # whole snapshot into its private pages
+            src = np.repeat(row.shared[None], self.n,
+                            axis=0).reshape(-1)
+            self._fork(srv, src.tolist(),
+                       row.sample_tails.reshape(-1).tolist())
+            srv.stats.cow_forks += self.n * g.nbp
         row.phase = "probe_decode"
         srv._sample_usage()
 
@@ -653,8 +674,8 @@ class StepLoopRunner:
     def _fork(self, srv: PagedKVServer, src: Sequence[int],
               dst: Sequence[int]) -> None:
         import jax.numpy as jnp
-        srv.k_pages, srv.v_pages = S.fork_pages(
-            srv.k_pages, srv.v_pages,
+        srv.pages = S.fork_pages(
+            srv.pages,
             jnp.asarray(np.asarray(src, np.int32)),
             jnp.asarray(np.asarray(dst, np.int32)))
 
@@ -669,16 +690,21 @@ class StepLoopRunner:
 
     # -- prefill step --------------------------------------------------
     def _prefill_groups(self):
-        """Group rows/member-execs needing a prefill chunk by
+        """Group rows/member-execs needing prefill work by
         (server, chunk_len, prompt_len). Per-row start offsets are
         *traced* in the chunk program, so rows at different prefill
         depths — freshly admitted rows next to members that escalated
-        ticks ago — share one device launch."""
+        ticks ago — share one device launch. Servers whose layout
+        cannot compose chunk-by-chunk (quant re-reads quantised
+        prefixes, ring wraps in place, lanes is one recurrent scan —
+        ``PagedKVServer.chunked``) group under the ``c == -1``
+        sentinel and prefill one-shot instead."""
         groups: Dict[tuple, list] = {}
         for row in self.active:
             if row.phase == "prefill":
                 srv = self._probe_server(row)
-                c = self.planner.chunk_span(row.prefill_pos, row.s)
+                c = self.planner.chunk_span(row.prefill_pos, row.s) \
+                    if srv.chunked else -1
                 key = (self._group_key(srv), c, row.s)
                 groups.setdefault(key, []).append((srv, row, None))
             elif row.phase == "ensemble_decode":
@@ -686,16 +712,19 @@ class StepLoopRunner:
                     if (mx.answer is None and not mx.reuse
                             and mx.lane is None and not mx.from_cache
                             and mx.prefill_pos < row.s):
-                        c = self.planner.chunk_span(mx.prefill_pos,
-                                                    row.s)
+                        c = self.planner.chunk_span(
+                            mx.prefill_pos, row.s) \
+                            if mx.server.chunked else -1
                         key = (self._group_key(mx.server), c, row.s)
                         groups.setdefault(key, []).append(
                             (mx.server, row, mx))
         return groups
 
-    def _run_prefill_group(self, key, items) -> None:
+    def _run_prefill_group(self, key, items) -> int:
         import jax.numpy as jnp
         _, c, s = key
+        if c < 0:
+            return self._run_one_shot_prefill_group(key, items)
         srv = items[0][0]
         ps = srv.page_size
         nbp = pages_for(s, ps)
@@ -716,9 +745,9 @@ class StepLoopRunner:
             else:
                 tables[i] = srv._scratch[:nbp]
         zm = self._server_model(srv)
-        lg, srv.k_pages, srv.v_pages = S.prefill_chunk_paged(
-            zm.cfg, zm.params, jnp.asarray(tokens), srv.k_pages,
-            srv.v_pages, jnp.asarray(tables), jnp.asarray(starts),
+        lg, srv.pages = S.prefill_chunk_paged(
+            zm.cfg, zm.params, jnp.asarray(tokens), srv.pages,
+            jnp.asarray(tables), jnp.asarray(starts),
             prompt_len=s)
         srv.stats.prefill_tokens_computed += bucket * c
         srv.stats.prefill_chunks += 1
@@ -740,12 +769,63 @@ class StepLoopRunner:
                 # eviction keys off tokens-saved-per-page)
                 srv._prefix_insert(row.ids.tobytes(), target.shared,
                                    target.tail, lg[i], tokens=s)
+        return 1
+
+    def _run_one_shot_prefill_group(self, key, items) -> int:
+        """One whole-prompt prefill launch for a non-chunkable layout
+        (quant / ring / lanes). The prompt math is the dense
+        ``T.prefill`` scan bit-for-bit — only the state parking
+        differs — and the virtual clock is charged the same
+        ``chunk_count(s)`` units the chunked path would pay, so
+        layout choice never moves the latency accounting."""
+        import jax.numpy as jnp
+        _, _, s = key
+        srv = items[0][0]
+        g = self._geometry(srv, s)
+        rows = sorted(items, key=lambda it: it[1].admission)
+        bucket = self.planner.decode_bucket(len(rows))
+        tokens = np.zeros((bucket, s), np.int32)
+        tables = np.empty((bucket, g.nbp), np.int32)
+        for i in range(bucket):
+            if i < len(rows):
+                srv_i, row, mx = rows[i]
+                target = mx if mx is not None else row
+                tokens[i] = row.ids
+                tables[i, :target.shared.size] = target.shared
+                if target.tail is not None:
+                    tables[i, -1] = target.tail
+            else:
+                # pad rows prefill zeros into scratch pages
+                tables[i] = srv._scratch[:g.nbp]
+        zm = self._server_model(srv)
+        if srv.layout == "lanes":
+            lg, srv.pages = S.prefill_lanes(
+                zm.cfg, zm.params, jnp.asarray(tokens), srv.pages,
+                jnp.asarray(tables[:, 0]))
+        else:
+            cl = g.cache_len if srv.layout == "ring" else None
+            lg, srv.pages = S.prefill_paged(
+                zm.cfg, zm.params, jnp.asarray(tokens), srv.pages,
+                jnp.asarray(tables), cache_len=cl)
+        srv.stats.prefill_tokens_computed += bucket * s
+        self.metrics.inc("acar_prefill_oneshot_total",
+                         model=srv.stats.model,
+                         help="one-shot prefill device programs run "
+                              "for non-chunkable page layouts")
+        self.stats.launches += 1
+        for i, (srv_i, row, mx) in enumerate(rows):
+            target = mx if mx is not None else row
+            target.prefill_pos = s
+            target.logits0 = lg[i]
+            srv._prefix_insert(row.ids.tobytes(), target.shared,
+                               target.tail, lg[i], tokens=s)
+        return self.planner.chunk_count(s)
 
     def _server_model(self, srv: PagedKVServer):
         if srv is self.probe_srv:
             return self.eng.probe
         for zm in self.eng.ensemble:
-            if self.eng._kv_server(zm) is srv:
+            if self.eng._stepped_server(zm) is srv:
                 return zm
         raise KeyError("server has no model")
 
@@ -814,7 +894,7 @@ class StepLoopRunner:
         import jax.numpy as jnp
         _, temperature, cache_len = key
         srv = items[0][0]
-        nb = pages_for(cache_len, srv.page_size)
+        nb = srv.table_width(cache_len - self.max_new, self.max_new)
         ordered = sorted(items, key=lambda it: (it[1].admission,
                                                 it[2].tag))
         lanes = [it[2] for it in ordered]
@@ -848,9 +928,9 @@ class StepLoopRunner:
         logits = jnp.stack([lanes[min(i, k - 1)].logits
                             for i in range(bucket)])
         zm = self._server_model(srv)
-        (emits, dones, next_logits, srv.k_pages,
-         srv.v_pages) = S.decode_megastep_rows(
-            zm.cfg, zm.params, logits, srv.k_pages, srv.v_pages,
+        (emits, dones, next_logits,
+         srv.pages) = S.decode_megastep_rows(
+            zm.cfg, zm.params, logits, srv.pages,
             jnp.asarray(tables), jnp.asarray(pos), jnp.asarray(keys),
             jnp.asarray(steps), jnp.asarray(done), n_ticks=kl,
             cache_len=cache_len, temperature=temperature,
@@ -990,11 +1070,17 @@ class StepLoopRunner:
                     srv_m.stats.prefill_tokens_reused_prefix += row.s
                     self._begin_member_decode(row, mx)
                 else:
-                    ps, n_shared, nbp, _, _ = self._geometry(row.s)
-                    pages = srv_m._alloc_retry(nbp)
-                    mx.shared = pages[:n_shared]
-                    mx.tail = int(pages[n_shared]) if row.s % ps \
-                        else None
+                    g = self._geometry(srv_m, row.s)
+                    pages = srv_m._alloc_retry(g.nbp)
+                    if g.n_shared or g.tail_tokens:
+                        mx.shared = pages[:g.n_shared]
+                        mx.tail = int(pages[g.n_shared]) \
+                            if g.tail_tokens else None
+                    else:
+                        # ring / lanes member: the whole allocation is
+                        # its private prompt snapshot
+                        mx.shared = pages
+                        mx.tail = None
             else:
                 # non-paged member: dense one-shot fallback (still
                 # row-keyed, so tokens match the wave path's dense
@@ -1009,19 +1095,26 @@ class StepLoopRunner:
     def _begin_member_decode(self, row: _Row, mx: _MemberExec) -> None:
         srv = self._probe_server(row) if mx.reuse else mx.server
         s = row.s
-        ps, n_shared, _, nb, n_tail = self._geometry(s)
-        tails = srv._alloc_retry(n_tail)
+        g = self._geometry(srv, s)
+        tails = srv._alloc_retry(g.n_tail)
         if mx.reuse:
-            self._unreserve(row, n_tail)
+            self._unreserve(row, g.n_tail)
         mx.tails = tails
-        table = np.empty(nb, np.int32)
+        table = np.empty(g.nb, np.int32)
         shared = row.shared if mx.reuse else mx.shared
         canon_tail = row.tail if mx.reuse else mx.tail
-        table[:n_shared] = shared
-        table[n_shared:] = tails
-        if s % ps:
+        if g.n_shared:
+            table[:g.n_shared] = shared
+        table[g.n_shared:] = tails
+        if g.tail_tokens:
             self._fork(srv, [canon_tail], [int(tails[0])])
             srv.stats.cow_forks += 1
+        elif g.n_shared == 0:
+            # ring / lanes member: fork the whole prompt snapshot
+            # into the decode lane's private pages
+            self._fork(srv, [int(p) for p in shared],
+                       [int(p) for p in tails])
+            srv.stats.cow_forks += g.nbp
         key = np.asarray(S.member_row_keys(
             self.base_key, [row.admission], mx.member))[0]
         logits0 = row.logits0 if mx.reuse else mx.logits0
@@ -1139,8 +1232,11 @@ class StepLoopRunner:
             self._routed_this_tick = 0
             for key, items in sorted(self._prefill_groups().items(),
                                      key=lambda kv: kv[0][1:]):
-                self._run_prefill_group(key, items)
-                per_server[key[0]] = per_server.get(key[0], 0) + 1
+                # a chunked launch charges one tick; a one-shot launch
+                # (quant/ring/lanes) charges its dense-equivalent
+                # chunk count, so layout choice never skews latency
+                cost = self._run_prefill_group(key, items)
+                per_server[key[0]] = per_server.get(key[0], 0) + cost
             for key, items in sorted(self._decode_groups().items(),
                                      key=lambda kv: (kv[0][1],
                                                      kv[0][2])):
@@ -1253,12 +1349,12 @@ class ShardedStepLoopRunner(StepLoopRunner):
 
     # -- server topology -----------------------------------------------
     def _init_servers(self) -> None:
-        from repro.models.transformer import paged_supported
+        from repro.models.transformer import resolve_layout
         eng = self.eng
-        if not paged_supported(eng.probe.cfg):
+        if resolve_layout(eng.probe.cfg) not in ("dense", "quant"):
             raise ValueError(
-                "sharded serving requires a paged-capable probe model "
-                "(models.transformer.paged_supported)")
+                "sharded serving requires a dense- or quant-paged "
+                "probe model (models.transformer.resolve_layout)")
         self._sharded: Dict[int, object] = {}      # id(params) -> server
         self._model_by_group: Dict[int, object] = {}
         self._params_repl: Dict[int, dict] = {}
@@ -1266,8 +1362,10 @@ class ShardedStepLoopRunner(StepLoopRunner):
         self._member_sharded: List[object] = []
         self._twins = 0
         for zm in eng.ensemble:
-            if not paged_supported(zm.cfg):
-                continue                       # dense one-shot fallback
+            if resolve_layout(zm.cfg) not in ("dense", "quant"):
+                # ring / lanes members stay single-device for now:
+                # dense one-shot fallback (bit-identical tokens)
+                continue
             if zm.params is eng.probe.params:
                 if zm is not eng.probe:
                     self._twins += 1
@@ -1306,9 +1404,9 @@ class ShardedStepLoopRunner(StepLoopRunner):
         return self.probe_sharded.shards[row.shard]
 
     def _member_server(self, zm, row: _Row):
-        from repro.models.transformer import paged_supported
-        if not paged_supported(zm.cfg):
-            return None
+        from repro.models.transformer import resolve_layout
+        if resolve_layout(zm.cfg) not in ("dense", "quant"):
+            return None                    # dense one-shot fallback
         srv = self._sharded_server(zm)
         home = row.shard
         if self._reuse_member(zm, row):
@@ -1323,8 +1421,8 @@ class ShardedStepLoopRunner(StepLoopRunner):
         # can, steal to the freest such shard (lowest index breaks
         # ties) — deterministic, since free-page counts are a pure
         # function of the admission-ordered allocation history.
-        ps, n_shared, nbp, nb, n_tail = self._geometry(row.s)
-        need = nbp + n_tail
+        g = self._geometry(srv.shards[home], row.s)
+        need = g.nbp + g.n_tail
         home_ok = (home not in self._lost
                    and srv.shards[home].pool is not None
                    and srv.shards[home].pool.free_pages >= need)
@@ -1542,13 +1640,14 @@ class ShardedStepLoopRunner(StepLoopRunner):
         dst_a = src_a.copy()
         src_a[srv.index] = src
         dst_a[srv.index] = dst
-        parent.k_pages, parent.v_pages = S.fork_pages_sharded(
-            parent.k_pages, parent.v_pages, src_a, dst_a,
-            mesh=self.smesh.mesh)
+        parent.pages = S.fork_pages_sharded(
+            parent.pages, src_a, dst_a, mesh=self.smesh.mesh)
 
     # -- device programs: one shard_map'd launch per group -------------
-    def _run_prefill_group(self, key, items) -> None:
+    def _run_prefill_group(self, key, items) -> int:
         _, c, s = key
+        if c < 0:
+            return self._run_one_shot_prefill_group(key, items)
         parent = items[0][0].parent
         nsh = parent.n_shards
         nbp = pages_for(s, self.page_size)
@@ -1579,10 +1678,9 @@ class ShardedStepLoopRunner(StepLoopRunner):
                     tables[k, i] = scratch
         zm = self._model_by_group[id(parent)]
         prm = self._params_repl[id(parent)]
-        lg, parent.k_pages, parent.v_pages = \
-            S.prefill_chunk_paged_sharded(
-                zm.cfg, prm, tokens, parent.k_pages, parent.v_pages,
-                tables, starts, prompt_len=s, mesh=self.smesh.mesh)
+        lg, parent.pages = S.prefill_chunk_paged_sharded(
+            zm.cfg, prm, tokens, parent.pages,
+            tables, starts, prompt_len=s, mesh=self.smesh.mesh)
         for sv in parent.shards:
             sv.stats.prefill_tokens_computed += bucket * c
             sv.stats.prefill_chunks += 1
@@ -1604,13 +1702,69 @@ class ShardedStepLoopRunner(StepLoopRunner):
                     srv._prefix_insert(row.ids.tobytes(),
                                        target.shared, target.tail,
                                        target.logits0, tokens=s)
+        return 1
+
+    def _run_one_shot_prefill_group(self, key, items) -> int:
+        """Whole-prompt prefill for the quant layout, every shard in
+        one shard_map'd launch (only dense/quant reach the sharded
+        runner, and dense always chunks)."""
+        import jax.numpy as jnp
+        _, _, s = key
+        parent = items[0][0].parent
+        nsh = parent.n_shards
+        g = self._geometry(items[0][0], s)
+        per: List[list] = [[] for _ in range(nsh)]
+        for srv, row, mx in items:
+            per[srv.index].append((srv, row, mx))
+        for k in range(nsh):
+            per[k].sort(key=lambda it: it[1].admission)
+        bucket = self.planner.decode_bucket(
+            max(len(p) for p in per))
+        tokens = np.zeros((nsh, bucket, s), np.int32)
+        tables = np.empty((nsh, bucket, g.nbp), np.int32)
+        for k in range(nsh):
+            scratch = parent.shards[k]._scratch[:g.nbp]
+            for i in range(bucket):
+                if i < len(per[k]):
+                    _, row, mx = per[k][i]
+                    target = mx if mx is not None else row
+                    tokens[k, i] = row.ids
+                    tables[k, i, :target.shared.size] = target.shared
+                    if target.tail is not None:
+                        tables[k, i, -1] = target.tail
+                else:
+                    # pad rows prefill zeros into scratch pages
+                    tables[k, i] = scratch
+        zm = self._model_by_group[id(parent)]
+        prm = self._params_repl[id(parent)]
+        lg, parent.pages = S.prefill_paged_sharded(
+            zm.cfg, prm, jnp.asarray(tokens), parent.pages,
+            jnp.asarray(tables), mesh=self.smesh.mesh)
+        for sv in parent.shards:
+            sv.stats.prefill_tokens_computed += bucket * s
+        self.metrics.inc("acar_prefill_oneshot_total",
+                         model=parent.model_name,
+                         help="one-shot prefill device programs run "
+                              "for non-chunkable page layouts")
+        self.stats.launches += 1
+        lg_local = _shard_rows(lg)
+        for k in range(nsh):
+            for i, (srv, row, mx) in enumerate(per[k]):
+                target = mx if mx is not None else row
+                target.prefill_pos = s
+                target.logits0 = lg_local[k][0, i]
+                srv._prefix_insert(row.ids.tobytes(), target.shared,
+                                   target.tail, target.logits0,
+                                   tokens=s)
+        return self.planner.chunk_count(s)
 
     def _run_decode_group(self, key, items) -> int:
         import jax.numpy as jnp
         _, temperature, cache_len = key
         parent = items[0][0].parent
         nsh = parent.n_shards
-        nb = pages_for(cache_len, self.page_size)
+        nb = items[0][0].table_width(cache_len - self.max_new,
+                                     self.max_new)
         penalty = 0
         if self.injector is not None:
             penalty = self._member_fault_gate(items)
@@ -1684,9 +1838,9 @@ class ShardedStepLoopRunner(StepLoopRunner):
             pieces)
         zm = self._model_by_group[id(parent)]
         prm = self._params_repl[id(parent)]
-        (emits, dones, next_logits, parent.k_pages,
-         parent.v_pages) = S.decode_megastep_rows_sharded(
-            zm.cfg, prm, logits, parent.k_pages, parent.v_pages,
+        (emits, dones, next_logits,
+         parent.pages) = S.decode_megastep_rows_sharded(
+            zm.cfg, prm, logits, parent.pages,
             jnp.asarray(tables), jnp.asarray(pos), jnp.asarray(keys),
             jnp.asarray(steps), jnp.asarray(done), n_ticks=kl,
             cache_len=cache_len, temperature=temperature,

@@ -44,3 +44,17 @@ def forced_devices():
                 f"(exit {proc.returncode}):\n{proc.stderr[-4000:]}")
         return proc.stdout
     return run
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Long single-process runs of the full suite accumulate every
+    module's compiled XLA executables; on CPU that eventually crashes
+    the compiler's JIT allocator mid-suite (observed as a segfault in
+    backend_compile around the 300-test mark). Dropping the caches at
+    module teardown bounds the live-executable footprint; modules
+    recompile their own shapes anyway, so the only cost is losing
+    cross-module cache hits."""
+    yield
+    import jax
+    jax.clear_caches()

@@ -1528,6 +1528,264 @@ def run_degraded_fleet(
         quarantined_members=quarantined)
 
 
+# ----------------------------------------------------------------------
+# heterogeneous paged-state equivalence (quant KV pages, recurrent-state
+# lanes, ring pages — mixed fleet vs the dense-cache baseline)
+# ----------------------------------------------------------------------
+def hetero_zoo(seed: int = 0):
+    """Quant-KV probe + heterogeneous ensemble: a Mamba member paging
+    its conv+SSM state as recurrent lanes, a sliding-window member on
+    window-capped ring pages, and a probe-reuse member on int8 code
+    pages — every page layout the stepped engine serves, in one
+    arena. The probe-reuse member shares the probe's params, so quant
+    probe pages genuinely seed ensemble decode."""
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.data import tokenizer as tok
+    from repro.models import params as params_lib
+    from repro.serving import ZooModel
+
+    base = get_config("smollm-135m", reduced=True).replace(
+        vocab_size=tok.VOCAB_SIZE, dtype="float32",
+        tie_embeddings=True)
+    mamba = get_config("falcon-mamba-7b", reduced=True).replace(
+        vocab_size=tok.VOCAB_SIZE, dtype="float32",
+        tie_embeddings=True)
+    cfgs = [("probe-q8", base.replace(kv_quant=True)),
+            ("m1-mamba", mamba),
+            ("m2-swa", base.replace(window=16))]
+    zoo = [ZooModel(name=n, cfg=c,
+                    params=params_lib.init_params(
+                        c, jax.random.PRNGKey(seed + i)))
+           for i, (n, c) in enumerate(cfgs)]
+    probe = zoo[0]
+    ensemble = [zoo[1], zoo[2],
+                ZooModel(name="m3-probe", cfg=probe.cfg,
+                         params=probe.params)]
+    return probe, ensemble
+
+
+def mamba_probe_zoo(seed: int = 0):
+    """All-recurrent probe path: a Mamba probe (every probe row lives
+    on recurrent-state lanes — prefill, N-sample fork, retirement)
+    plus a dense member and a lane-reusing probe twin."""
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.data import tokenizer as tok
+    from repro.models import params as params_lib
+    from repro.serving import ZooModel
+
+    base = get_config("smollm-135m", reduced=True).replace(
+        vocab_size=tok.VOCAB_SIZE, dtype="float32",
+        tie_embeddings=True)
+    mamba = get_config("falcon-mamba-7b", reduced=True).replace(
+        vocab_size=tok.VOCAB_SIZE, dtype="float32",
+        tie_embeddings=True)
+    probe = ZooModel(name="probe-mamba", cfg=mamba,
+                     params=params_lib.init_params(
+                         mamba, jax.random.PRNGKey(seed)))
+    ensemble = [
+        ZooModel(name="m1-dense", cfg=base,
+                 params=params_lib.init_params(
+                     base, jax.random.PRNGKey(seed + 1))),
+        ZooModel(name="m2-mamba", cfg=mamba,
+                 params=params_lib.init_params(
+                     mamba, jax.random.PRNGKey(seed + 2))),
+        ZooModel(name="m3-probe", cfg=probe.cfg,
+                 params=probe.params)]
+    return probe, ensemble
+
+
+@dataclass
+class HeteroReport:
+    """Heterogeneous paged state must be an allocation strategy, not a
+    semantic change: every leg — stepped loop over mixed layouts, the
+    quant-paged wave server, the data-parallel mesh, kill->recover,
+    and the all-Mamba probe fleet — must match the dense-cache wave
+    baseline on every judge-visible output and chain head."""
+    n_tasks: int
+    layouts: Dict[str, str]             # model name -> page layout
+    mismatches: Dict[str, int]          # leg -> mismatch count vs base
+    chains_ok: Dict[str, bool]
+    heads_equal: Dict[str, bool]
+    crashed: bool                       # crash leg really got killed
+    restored_rows: int
+    step_ticks: int
+    quant_pages_highwater: int          # probe's int8 page high-water
+    lanes_pages_highwater: int          # mamba-probe fleet lane usage
+    ring_table_width: int               # SWA member, window-capped
+    dense_table_width: int              # same row without the cap
+
+    @property
+    def ok(self) -> bool:
+        return (all(v == 0 for v in self.mismatches.values())
+                and all(self.chains_ok.values())
+                and all(self.heads_equal.values())
+                and self.crashed
+                and self.quant_pages_highwater > 0
+                and self.lanes_pages_highwater > 0
+                and self.ring_table_width < self.dense_table_width)
+
+    def summary(self) -> str:
+        legs = " ".join(
+            f"{leg}[mismatches={self.mismatches[leg]} "
+            f"chains_ok={self.chains_ok[leg]} "
+            f"heads_equal={self.heads_equal[leg]}]"
+            for leg in self.mismatches)
+        lay = ",".join(f"{k}:{v}"
+                       for k, v in sorted(self.layouts.items()))
+        return (f"tasks={self.n_tasks} layouts=[{lay}] "
+                f"ticks={self.step_ticks} "
+                f"quant_pages_hw={self.quant_pages_highwater} "
+                f"lanes_pages_hw={self.lanes_pages_highwater} "
+                f"ring_width={self.ring_table_width}/"
+                f"{self.dense_table_width} "
+                f"crashed={self.crashed} restored={self.restored_rows} "
+                f"{legs} "
+                f"=> {'EQUIVALENT' if self.ok else 'DIVERGENT'}")
+
+
+def run_hetero_equivalence(
+        tasks=None, n_tasks: int = 200, seed: int = 0,
+        batch_size: int = 8, max_new_tokens: int = 6,
+        prompt_chars: int = 24, chunk_tokens: int = 8,
+        n_shards: int = 4, probe_temperature: float = 0.9,
+        duplicate_rate: float = 0.15,
+        workdir: Optional[Path] = None,
+        route_fn=None) -> HeteroReport:
+    """Serve the same duplicate-bearing long-prompt stream through a
+    heterogeneous fleet (quant-KV probe, Mamba lanes member, SWA ring
+    member, quant probe-reuse member) on every execution substrate and
+    compare each against the dense-cache wave baseline: the stepped
+    loop (mixed page layouts in one tick), the quant-paged wave
+    server, the ``data=n_shards`` mesh (quant rows sharded, ring/lanes
+    members on the dense fallback), a kill->journal-recover leg, and
+    an all-Mamba-probe fleet (every probe row prefilled, forked N
+    ways and retired on recurrent-state lanes). Page layout must be
+    an allocation strategy, not a semantic change."""
+    import jax
+
+    from repro.configs.acar import ACARConfig
+    from repro.serving import BatchedACAREngine, MicroBatchPolicy
+    from repro.serving.faults import FaultPlan, SimulatedCrash
+    from repro.serving.journal import StepJournal
+    from repro.serving.kv_pool import pages_for
+
+    if n_shards and len(jax.devices()) < n_shards:
+        raise RuntimeError(
+            f"hetero equivalence needs {n_shards} devices, have "
+            f"{len(jax.devices())}; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards}")
+    if workdir is None:
+        workdir = Path(tempfile.mkdtemp(prefix="acar-hetero-"))
+    workdir = Path(workdir)
+    if tasks is None:
+        tasks = long_prompt_workload(n_tasks, prompt_chars, seed=seed,
+                                     duplicate_rate=duplicate_rate)
+    tasks = list(tasks)
+
+    probe, ensemble = hetero_zoo(seed=seed)
+    member_names = [m.name for m in ensemble]
+    acfg = ACARConfig(probe_temperature=probe_temperature, seed=seed)
+    policy = MicroBatchPolicy(max_batch_size=batch_size,
+                              max_batch_tokens=1 << 20)
+
+    def _engine(p, e, paged=True):
+        return BatchedACAREngine(
+            acfg, p, e, max_new_tokens=max_new_tokens, paged=paged,
+            route_fn=route_fn)
+
+    # the baseline is the *dense* cache path: dense int8 KV for the
+    # quant models, the dense SSM cache for the Mamba member, the
+    # dense ring buffer for the SWA member — paged must match it
+    # bit-for-bit
+    base = _engine(probe, ensemble, paged=False).run_queued(
+        tasks, policy)
+
+    mismatches: Dict[str, int] = {}
+    chains_ok: Dict[str, bool] = {}
+    heads_equal: Dict[str, bool] = {}
+
+    def _compare(leg, ref, res, names):
+        (sig_mm, mode_mm, ans_mm, mem_mm, hash_mm, audit_a,
+         audit_b) = _compare_engine_runs(
+            tasks, ref, res, names, workdir,
+            f"hetero-{leg}", (f"dense-vs-{leg}", leg))
+        mismatches[leg] = (len(sig_mm) + len(mode_mm) + len(ans_mm)
+                          + len(mem_mm) + len(hash_mm))
+        chains_ok[leg] = bool(audit_a["ok"]) and bool(audit_b["ok"])
+        heads_equal[leg] = audit_a["head"] == audit_b["head"]
+
+    # leg 1: stepped loop, every layout live in the same ticks
+    step_eng = _engine(probe, ensemble)
+    res_s = step_eng.run_stepped(tasks, policy,
+                                 chunk_tokens=chunk_tokens)
+    _compare("step", base, res_s, member_names)
+
+    # leg 2: wave loop on the quant-paged server (int8 code pages +
+    # scale planes through probe_wave/reuse_decode)
+    res_w = _engine(probe, ensemble).run_queued(tasks, policy)
+    _compare("wave-paged", base, res_w, member_names)
+
+    # leg 3: data-parallel mesh — quant probe rows sharded over
+    # per-shard pools; ring/lanes members take the dense fallback
+    if n_shards:
+        res_n = _engine(probe, ensemble).run_stepped(
+            tasks, policy, chunk_tokens=chunk_tokens,
+            data_shards=n_shards)
+        _compare(f"data{n_shards}", base, res_n, member_names)
+
+    # leg 4: kill the journaled hetero run at 3/4, recover on a fresh
+    # engine — recurrent lanes and ring pages must rebuild from the
+    # journal exactly like dense pages do
+    tick = max(1, res_s.step.ticks * 3 // 4)
+    jp = workdir / "journal-hetero.jsonl"
+    crashed = False
+    try:
+        _engine(probe, ensemble).run_stepped(
+            tasks, policy, chunk_tokens=chunk_tokens, journal_path=jp,
+            faults=FaultPlan.crash_at(tick))
+    except SimulatedCrash:
+        crashed = True
+    StepJournal.load(jp)
+    res_r = _engine(probe, ensemble).recover(
+        tasks, policy, journal_path=jp, chunk_tokens=chunk_tokens)
+    _compare(f"recovered@{tick}", base, res_r, member_names)
+
+    # leg 5: all-Mamba probe fleet — probe prefill, N-sample fork and
+    # retirement all live on recurrent-state lanes
+    mprobe, mensemble = mamba_probe_zoo(seed=seed)
+    mnames = [m.name for m in mensemble]
+    mbase = _engine(mprobe, mensemble, paged=False).run_queued(
+        tasks, policy)
+    meng = _engine(mprobe, mensemble)
+    res_m = meng.run_stepped(tasks, policy, chunk_tokens=chunk_tokens)
+    _compare("mamba-step", mbase, res_m, mnames)
+
+    from repro.data import tokenizer as tok
+    from repro.models.transformer import resolve_layout
+    s = int(tok.encode_aligned([tasks[0].text]).shape[1])
+    layouts = {m.name: (resolve_layout(m.cfg) or "dense*")
+               for m in [probe] + ensemble}
+    swa = ensemble[1]
+    srv_ring = step_eng._stepped_server(swa)
+    ring_w = srv_ring.table_width(s, max_new_tokens)
+    dense_w = pages_for(s + max_new_tokens, srv_ring.page_size)
+    return HeteroReport(
+        n_tasks=len(tasks), layouts=layouts,
+        mismatches=mismatches, chains_ok=chains_ok,
+        heads_equal=heads_equal, crashed=crashed,
+        restored_rows=res_r.restored_rows,
+        step_ticks=res_s.step.ticks,
+        quant_pages_highwater=step_eng.kv_stats()[
+            probe.name].pages_highwater,
+        lanes_pages_highwater=meng.kv_stats()[
+            mprobe.name].pages_highwater,
+        ring_table_width=ring_w, dense_table_width=dense_w)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tasks", type=int, default=200)
@@ -1603,12 +1861,21 @@ def main(argv=None) -> int:
                     help="data-axis size of the 2-D mesh check")
     ap.add_argument("--mesh-model", type=int, default=2,
                     help="model-axis size of the 2-D mesh check")
+    ap.add_argument("--hetero", action="store_true",
+                    help="also check heterogeneous-paged-state "
+                         "equivalence (quant KV pages, recurrent-state"
+                         " lanes, ring pages; stepped/wave/sharded/"
+                         "crash legs vs the dense-cache baseline)")
+    ap.add_argument("--hetero-only", action="store_true",
+                    help="run only the heterogeneous-layout check "
+                         "(implies --hetero; the fast CI job's mode)")
     ap.add_argument("--chunk-tokens", type=int, default=8)
     args = ap.parse_args(argv)
 
     only = (args.paged_only or args.step_only or args.sharded_only
             or args.megastep_only or args.crash_only
-            or args.faults_only or args.mesh2d_only)
+            or args.faults_only or args.mesh2d_only
+            or args.hetero_only)
     ok = True
     if not only:
         stream = generate_workload(WorkloadConfig(
@@ -1677,6 +1944,15 @@ def main(argv=None) -> int:
             duplicate_rate=args.duplicate_rate)
         print(m2report.summary())
         ok = ok and m2report.ok
+    if args.hetero or args.hetero_only:
+        hreport = run_hetero_equivalence(
+            n_tasks=args.tasks, seed=args.seed,
+            batch_size=args.batch_size,
+            chunk_tokens=args.chunk_tokens,
+            n_shards=args.shards,
+            duplicate_rate=args.duplicate_rate)
+        print(hreport.summary())
+        ok = ok and hreport.ok
     if args.faults or args.faults_only:
         freport = run_degraded_fleet(
             n_tasks=args.tasks, seed=args.seed,
@@ -1703,7 +1979,8 @@ def _maybe_reexec_for_sharding() -> None:
     if not ({"--sharded", "--sharded-only", "--megastep",
              "--megastep-only", "--crash", "--crash-only",
              "--crash-at", "--faults", "--faults-only",
-             "--mesh2d", "--mesh2d-only"} & set(argv)):
+             "--mesh2d", "--mesh2d-only", "--hetero",
+             "--hetero-only"} & set(argv)):
         return
     # the 2-D check needs data*model devices; force 8 so the default
     # (2, 2) mesh and any reasonable override both fit

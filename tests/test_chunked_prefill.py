@@ -72,25 +72,29 @@ def _prompts(batch: int, length: int, seed: int = 0) -> np.ndarray:
 
 def _oneshot(cfg, prm, ids, table):
     k, v, _, _ = _paged_setup(cfg, ids.shape[0], ids.shape[1])
-    fn = jax.jit(T.prefill_paged, static_argnames=("cfg",))
-    lg, k, v = fn(cfg, prm, jnp.asarray(ids), k, v, jnp.asarray(table))
-    return np.asarray(lg), np.asarray(k), np.asarray(v)
+    fn = jax.jit(T.prefill_paged,
+                 static_argnames=("cfg", "cache_len"))
+    lg, pages = fn(cfg, prm, jnp.asarray(ids), {"k": k, "v": v},
+                   jnp.asarray(table))
+    return (np.asarray(lg), np.asarray(pages["k"]),
+            np.asarray(pages["v"]))
 
 
 def _chunked(cfg, prm, ids, table, chunk: int, garbage_seed=1):
     b, s = ids.shape
     k, v, _, _ = _paged_setup(cfg, b, s, garbage_seed=garbage_seed)
+    pages = {"k": k, "v": v}
     logits = np.zeros((b, cfg.vocab_size), np.float32)
     start = 0
     while start < s:
         c = min(chunk, s - start)
         starts = jnp.full((b,), start, jnp.int32)
-        lg, k, v = prefill_chunk_paged(
-            cfg, prm, jnp.asarray(ids[:, start:start + c]), k, v,
+        lg, pages = prefill_chunk_paged(
+            cfg, prm, jnp.asarray(ids[:, start:start + c]), pages,
             jnp.asarray(table), starts, prompt_len=s)
         start += c
     logits[:] = np.asarray(lg)
-    return logits, np.asarray(k), np.asarray(v)
+    return (logits, np.asarray(pages["k"]), np.asarray(pages["v"]))
 
 
 def _written_kv(pages, table, prompt_len, cfg):
@@ -165,18 +169,17 @@ def test_mixed_depth_rows_share_one_program(tiny_model):
     # row 1 lagging row 0 by one chunk
     lg = None
     pos = np.array([0, 0], np.int32)
-    lgA, kA, vA = None, k, v
-    k0, v0 = k, v
-    _, k0, v0 = prefill_chunk_paged(
-        cfg, prm, jnp.asarray(ids[:1, 0:c]), k0, v0,
+    pages = {"k": k, "v": v}
+    _, pages = prefill_chunk_paged(
+        cfg, prm, jnp.asarray(ids[:1, 0:c]), pages,
         jnp.asarray(table[:1]), jnp.asarray([0], jnp.int32),
         prompt_len=s)
     pos[0] = c
     while pos.min() < s:
         rows = [r for r in range(2) if pos[r] < s]
         toks = np.stack([ids[r, pos[r]:pos[r] + c] for r in rows])
-        lg, k0, v0 = prefill_chunk_paged(
-            cfg, prm, jnp.asarray(toks), k0, v0,
+        lg, pages = prefill_chunk_paged(
+            cfg, prm, jnp.asarray(toks), pages,
             jnp.asarray(table[rows]),
             jnp.asarray(pos[rows], jnp.int32), prompt_len=s)
         for r in rows:
@@ -184,7 +187,7 @@ def test_mixed_depth_rows_share_one_program(tiny_model):
     lg1, k1, _ = _oneshot(cfg, prm, ids, table)
     np.testing.assert_array_equal(
         _written_kv(k1, table, s, cfg),
-        _written_kv(np.asarray(k0), table, s, cfg))
+        _written_kv(np.asarray(pages["k"]), table, s, cfg))
 
 
 def test_chunk_kernel_matches_oracle():

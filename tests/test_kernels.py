@@ -178,6 +178,110 @@ def test_fused_swiglu_sweep(t, d, f, bt, bf, dtype):
 
 
 # ----------------------------------------------------------------------
+# int8 quant decode (dense cache)
+# ----------------------------------------------------------------------
+def _quantized(key, shape):
+    from repro.models.attention import quantize_kv
+    x = jax.random.normal(key, shape)
+    return quantize_kv(x)
+
+
+@pytest.mark.parametrize("b,h,kv,dk,s,blk", [
+    (1, 4, 4, 64, 256, 128),      # MHA
+    (2, 8, 2, 128, 512, 128),     # GQA
+    (2, 8, 1, 64, 512, 256),      # MQA
+    (3, 6, 3, 32, 384, 384),      # non-divisible block -> full
+])
+def test_decode_attention_quant_sweep(b, h, kv, dk, s, blk):
+    from repro.kernels.decode_attention_quant import (
+        decode_attention_quant as kernel)
+    from repro.models.attention import decode_attention_quant as oracle
+    ks = jax.random.split(jax.random.PRNGKey(b * s + h), 3)
+    q = jax.random.normal(ks[0], (b, h, dk))
+    kq, kscale = _quantized(ks[1], (b, s, kv, dk))
+    vq, vscale = _quantized(ks[2], (b, s, kv, dk))
+    length = jnp.int32(s - s // 4)
+    out = kernel(q, kq, kscale, vq, vscale, length, block_s=blk,
+                 interpret=True)
+    want = oracle(q, kq, kscale, vq, vscale, jnp.arange(s),
+                  length - 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_quant_respects_length():
+    """Stale int8 codes and scales past `length` (recycled cache rows)
+    must not affect the output — the kernel masks by position, not by
+    page contents."""
+    from repro.kernels.decode_attention_quant import (
+        decode_attention_quant as kernel)
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    q = jax.random.normal(ks[0], (1, 4, 64))
+    kq, kscale = _quantized(ks[1], (1, 256, 2, 64))
+    vq, vscale = _quantized(ks[2], (1, 256, 2, 64))
+    out1 = kernel(q, kq, kscale, vq, vscale, jnp.int32(100),
+                  block_s=128, interpret=True)
+    kq2 = kq.at[:, 100:].set(127)
+    ks2 = kscale.at[:, 100:].set(1e6)
+    out2 = kernel(q, kq2, ks2, vq, vscale, jnp.int32(100),
+                  block_s=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+# ----------------------------------------------------------------------
+# int8 quant decode (paged cache)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,kv,dk,ps,nb", [
+    (1, 4, 4, 64, 16, 4),         # MHA
+    (2, 8, 2, 128, 8, 6),         # GQA
+    (2, 8, 1, 64, 32, 3),         # MQA
+    (3, 6, 3, 32, 8, 5),
+])
+def test_paged_decode_attention_quant_sweep(b, h, kv, dk, ps, nb):
+    from repro.kernels.paged_decode_attention_quant import (
+        paged_decode_attention_quant as kernel)
+    ks = jax.random.split(jax.random.PRNGKey(b * ps + nb), 3)
+    n_pages = b * nb + 2
+    q = jax.random.normal(ks[0], (b, h, dk))
+    kq, kscale = _quantized(ks[1], (n_pages, ps, kv, dk))
+    vq, vscale = _quantized(ks[2], (n_pages, ps, kv, dk))
+    table = jnp.arange(b * nb, dtype=jnp.int32).reshape(b, nb)
+    lengths = jnp.int32(nb * ps) - jnp.arange(b, dtype=jnp.int32) * 5 \
+        - 1
+    out = kernel(q, kq, kscale, vq, vscale, table, lengths,
+                 interpret=True)
+    want = ref.paged_decode_attention_quant_ref(
+        q, kq, kscale, vq, vscale, table, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_decode_attention_quant_stale_pages_masked():
+    """Bytes past each row's length — including whole recycled pages
+    the block table still references — must not affect the output."""
+    from repro.kernels.paged_decode_attention_quant import (
+        paged_decode_attention_quant as kernel)
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    b, h, kv, dk, ps, nb = 2, 4, 2, 64, 8, 4
+    q = jax.random.normal(ks[0], (b, h, dk))
+    kq, kscale = _quantized(ks[1], (b * nb, ps, kv, dk))
+    vq, vscale = _quantized(ks[2], (b * nb, ps, kv, dk))
+    table = jnp.arange(b * nb, dtype=jnp.int32).reshape(b, nb)
+    lengths = jnp.array([ps + 3, 2 * ps], jnp.int32)   # rows mid-page
+    out1 = kernel(q, kq, kscale, vq, vscale, table, lengths,
+                  interpret=True)
+    # poison everything past each row's valid prefix
+    stale = jnp.concatenate([table[0, 2:], table[1, 2:]])
+    poison_k = kq.at[stale].set(127)
+    poison_s = kscale.at[stale].set(1e6)
+    poison_k = poison_k.at[table[0, 1], 3:].set(-127)
+    poison_s = poison_s.at[table[0, 1], 3:].set(1e6)
+    out2 = kernel(q, poison_k, poison_s, vq, vscale, table, lengths,
+                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+# ----------------------------------------------------------------------
 # ops dispatch falls back to refs off-TPU
 # ----------------------------------------------------------------------
 def test_ops_dispatch_cpu_fallback():
@@ -189,3 +293,33 @@ def test_ops_dispatch_cpu_fallback():
     out = ops.decode_attention(q, k, v, jnp.int32(64))
     want = ref.decode_attention_ref(q, k, v, jnp.int32(64))
     np.testing.assert_allclose(out, want, atol=1e-6)
+
+
+def test_ops_quant_dispatch_cpu_is_bitwise_oracle():
+    """The serving determinism contract: off-TPU, the quant ops
+    dispatch to the jnp oracles bit-for-bit (the Pallas kernels are
+    the TPU deployment path; CPU must be *identical* to the reference
+    the bit-equivalence tests are built on)."""
+    assert jax.default_backend() != "tpu"
+    from repro.models.attention import decode_attention_quant as oracle
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    b, h, kv, dk, s = 2, 8, 2, 64, 128
+    q = jax.random.normal(ks[0], (b, h, dk))
+    kq, kscale = _quantized(ks[1], (b, s, kv, dk))
+    vq, vscale = _quantized(ks[2], (b, s, kv, dk))
+    out = ops.decode_attention_quant(q, kq, kscale, vq, vscale,
+                                     jnp.int32(100))
+    want = oracle(q, kq, kscale, vq, vscale, jnp.arange(s),
+                  jnp.int32(99))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    ps, nb = 8, 4
+    kpq, kps_ = _quantized(ks[1], (b * nb, ps, kv, dk))
+    vpq, vps_ = _quantized(ks[2], (b * nb, ps, kv, dk))
+    table = jnp.arange(b * nb, dtype=jnp.int32).reshape(b, nb)
+    lengths = jnp.array([ps + 3, 2 * ps], jnp.int32)
+    pout = ops.paged_decode_attention_quant(
+        q, kpq, kps_, vpq, vps_, table, lengths)
+    pwant = ref.paged_decode_attention_quant_ref(
+        q, kpq, kps_, vpq, vps_, table, lengths)
+    np.testing.assert_array_equal(np.asarray(pout), np.asarray(pwant))

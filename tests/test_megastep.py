@@ -90,18 +90,18 @@ def _run_both(cfg, prm, k_ticks, b, seed, eos_id, dtype=np.float32,
 
     common = dict(cache_len=cache_len, temperature=temperature,
                   eos_id=eos_id, pad_id=tok.PAD)
-    emits_m, dones_m, lg_m, _, _ = S.decode_megastep_rows(
-        cfg, prm, logits0, srv_a.k_pages, srv_a.v_pages,
+    emits_m, dones_m, lg_m, _ = S.decode_megastep_rows(
+        cfg, prm, logits0, srv_a.pages,
         jnp.asarray(tables), jnp.asarray(pos0), jnp.asarray(keys),
         jnp.asarray(steps0), jnp.asarray(done0), n_ticks=k_ticks,
         **common)
 
-    lg, kp, vp = logits0, srv_b.k_pages, srv_b.v_pages
+    lg, pages = logits0, srv_b.pages
     done = jnp.asarray(done0)
     emits_s, dones_s = [], []
     for t in range(k_ticks):
-        (emit, _lp, _lv, done, lg, kp, vp) = S.decode_step_rows(
-            cfg, prm, lg, kp, vp, jnp.asarray(tables),
+        (emit, _lp, _lv, done, lg, pages) = S.decode_step_rows(
+            cfg, prm, lg, pages, jnp.asarray(tables),
             jnp.asarray(pos0 + t), jnp.asarray(keys),
             jnp.asarray(steps0 + t), done, **common)
         emits_s.append(np.asarray(emit))

@@ -176,8 +176,22 @@ def test_pool_exhaustion_is_typed_and_clean(tiny_model):
 
 
 def test_paged_supported_gates():
+    from repro.models.transformer import resolve_layout
     assert paged_supported(get_config("smollm-135m", reduced=True))
     assert not paged_supported(get_config("mixtral-8x22b",
                                           reduced=True))     # MoE
-    assert not paged_supported(get_config("falcon-mamba-7b",
-                                          reduced=True))     # SSM
+    # layout descriptors: SSM members page their recurrent state as
+    # lanes; sliding-window members get ring pages; kv_quant gets
+    # int8 code pages; hybrids (RG-LRU + attention) stay dense-only
+    assert resolve_layout(
+        get_config("smollm-135m", reduced=True)) == "dense"
+    assert resolve_layout(
+        get_config("falcon-mamba-7b", reduced=True)) == "lanes"
+    assert resolve_layout(
+        get_config("smollm-135m", reduced=True).replace(
+            window=16)) == "ring"
+    assert resolve_layout(
+        get_config("smollm-135m", reduced=True).replace(
+            kv_quant=True)) == "quant"
+    assert resolve_layout(
+        get_config("recurrentgemma-2b", reduced=True)) is None

@@ -93,7 +93,7 @@ def _host_only_sharded_server(n_shards=4, num_pages=24,
     srv.smesh = types.SimpleNamespace(n_shards=n_shards,
                                       n_model=n_model)
     srv.page_size = page_size
-    srv.k_pages = srv.v_pages = None
+    srv.pages = None
     from repro.serving.mesh import _ShardView
     srv.shards = [
         _ShardView(srv, i, cfg, page_size=page_size,
