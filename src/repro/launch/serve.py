@@ -99,7 +99,9 @@ def serve(tasks: Sequence[Task], probe: ZooModel,
           step_loop: bool = False,
           batch_size: int = 8,
           data_shards: Optional[int] = None,
-          megastep: int = 1) -> dict:
+          megastep: int = 1,
+          trace_path: Optional[str] = None,
+          lineage_task: Optional[str] = None) -> dict:
     """Serve tasks through the batched engine. With ``scheduler=True``
     the request stream flows through the admission queue and is served
     as micro-batches of at most ``batch_size`` (continuous-batching
@@ -109,7 +111,16 @@ def serve(tasks: Sequence[Task], probe: ZooModel,
     loop on a sharded serving mesh (per-shard paged KV pools, needs
     that many visible devices); ``megastep`` fuses up to that many
     decode ticks into one device launch (bit-identical outputs, fewer
-    host round-trips); otherwise the whole suite runs as one batch."""
+    host round-trips); otherwise the whole suite runs as one batch.
+
+    ``trace_path`` arms the deterministic span tracer and flushes the
+    hash-chained span JSONL there; ``lineage_task`` (implies tracing)
+    walks the PROV graph backwards from that task's final answer and
+    prints the verified lineage."""
+    tracer = None
+    if trace_path is not None or lineage_task is not None:
+        from repro.serving.tracing import SpanTracer
+        tracer = SpanTracer(trace_path)
     engine = BatchedACAREngine(acfg, probe, ensemble)
     if verbose:
         from repro.models.transformer import resolve_layout
@@ -121,12 +132,15 @@ def serve(tasks: Sequence[Task], probe: ZooModel,
         from repro.serving.queue import MicroBatchPolicy
         res = engine.run_stepped(
             list(tasks), MicroBatchPolicy(max_batch_size=batch_size),
-            data_shards=data_shards, megastep=megastep)
+            data_shards=data_shards, megastep=megastep,
+            tracer=tracer)
         scheduler = True          # report the queued-shape extras
-    elif scheduler:
+    elif scheduler or tracer is not None:
         from repro.serving.queue import MicroBatchPolicy
         res = engine.run_queued(
-            list(tasks), MicroBatchPolicy(max_batch_size=batch_size))
+            list(tasks), MicroBatchPolicy(max_batch_size=batch_size),
+            tracer=tracer)
+        scheduler = True
     else:
         res = engine.run_batch(list(tasks))
     correct = sum(
@@ -171,6 +185,36 @@ def serve(tasks: Sequence[Task], probe: ZooModel,
                       f"{res.step.invocations} program launches, "
                       f"{res.step.prefill_chunks} prefill chunks")
             print(res.metrics.render())
+    if tracer is not None and getattr(res, "spans", None) is not None:
+        out["spans"] = len(res.spans)
+        out["span_head"] = res.span_head
+        if verbose:
+            print(f"spans             : {len(res.spans)} "
+                  f"(head {res.span_head[:16]}...)"
+                  + (f" -> {trace_path}" if trace_path else ""))
+        if lineage_task is not None:
+            from repro.teamllm.prov import lineage
+            lin = lineage(res.spans, lineage_task)
+            out["lineage_ok"] = lin["ok"]
+            out["lineage_verified"] = lin["verified"]
+            if verbose:
+                print(f"lineage           : task {lineage_task} "
+                      f"trace {lin['trace']} — "
+                      f"{lin['verified']} span hashes verified, "
+                      f"{'OK' if lin['ok'] else 'FAILED'}")
+                for rec in lin["records"]:
+                    if rec["kind"] == "entity":
+                        print(f"  entity   {rec['id']}")
+                    elif rec["kind"] == "wasDerivedFrom":
+                        via = f" via {rec['via']}" if "via" in rec \
+                            else ""
+                        print(f"  derived  {rec['entity']} <- "
+                              f"{rec['source']}{via}")
+                    elif rec["kind"] == "wasGeneratedBy":
+                        print(f"  genBy    {rec['entity']} <- "
+                              f"{rec['activity']}")
+                for f in lin["hash_failures"]:
+                    print(f"  FAIL     {f}")
     return out
 
 
@@ -212,6 +256,17 @@ def main(argv=None):
                          "bit-identical outputs at any K)")
     ap.add_argument("--batch-size", type=int, default=8,
                     help="micro-batch size budget for --scheduler")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="arm the deterministic span tracer and flush "
+                         "the hash-chained span JSONL here (span "
+                         "structure is bit-identical run to run; "
+                         "wall-times ride the non-hashed side channel)")
+    ap.add_argument("--lineage", default=None, metavar="TASK_ID",
+                    help="after serving, walk the PROV lineage of this "
+                         "task's final answer (answer -> judge -> "
+                         "members -> route -> probe samples, plus KV "
+                         "page-reuse derivations) and verify every "
+                         "span hash on the walk (implies tracing)")
     args = ap.parse_args(argv)
 
     if args.hetero_fleet:
@@ -228,7 +283,8 @@ def main(argv=None):
     serve(tasks, probe, ensemble, acfg,
           scheduler=args.scheduler, step_loop=args.step_loop,
           batch_size=args.batch_size, data_shards=args.shards,
-          megastep=args.megastep)
+          megastep=args.megastep, trace_path=args.trace,
+          lineage_task=args.lineage)
 
 
 if __name__ == "__main__":

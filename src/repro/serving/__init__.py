@@ -18,16 +18,18 @@ from repro.serving.scheduler import (
     StepPlanner)
 from repro.serving.step_loop import (
     ShardedStepLoopRunner, StepLoopRunner, StepStats)
+from repro.serving.tracing import NullTracer, SpanTracer
 
 __all__ = [
     "AdmissionQueue", "BatchedACAREngine", "BatchResult",
     "CompactionPlan", "CompactionStats", "ContinuousBatchingScheduler",
     "JaxModelBackend", "KVStats", "MemberPlan", "MicroBatch",
-    "MicroBatchPolicy", "PageAccountingError", "PagePool",
-    "PagePoolError", "PagedKVServer", "PoolExhausted", "ProbeCache",
-    "ProbeHandle", "PromCounters", "QueuedServeResult", "Request",
-    "SchedulerStats", "ServingMesh", "ShardedPagedKVServer",
-    "ShardedStepLoopRunner", "StepLoopRunner", "StepPlanner",
-    "StepStats", "ZooModel", "bucket_size", "dense_tile_slots",
-    "intern_answers", "judge_batch", "pages_for", "plan_compaction",
+    "MicroBatchPolicy", "NullTracer", "PageAccountingError",
+    "PagePool", "PagePoolError", "PagedKVServer", "PoolExhausted",
+    "ProbeCache", "ProbeHandle", "PromCounters", "QueuedServeResult",
+    "Request", "SchedulerStats", "ServingMesh", "ShardedPagedKVServer",
+    "ShardedStepLoopRunner", "SpanTracer", "StepLoopRunner",
+    "StepPlanner", "StepStats", "ZooModel", "bucket_size",
+    "dense_tile_slots", "intern_answers", "judge_batch", "pages_for",
+    "plan_compaction",
 ]

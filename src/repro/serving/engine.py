@@ -342,13 +342,25 @@ class BatchedACAREngine:
         return self._decode_texts(out.tokens), handle
 
     def run_batch(self, tasks: Sequence[Task],
-                  start_index: int = 0) -> BatchResult:
+                  start_index: int = 0, tracer=None,
+                  request_ids: Optional[Sequence[str]] = None
+                  ) -> BatchResult:
         """One wave over ``tasks``. ``start_index`` is the admission
         index of the first row — the stable per-task identity that
         seeds every row's sampling key stream, so a task emits the
         same tokens whether it is served in this wave, a different
-        wave, or the step-level loop."""
+        wave, or the step-level loop.
+
+        ``tracer`` (serving/tracing.py) emits the wave path's
+        lifecycle spans post-hoc after the wave resolves — the wave is
+        lockstep, so per-phase spans at ``tick = admission index``
+        carry the same decision fields the step loop records live.
+        ``request_ids`` names the traces (one per task); absent, a
+        task-derived id is used."""
         t0 = time.perf_counter()
+        tracer = tracer if (tracer is not None
+                            and getattr(tracer, "armed", False)) \
+            else None
         b = len(tasks)
         n = self.acfg.n_probe_samples
         ids = tok.encode_aligned([t.text for t in tasks])
@@ -409,6 +421,7 @@ class BatchedACAREngine:
             member_cols = []
             member_answers: List[List[Optional[str]]] = \
                 [[None] * len(self.ensemble) for _ in range(b)]
+            reused_rows: set = set()     # (mi, row): probe-page seed
             for mi, zm in enumerate(self.ensemble):
                 mp = plan.members[mi]
                 col = np.full(b, -1, np.int32)
@@ -431,6 +444,8 @@ class BatchedACAREngine:
                             temperature=self.acfg.ensemble_temperature,
                             key=mkey, eos_id=tok.EOS, pad_id=tok.PAD,
                             row_keys=mrk)
+                        reused_rows.update(
+                            (mi, int(r)) for r in mp.rows)
                     else:
                         mout = self._member_decode(zm, srv_m,
                                                    ids[rows], mkey,
@@ -468,6 +483,11 @@ class BatchedACAREngine:
                 np.where(modes_np == 1, self.acfg.arena_lite_size,
                          len(self.ensemble)))))
             probe_texts = [texts[i * n:(i + 1) * n] for i in range(b)]
+            if tracer is not None:
+                self._trace_wave(
+                    tracer, tasks, start_index, request_ids,
+                    int(ids.shape[1]), n, np.asarray(sig), modes_np,
+                    member_answers, final_answers, reused_rows)
             return BatchResult(
                 sigma=np.asarray(sig), modes=modes_np,
                 final_answers=final_answers, probe_texts=probe_texts,
@@ -481,18 +501,81 @@ class BatchedACAREngine:
             if handle is not None:
                 handle.close()
 
+    def _trace_wave(self, tracer, tasks, start_index, request_ids,
+                    prompt_tokens, n, sig, modes_np, member_answers,
+                    final_answers, reused_rows) -> None:
+        """Post-hoc span emission for one resolved wave: the lockstep
+        wave has no per-tick interleaving, so each task's lifecycle
+        spans are stamped at ``tick = admission index`` with the same
+        decision fields the step loop records live (structure stays a
+        pure function of the admission-ordered run)."""
+        from repro.teamllm.spans import make_trace_id
+        for i, task in enumerate(tasks):
+            adm = start_index + i
+            rid = request_ids[i] if request_ids is not None \
+                else f"task-{task.task_id}"
+            trace = make_trace_id(rid, adm)
+            sigma = float(sig[i])
+            mode = int(modes_np[i])
+            tracer.span("admit", trace, adm,
+                        prompt_tokens=prompt_tokens, arrival=adm)
+            tracer.span("probe_decode", trace, adm,
+                        model=self.probe.name, n_samples=n)
+            tracer.span("route", trace, adm, sigma=sigma, mode=mode,
+                        n_samples=n)
+            members = []
+            for mi, zm in enumerate(self.ensemble):
+                if member_answers[i][mi] is None:
+                    continue
+                members.append(mi)
+                reuse = (mi, i) in reused_rows
+                tracer.span("member_launch", trace, adm,
+                            key=("m", mi), member=mi, model=zm.name,
+                            reuse=int(reuse))
+                if reuse:
+                    tracer.span("kv_reuse", trace, adm, key=("m", mi),
+                                kind="probe", model=zm.name,
+                                source=trace)
+                tracer.span("member_decode", trace, adm,
+                            key=("m", mi), member=mi, model=zm.name,
+                            done=1)
+            tracer.span("judge", trace, adm, mode=mode,
+                        members=members)
+            tracer.span("retire", trace, adm, task_id=task.task_id,
+                        final_answer=final_answers[i], sigma=sigma,
+                        mode=mode, aborted=None)
+            if (getattr(tracer, "attribution", False) and mode >= 2
+                    and members):
+                from repro.core.attribution import leave_one_out
+                from repro.teamllm.trace import ModelResponse
+                responses = [
+                    ModelResponse(model=self.ensemble[mi].name,
+                                  response="",
+                                  answer=member_answers[i][mi],
+                                  cost=0.0)
+                    for mi in members]
+                loo = leave_one_out(responses, task.task_id,
+                                    task.gold)
+                tracer.span("attribution", trace, adm,
+                            task_id=task.task_id, mode=mode,
+                            values={m: float(v)
+                                    for m, v in loo.items()})
+
     # ------------------------------------------------------------------
     # continuous-batching entry point: admission queue -> micro-batches
     # ------------------------------------------------------------------
     def run_queued(self, tasks: Sequence[Task],
-                   policy: MicroBatchPolicy = MicroBatchPolicy()
-                   ) -> "QueuedServeResult":
+                   policy: MicroBatchPolicy = MicroBatchPolicy(),
+                   tracer=None) -> "QueuedServeResult":
         """Serve a request stream through the admission queue: tasks are
         submitted with logical arrival ticks, grouped into micro-batches
         under the policy budget, and each micro-batch runs the batched
         probe -> route -> ensemble pipeline. Per-batch results are
         concatenated in admission order."""
         t0 = time.perf_counter()
+        tracer = tracer if (tracer is not None
+                            and getattr(tracer, "armed", False)) \
+            else None
         queue = AdmissionQueue(policy)
         for t in tasks:
             queue.submit(t)
@@ -503,7 +586,9 @@ class BatchedACAREngine:
         for batch in queue.drain_batches():
             res = self.run_batch(
                 [r.task for r in batch.requests],
-                start_index=batch.requests[0].admission_index)
+                start_index=batch.requests[0].admission_index,
+                tracer=tracer,
+                request_ids=[r.request_id for r in batch.requests])
             batch_results.append(res)
             batch_sizes.append(len(batch))
             metrics.inc("acar_engine_batches_total",
@@ -572,7 +657,9 @@ class BatchedACAREngine:
                          for p in r.probe_texts],
             member_answers=[m for r in batch_results
                             for m in (r.member_answers or [])],
-            kv=self.kv_stats() or None)
+            kv=self.kv_stats() or None,
+            spans=tracer.records() if tracer is not None else None,
+            span_head=tracer.flush() if tracer is not None else None)
 
     # ------------------------------------------------------------------
     # step-level continuous batching entry point
@@ -586,8 +673,8 @@ class BatchedACAREngine:
                     megastep=1,
                     faults=None,
                     journal_path=None,
-                    recovered: Optional[Dict[int, dict]] = None
-                    ) -> "QueuedServeResult":
+                    recovered: Optional[Dict[int, dict]] = None,
+                    tracer=None) -> "QueuedServeResult":
         """Serve a request stream through the step-level loop: rows
         admitted from ``AdmissionQueue.ready()`` the moment the page
         budget opens, prompts prefilled in ``chunk_tokens`` chunks,
@@ -627,7 +714,15 @@ class BatchedACAREngine:
         admission-index -> retire-payload map from
         ``StepJournal.load``) restores already-retired rows verbatim
         while everything else re-executes from scratch — see
-        ``recover``. All three hooks are zero-cost when unset."""
+        ``recover``. All three hooks are zero-cost when unset.
+
+        ``tracer`` (serving/tracing.py) attaches deterministic span
+        tracing: one hashed span per lifecycle transition (admit,
+        prefill chunk, decode megastep, route, member launch, judge,
+        retire, every fault-path event), structure bit-identical run
+        to run while wall-times ride the non-hashed side channel —
+        arming it cannot perturb record hashes or chain heads
+        (``simulate.py --obs`` proves it). Zero-cost when unset."""
         from repro.serving.scheduler import StepPlanner
         from repro.serving.step_loop import (
             ShardedStepLoopRunner, StepLoopRunner)
@@ -663,14 +758,15 @@ class BatchedACAREngine:
                     "pass data_shards as well")
             runner = StepLoopRunner(self, queue, planner, metrics,
                                     faults=injector, journal=journal,
-                                    recovered=recovered)
+                                    recovered=recovered,
+                                    tracer=tracer)
         else:
             from repro.serving.mesh import ServingMesh
             runner = ShardedStepLoopRunner(
                 self, queue, planner,
                 ServingMesh(data=data_shards, model=model_shards),
                 metrics, faults=injector, journal=journal,
-                recovered=recovered)
+                recovered=recovered, tracer=tracer)
         step_stats = runner.run()
         # the sharded runner's servers live outside self._kv_servers:
         # emit the pool gauges / reuse counters from whichever set
@@ -702,7 +798,11 @@ class BatchedACAREngine:
             kv=runner.kv_stats() or None,
             step=step_stats,
             faults=runner.fault_events or None,
-            restored_rows=step_stats.restored)
+            restored_rows=step_stats.restored,
+            spans=runner.tracer.records()
+            if runner.tracer is not None else None,
+            span_head=runner.tracer.flush()
+            if runner.tracer is not None else None)
 
     def recover(self, tasks: Sequence[Task],
                 policy: MicroBatchPolicy = MicroBatchPolicy(), *,
@@ -710,7 +810,7 @@ class BatchedACAREngine:
                 max_active_rows: Optional[int] = None,
                 data_shards: Optional[int] = None,
                 model_shards: int = 1,
-                megastep=1) -> "QueuedServeResult":
+                megastep=1, tracer=None) -> "QueuedServeResult":
         """Resume a killed ``run_stepped`` run from its write-ahead
         journal: rows with a durable ``retire`` event are restored
         verbatim; in-flight and unadmitted rows re-execute from
@@ -726,7 +826,7 @@ class BatchedACAREngine:
             tasks, policy, chunk_tokens=chunk_tokens,
             max_active_rows=max_active_rows, data_shards=data_shards,
             model_shards=model_shards, megastep=megastep,
-            recovered=state.retired)
+            recovered=state.retired, tracer=tracer)
 
     def _emit_kv_metrics(self, metrics: PromCounters,
                          kv: Optional[Dict[str, KVStats]] = None
@@ -786,3 +886,7 @@ class QueuedServeResult:
     faults: Optional[List[dict]] = None
     # rows restored verbatim from a step journal by ``recover``
     restored_rows: int = 0
+    # deterministic span records + chain head when a tracer was armed
+    # (serving/tracing.py); None otherwise
+    spans: Optional[List[dict]] = None
+    span_head: Optional[str] = None

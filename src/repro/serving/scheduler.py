@@ -211,6 +211,18 @@ class StepPlanner:
                 best, best_headroom = k, headroom
         return best
 
+    def attribution_quota(self, tick_cost: int, pending: int) -> int:
+        """On-capacity attribution budget for this tick: how many
+        retired full-arena rows the step loop may recompute
+        leave-one-out counterfactuals for (serving/step_loop.py drains
+        its queue with it). The policy is strict idleness — a tick
+        that launched any device program gets no budget, an idle tick
+        drains everything pending. Attribution is host-side recompute
+        over already-journaled answers, so the quota can never perturb
+        the virtual clock or the decision trace; the remainder flushes
+        after the stream drains."""
+        return pending if tick_cost == 0 else 0
+
 
 # ----------------------------------------------------------------------
 # scheduler

@@ -66,6 +66,8 @@ step-vs-wave latency comparisons are apples to apples.
 """
 from __future__ import annotations
 
+import hashlib
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -86,6 +88,7 @@ from repro.serving.metrics import (
     SHARD_STEALS, STEP_REQUEUES)
 from repro.serving.queue import AdmissionQueue, Request
 from repro.serving.scheduler import StepPlanner
+from repro.teamllm.spans import make_trace_id
 from repro.teamllm.trace import fault_record
 
 PHASES = ("prefill", "probe_decode", "route_pending",
@@ -209,7 +212,8 @@ class StepLoopRunner:
                  metrics: Optional[PromCounters] = None, *,
                  faults: Optional[FaultInjector] = None,
                  journal=None,
-                 recovered: Optional[Dict[int, dict]] = None):
+                 recovered: Optional[Dict[int, dict]] = None,
+                 tracer=None):
         self.eng = engine
         self.queue = queue
         self.planner = planner
@@ -229,6 +233,16 @@ class StepLoopRunner:
         self.fault_events: List[dict] = []
         self._quarantined: set = set()
         self._displaced: List[_Row] = []
+        # span tracing rides the same zero-cost discipline: a
+        # disarmed or absent tracer normalises to None, so every
+        # instrumentation site below is one attribute check
+        # (benchmarks/obs_bench.py gates the armed overhead at <=3%)
+        self.tracer = tracer if (tracer is not None
+                                 and getattr(tracer, "armed", False)) \
+            else None
+        # escalated full-arena rows awaiting on-capacity
+        # leave-one-out attribution (drained on idle ticks)
+        self._attrib_queue: List[_Row] = []
         self._init_servers()
         self._reserved = 0                 # pages admitted rows may yet take
         self.active: List[_Row] = []
@@ -306,6 +320,30 @@ class StepLoopRunner:
         row.reserved -= pages
         self._reserved -= pages
 
+    # -- span tracing --------------------------------------------------
+    def _trace_id(self, row: _Row) -> str:
+        return make_trace_id(row.request.request_id, row.admission)
+
+    def _kv_reuse_span(self, model: str, row: _Row, kind: str,
+                       key=None) -> None:
+        """PROV raw material: a ``wasDerivedFrom`` edge — KV state
+        seeded from retained pages instead of recomputation.
+        ``kind='prefix'`` names the donor trace whose prefill
+        populated the cache entry (recorded at insert, first writer in
+        admission order); ``kind='probe'`` marks a member decode
+        seeded from the row's own probe prompt pages."""
+        trace = self._trace_id(row)
+        if kind == "probe":
+            src, src_span = trace, None
+        else:
+            owner = self.tracer.kv_source(
+                model, hashlib.sha256(row.ids.tobytes()).hexdigest())
+            src = owner[0] if owner else None
+            src_span = owner[1] if owner else None
+        self.tracer.span("kv_reuse", trace, self.now, key=key,
+                         kind=kind, model=model, source=src,
+                         source_span=src_span)
+
     # -- fault handling ------------------------------------------------
     def _fired(self, site: str, **match) -> bool:
         """Did an injected fault fire at this site this step? Every
@@ -371,6 +409,12 @@ class StepLoopRunner:
             penalty += plan.backoff_base << (retries - 1)
             self._trace_fault("member_retry", model=model,
                               attempt=retries)
+            if self.tracer is not None:
+                for it in items:
+                    self.tracer.span(
+                        "member_retry", self._trace_id(it[1]),
+                        self.now, key=("m", it[2].tag - 100),
+                        model=model, attempt=retries)
             if retries > plan.max_retries:
                 self._quarantine_group(items, model,
                                        "launch_retries_exhausted")
@@ -397,6 +441,12 @@ class StepLoopRunner:
             self._trace_fault("member_quarantined", member=mi,
                               model=self.eng.ensemble[mi].name,
                               reason=reason)
+            if self.tracer is not None:
+                # fleet-scoped span: quarantine is not row state
+                self.tracer.span(
+                    "member_quarantined", "fleet", self.now,
+                    member=mi, model=self.eng.ensemble[mi].name,
+                    reason=reason)
         for row in list(self.active):
             if row.phase == "ensemble_decode":
                 self._degrade_row(row)
@@ -419,6 +469,10 @@ class StepLoopRunner:
             self._trace_fault("route_degraded",
                               admission=row.admission,
                               **{"from": row.mode, "to": new_mode})
+            if self.tracer is not None:
+                self.tracer.span("route_degraded",
+                                 self._trace_id(row), self.now,
+                                 **{"from": row.mode, "to": new_mode})
             row.mode = new_mode
 
     def _degrade_row(self, row: _Row) -> None:
@@ -485,6 +539,9 @@ class StepLoopRunner:
                                   "deadline")
         self._trace_fault("row_aborted", admission=row.admission,
                           reason=reason)
+        if self.tracer is not None:
+            self.tracer.span("abort", self._trace_id(row), self.now,
+                             reason=reason)
         self._retire(row)
 
     def _rollback_admission(self, row: _Row) -> None:
@@ -523,6 +580,11 @@ class StepLoopRunner:
                 STEP_REQUEUES,
                 help="admissions requeued on PoolExhausted")
             self._trace_fault("requeued", admission=row.admission)
+            if self.tracer is not None:
+                # the re-admission's admit span parents on this one:
+                # one trace spans the requeue
+                self.tracer.span("requeued", self._trace_id(row),
+                                 self.now)
             return False
 
     def _restore_head(self) -> bool:
@@ -556,6 +618,24 @@ class StepLoopRunner:
         self.metrics.inc(
             RECOVERY_ROWS_RESTORED,
             help="rows restored verbatim from the step journal")
+        if self.tracer is not None:
+            # span continuity across crash->recover: the restored
+            # trace re-materialises from its journaled retirement (a
+            # restore span parenting a retire span), so every admitted
+            # task still ends in a retire span after a journal replay
+            trace = self._trace_id(row)
+            self.tracer.span("restore", trace, self.now,
+                             task_id=req.task.task_id,
+                             sigma=row.sigma, mode=row.mode)
+            self.tracer.span("retire", trace, self.now,
+                             task_id=req.task.task_id,
+                             final_answer=row.final_answer,
+                             sigma=row.sigma, mode=row.mode,
+                             aborted=row.aborted, restored=1)
+            if (getattr(self.tracer, "attribution", False)
+                    and row.mode >= 2 and row.aborted is None
+                    and row.member_answers is not None):
+                self._attrib_queue.append(row)
         return True
 
     # -- admission -----------------------------------------------------
@@ -597,6 +677,10 @@ class StepLoopRunner:
             self._reserved += row.reserved
             self.stats.timeline[row.admission] = (
                 req.arrival_time, self.now, -1)
+            if self.tracer is not None:
+                self.tracer.span("admit", self._trace_id(row),
+                                 self.now, prompt_tokens=s,
+                                 arrival=req.arrival_time)
             if not self._try_begin_prefill(row):
                 break
             self.active.append(row)
@@ -622,6 +706,8 @@ class StepLoopRunner:
             row.from_cache = True
             row.prefill_pos = s
             srv.stats.prefill_tokens_reused_prefix += s
+            if self.tracer is not None:
+                self._kv_reuse_span(srv.stats.model, row, "prefix")
             self._unreserve(row, g.nbp)
             self._begin_probe_decode(row)
             return
@@ -725,6 +811,7 @@ class StepLoopRunner:
         _, c, s = key
         if c < 0:
             return self._run_one_shot_prefill_group(key, items)
+        t0 = time.perf_counter() if self.tracer is not None else 0.0
         srv = items[0][0]
         ps = srv.page_size
         nbp = pages_for(s, ps)
@@ -762,13 +849,30 @@ class StepLoopRunner:
         # device path stayed bf16)
         for i, (srv_i, row, mx) in enumerate(rows):
             target = mx if mx is not None else row
-            target.prefill_pos = int(starts[i]) + c
+            start0 = int(starts[i])
+            target.prefill_pos = start0 + c
+            sid = None
+            if self.tracer is not None:
+                sid = self.tracer.span(
+                    "prefill_chunk", self._trace_id(row), self.now,
+                    key=None if mx is None else ("m", mx.member),
+                    model=srv.stats.model, start=start0, tokens=c)
             if target.prefill_pos == s:
                 target.logits0 = lg[i]
                 # publish to the server's prefix cache (cost-aware
                 # eviction keys off tokens-saved-per-page)
                 srv._prefix_insert(row.ids.tobytes(), target.shared,
                                    target.tail, lg[i], tokens=s)
+                if sid is not None:
+                    self.tracer.kv_insert(
+                        srv.stats.model,
+                        hashlib.sha256(row.ids.tobytes()).hexdigest(),
+                        self._trace_id(row), sid)
+        if self.tracer is not None:
+            self.metrics.observe(
+                "acar_span_duration", time.perf_counter() - t0,
+                phase="prefill",
+                help="host wall seconds per traced lifecycle phase")
         return 1
 
     def _run_one_shot_prefill_group(self, key, items) -> int:
@@ -780,6 +884,7 @@ class StepLoopRunner:
         layout choice never moves the latency accounting."""
         import jax.numpy as jnp
         _, _, s = key
+        t0 = time.perf_counter() if self.tracer is not None else 0.0
         srv = items[0][0]
         g = self._geometry(srv, s)
         rows = sorted(items, key=lambda it: it[1].admission)
@@ -819,6 +924,21 @@ class StepLoopRunner:
             target.logits0 = lg[i]
             srv._prefix_insert(row.ids.tobytes(), target.shared,
                                target.tail, lg[i], tokens=s)
+            if self.tracer is not None:
+                sid = self.tracer.span(
+                    "prefill_chunk", self._trace_id(row), self.now,
+                    key=None if mx is None else ("m", mx.member),
+                    model=srv.stats.model, start=0, tokens=s,
+                    oneshot=1)
+                self.tracer.kv_insert(
+                    srv.stats.model,
+                    hashlib.sha256(row.ids.tobytes()).hexdigest(),
+                    self._trace_id(row), sid)
+        if self.tracer is not None:
+            self.metrics.observe(
+                "acar_span_duration", time.perf_counter() - t0,
+                phase="prefill",
+                help="host wall seconds per traced lifecycle phase")
         return self.planner.chunk_count(s)
 
     def _server_model(self, srv: PagedKVServer):
@@ -893,6 +1013,7 @@ class StepLoopRunner:
     def _run_decode_group(self, key, items) -> int:
         import jax.numpy as jnp
         _, temperature, cache_len = key
+        t0 = time.perf_counter() if self.tracer is not None else 0.0
         srv = items[0][0]
         nb = srv.table_width(cache_len - self.max_new, self.max_new)
         ordered = sorted(items, key=lambda it: (it[1].admission,
@@ -955,6 +1076,30 @@ class StepLoopRunner:
         for i, lane in enumerate(lanes):
             self._replay_megastep(lane, emits, dones, kl, i)
             lane.logits = next_logits[i]
+        if self.tracer is not None:
+            # one span per (row, lane) per megastep launch; lane
+            # streams chain launch-to-launch, parented on the row
+            # lifecycle (probe lanes) or the member launch (members)
+            for it, lane in zip(ordered, lanes):
+                probe = lane.tag < 100
+                self.tracer.span(
+                    "probe_decode" if probe else "member_decode",
+                    self._trace_id(it[1]), self.now,
+                    key=("p", lane.tag) if probe
+                    else ("m", lane.tag - 100),
+                    member=None if probe else lane.tag - 100,
+                    model=srv.stats.model, ticks=kl,
+                    steps=lane.steps, done=int(lane.done))
+            d = time.perf_counter() - t0
+            self.metrics.observe(
+                "acar_span_duration", d,
+                phase="probe_decode" if lanes[0].tag < 100
+                else "ensemble_decode",
+                help="host wall seconds per traced lifecycle phase")
+            self.metrics.observe(
+                "acar_decode_launch_seconds", d,
+                server=srv.stats.model,
+                help="wall seconds per megastep decode launch")
         if self.journal is not None:
             self.journal.emit(self.now, srv.stats.model, [
                 [it[1].admission, lane.tag, lane.steps,
@@ -993,6 +1138,7 @@ class StepLoopRunner:
     def _route(self, rows: List[_Row]) -> None:
         import jax.numpy as jnp
         from repro.serving.engine import intern_answers
+        t0 = time.perf_counter() if self.tracer is not None else 0.0
         n = self.n
         self._routed_this_tick += len(rows)
         # batched route-time extract: decode + extract every row
@@ -1029,8 +1175,18 @@ class StepLoopRunner:
             row.mode = int(modes[i])
             if self._quarantined:
                 self._apply_degraded_mode(row)
+            if self.tracer is not None:
+                self.tracer.span("route", self._trace_id(row),
+                                 self.now, sigma=row.sigma,
+                                 mode=row.mode,
+                                 n_samples=len(row.probe_answers))
             row.member_answers = [None] * len(self.eng.ensemble)
             self._spawn_members(row)
+        if self.tracer is not None:
+            self.metrics.observe(
+                "acar_span_duration", time.perf_counter() - t0,
+                phase="route",
+                help="host wall seconds per traced lifecycle phase")
 
     def _member_needed(self, mode: int, mi: int) -> bool:
         if mi in self._quarantined:
@@ -1054,6 +1210,10 @@ class StepLoopRunner:
             reuse = self._reuse_member(zm, row)
             mx = _MemberExec(member=mi, server=srv_m, reuse=reuse)
             row.members.append(mx)
+            if self.tracer is not None:
+                self.tracer.span("member_launch", self._trace_id(row),
+                                 self.now, key=("m", mi), member=mi,
+                                 model=zm.name, reuse=int(reuse))
             if reuse:
                 self._begin_member_decode(row, mx)
             elif srv_m is not None:
@@ -1068,6 +1228,9 @@ class StepLoopRunner:
                     mx.from_cache = True
                     mx.prefill_pos = row.s
                     srv_m.stats.prefill_tokens_reused_prefix += row.s
+                    if self.tracer is not None:
+                        self._kv_reuse_span(srv_m.stats.model, row,
+                                            "prefix", key=("m", mi))
                     self._begin_member_decode(row, mx)
                 else:
                     g = self._geometry(srv_m, row.s)
@@ -1122,6 +1285,9 @@ class StepLoopRunner:
                         logits=logits0.copy(), tag=100 + mx.member)
         if mx.reuse:
             srv.stats.prefill_tokens_reused_probe += s
+            if self.tracer is not None:
+                self._kv_reuse_span(srv.stats.model, row, "probe",
+                                    key=("m", mx.member))
 
     def _dense_member(self, row: _Row, mx: _MemberExec, zm) -> None:
         import jax.numpy as jnp
@@ -1142,6 +1308,11 @@ class StepLoopRunner:
         key = ("dense", mx.member)
         self._tick_extra[key] = self._tick_extra.get(key, 0) + cost
         self.stats.launches += 1
+        if self.tracer is not None:
+            self.tracer.span("member_decode", self._trace_id(row),
+                             self.now, key=("m", mx.member),
+                             member=mx.member, model=zm.name, dense=1,
+                             done=int(mx.answer is not None))
 
     def _finish_members(self, row: _Row) -> None:
         srv = self._probe_server(row)
@@ -1167,6 +1338,7 @@ class StepLoopRunner:
     def _judge(self, row: _Row) -> None:
         import jax.numpy as jnp
         from repro.serving.engine import intern_answers, judge_batch
+        t0 = time.perf_counter() if self.tracer is not None else 0.0
         table: Dict[str, int] = {}
         probe_ids = intern_answers(row.probe_answers,
                                    table).reshape(1, self.n)
@@ -1180,6 +1352,16 @@ class StepLoopRunner:
             jnp.asarray([row.mode], np.int32))
         rev = {v: k for k, v in table.items()}
         row.final_answer = rev[int(np.asarray(final)[0])]
+        if self.tracer is not None:
+            self.tracer.span(
+                "judge", self._trace_id(row), self.now, mode=row.mode,
+                members=[mi for mi, a
+                         in enumerate(row.member_answers or [])
+                         if a is not None])
+            self.metrics.observe(
+                "acar_span_duration", time.perf_counter() - t0,
+                phase="judge",
+                help="host wall seconds per traced lifecycle phase")
 
     def _retire(self, row: _Row) -> None:
         self._unreserve(row, row.reserved)
@@ -1201,6 +1383,48 @@ class StepLoopRunner:
                 "aborted": row.aborted,
                 "timeline": list(self.stats.timeline[row.admission]),
             }, self.now)
+        if self.tracer is not None:
+            self.tracer.span("retire", self._trace_id(row), self.now,
+                             task_id=row.request.task.task_id,
+                             final_answer=row.final_answer,
+                             sigma=row.sigma, mode=row.mode,
+                             aborted=row.aborted)
+            if (getattr(self.tracer, "attribution", False)
+                    and row.mode >= 2 and row.aborted is None
+                    and row.member_answers is not None):
+                # full-arena row: schedule on-capacity leave-one-out
+                # recomputation (drained on idle ticks; see run())
+                self._attrib_queue.append(row)
+
+    # -- on-capacity counterfactual attribution ------------------------
+    def _attribute_row(self, row: _Row) -> None:
+        """Recompute ground-truth leave-one-out judge counterfactuals
+        for one escalated row and emit them as a hashed span. Uses the
+        same ``core.attribution`` oracle the offline analysis calls, so
+        the on-capacity values are numerically identical by
+        construction (``simulate.py --obs`` asserts it row-by-row)."""
+        from repro.core.attribution import leave_one_out
+        from repro.teamllm.trace import ModelResponse
+        task = row.request.task
+        responses = [
+            ModelResponse(model=self.eng.ensemble[mi].name,
+                          response="", answer=a, cost=0.0)
+            for mi, a in enumerate(row.member_answers)
+            if a is not None]
+        loo = leave_one_out(responses, task.task_id, task.gold)
+        self.tracer.span(
+            "attribution", self._trace_id(row), self.now,
+            task_id=task.task_id, mode=row.mode,
+            values={m: float(v) for m, v in loo.items()})
+
+    def _drain_attribution(self, quota: int) -> None:
+        while self._attrib_queue and quota > 0:
+            self._attribute_row(self._attrib_queue.pop(0))
+            quota -= 1
+            self.metrics.inc(
+                "acar_attribution_rows_total",
+                help="escalated rows with on-capacity leave-one-out "
+                     "attribution recomputed")
 
     def kv_stats(self):
         """Measured paged-KV accounting per model for this run."""
@@ -1257,6 +1481,11 @@ class StepLoopRunner:
             # serialize. Idle ticks launch nothing (invocations stay
             # honest) but time still passes.
             tick_cost = max(per_server.values(), default=0)
+            if self.tracer is not None and self._attrib_queue:
+                # attribution is pure host recompute over retired
+                # rows: spend idle device ticks on it, never busy ones
+                self._drain_attribution(self.planner.attribution_quota(
+                    tick_cost, len(self._attrib_queue)))
             self.stats.ticks += 1
             self.stats.invocations += sum(per_server.values())
             self.now += max(1, tick_cost)
@@ -1271,6 +1500,10 @@ class StepLoopRunner:
                     nxt = self.queue.next_ready_at()
                     if nxt is not None:
                         self.now = max(self.now, nxt)
+        if self.tracer is not None and self._attrib_queue:
+            # the run drained before the queue did: flush the rest so
+            # every escalated row gets its counterfactual events
+            self._drain_attribution(len(self._attrib_queue))
         if self.stats.masked_decode_steps:
             self.metrics.inc(
                 "acar_step_masked_decode_steps_total",
@@ -1340,12 +1573,13 @@ class ShardedStepLoopRunner(StepLoopRunner):
                  metrics: Optional[PromCounters] = None, *,
                  faults: Optional[FaultInjector] = None,
                  journal=None,
-                 recovered: Optional[Dict[int, dict]] = None):
+                 recovered: Optional[Dict[int, dict]] = None,
+                 tracer=None):
         self.smesh = smesh
         self._lost: set = set()            # shards marked lost
         super().__init__(engine, queue, planner, metrics,
                          faults=faults, journal=journal,
-                         recovered=recovered)
+                         recovered=recovered, tracer=tracer)
 
     # -- server topology -----------------------------------------------
     def _init_servers(self) -> None:
@@ -1531,6 +1765,11 @@ class ShardedStepLoopRunner(StepLoopRunner):
             self._shard_active[shard] += 1
             self.stats.timeline[row.admission] = (
                 req.arrival_time, self.now, -1)
+            if self.tracer is not None:
+                self.tracer.span("admit", self._trace_id(row),
+                                 self.now, prompt_tokens=s,
+                                 arrival=req.arrival_time,
+                                 shard=shard)
             if not self._try_begin_prefill(row):
                 break
             self.active.append(row)
@@ -1567,6 +1806,9 @@ class ShardedStepLoopRunner(StepLoopRunner):
             self._displaced.append(row)
             self._trace_fault("row_displaced",
                               admission=row.admission, shard=k)
+            if self.tracer is not None:
+                self.tracer.span("displaced", self._trace_id(row),
+                                 self.now, shard=k)
         self._shard_active[k] = 0
         self._shard_reserved[k] = 0
 
@@ -1627,6 +1869,9 @@ class ShardedStepLoopRunner(StepLoopRunner):
             self.active.append(row)
             self._trace_fault("row_replaced",
                               admission=row.admission, shard=shard)
+            if self.tracer is not None:
+                self.tracer.span("replaced", self._trace_id(row),
+                                 self.now, shard=shard)
             self.metrics.inc("acar_shard_placements_total",
                              shard=str(shard),
                              help="rows placed per mesh shard")
@@ -1648,6 +1893,7 @@ class ShardedStepLoopRunner(StepLoopRunner):
         _, c, s = key
         if c < 0:
             return self._run_one_shot_prefill_group(key, items)
+        t0 = time.perf_counter() if self.tracer is not None else 0.0
         parent = items[0][0].parent
         nsh = parent.n_shards
         nbp = pages_for(s, self.page_size)
@@ -1697,11 +1943,30 @@ class ShardedStepLoopRunner(StepLoopRunner):
             for i, (srv, row, mx) in enumerate(per[k]):
                 target = mx if mx is not None else row
                 target.prefill_pos = int(starts[k, i]) + c
+                sid = None
+                if self.tracer is not None:
+                    sid = self.tracer.span(
+                        "prefill_chunk", self._trace_id(row),
+                        self.now,
+                        key=None if mx is None else ("m", mx.member),
+                        model=parent.model_name,
+                        start=int(starts[k, i]), tokens=c)
                 if target.prefill_pos == s:
                     target.logits0 = lg_local[k][0, i]
                     srv._prefix_insert(row.ids.tobytes(),
                                        target.shared, target.tail,
                                        target.logits0, tokens=s)
+                    if sid is not None:
+                        self.tracer.kv_insert(
+                            parent.model_name,
+                            hashlib.sha256(
+                                row.ids.tobytes()).hexdigest(),
+                            self._trace_id(row), sid)
+        if self.tracer is not None:
+            self.metrics.observe(
+                "acar_span_duration", time.perf_counter() - t0,
+                phase="prefill",
+                help="host wall seconds per traced lifecycle phase")
         return 1
 
     def _run_one_shot_prefill_group(self, key, items) -> int:
@@ -1710,6 +1975,7 @@ class ShardedStepLoopRunner(StepLoopRunner):
         runner, and dense always chunks)."""
         import jax.numpy as jnp
         _, _, s = key
+        t0 = time.perf_counter() if self.tracer is not None else 0.0
         parent = items[0][0].parent
         nsh = parent.n_shards
         g = self._geometry(items[0][0], s)
@@ -1756,11 +2022,28 @@ class ShardedStepLoopRunner(StepLoopRunner):
                 srv._prefix_insert(row.ids.tobytes(), target.shared,
                                    target.tail, target.logits0,
                                    tokens=s)
+                if self.tracer is not None:
+                    sid = self.tracer.span(
+                        "prefill_chunk", self._trace_id(row),
+                        self.now,
+                        key=None if mx is None else ("m", mx.member),
+                        model=parent.model_name, start=0, tokens=s,
+                        oneshot=1)
+                    self.tracer.kv_insert(
+                        parent.model_name,
+                        hashlib.sha256(row.ids.tobytes()).hexdigest(),
+                        self._trace_id(row), sid)
+        if self.tracer is not None:
+            self.metrics.observe(
+                "acar_span_duration", time.perf_counter() - t0,
+                phase="prefill",
+                help="host wall seconds per traced lifecycle phase")
         return self.planner.chunk_count(s)
 
     def _run_decode_group(self, key, items) -> int:
         import jax.numpy as jnp
         _, temperature, cache_len = key
+        t0 = time.perf_counter() if self.tracer is not None else 0.0
         parent = items[0][0].parent
         nsh = parent.n_shards
         nb = items[0][0].table_width(cache_len - self.max_new,
@@ -1863,6 +2146,28 @@ class ShardedStepLoopRunner(StepLoopRunner):
             for i, (row, lane) in enumerate(per[k]):
                 self._replay_megastep(lane, emits[k], dones[k], kl, i)
                 lane.logits = nl_local[k][0, i]
+        if self.tracer is not None:
+            for k in range(nsh):
+                for row, lane in per[k]:
+                    probe = lane.tag < 100
+                    self.tracer.span(
+                        "probe_decode" if probe else "member_decode",
+                        self._trace_id(row), self.now,
+                        key=("p", lane.tag) if probe
+                        else ("m", lane.tag - 100),
+                        member=None if probe else lane.tag - 100,
+                        model=parent.model_name, ticks=kl,
+                        steps=lane.steps, done=int(lane.done))
+            d = time.perf_counter() - t0
+            self.metrics.observe(
+                "acar_span_duration", d,
+                phase="probe_decode" if items[0][2].tag < 100
+                else "ensemble_decode",
+                help="host wall seconds per traced lifecycle phase")
+            self.metrics.observe(
+                "acar_decode_launch_seconds", d,
+                server=parent.model_name,
+                help="wall seconds per megastep decode launch")
         if self.journal is not None:
             self.journal.emit(self.now, parent.model_name, [
                 [row.admission, lane.tag, lane.steps, int(lane.done),

@@ -350,6 +350,57 @@ def test_crash_recover_is_bit_identical(tmp_path):
     assert base.probe_texts == res.probe_texts
 
 
+@pytest.mark.slow
+def test_recover_preserves_schedule_side_channel(tmp_path):
+    """The non-hashed scheduling metadata (per-row arrival / admitted /
+    retired ticks, journaled alongside each retirement) survives
+    ``recover()``: restored rows carry their journaled timeline
+    verbatim, while re-executed rows regenerate theirs from actual
+    re-execution — a recovered run never fabricates scheduling history
+    for work it re-ran."""
+    from repro.configs.acar import ACARConfig
+    from repro.serving import BatchedACAREngine, MicroBatchPolicy
+    tasks = _tasks(10, seed=6)
+    probe, ensemble = _zoo()
+    acfg = ACARConfig(probe_temperature=0.9, seed=0)
+    policy = MicroBatchPolicy(max_batch_size=4,
+                              max_batch_tokens=1 << 20)
+
+    def _eng():
+        return BatchedACAREngine(acfg, probe, ensemble,
+                                 max_new_tokens=4)
+
+    base = _eng().run_stepped(tasks, policy, chunk_tokens=7)
+    jp = tmp_path / "journal.jsonl"
+    with pytest.raises(SimulatedCrash):
+        _eng().run_stepped(
+            tasks, policy, chunk_tokens=7, journal_path=jp,
+            faults=FaultPlan.crash_at(base.step.ticks * 3 // 4))
+    state = StepJournal.load(jp)
+    assert state.retired                  # crash landed mid-stream
+    res = _eng().recover(tasks, policy, journal_path=jp,
+                         chunk_tokens=7)
+    assert res.restored_rows == len(state.retired)
+
+    # restored rows: the journaled timeline verbatim — which is also
+    # the uninterrupted run's (the killed run was identical up to the
+    # crash), not the restore tick
+    for adm, rec in state.retired.items():
+        assert res.step.timeline[adm] == tuple(rec["timeline"])
+        assert res.step.timeline[adm] == base.step.timeline[adm]
+
+    # re-executed rows: no journal entry to copy — arrival comes from
+    # the (deterministic) stream and admission/retirement ticks are
+    # real ticks the recovered run actually stepped through
+    reexec = [a for a in base.step.timeline if a not in state.retired]
+    assert reexec
+    for adm in reexec:
+        arr, admitted, retired = res.step.timeline[adm]
+        assert arr == base.step.timeline[adm][0]
+        assert 0 <= admitted <= retired
+    assert len(res.step.timeline) == len(tasks)
+
+
 # ----------------------------------------------------------------------
 # chaos property: random seeded fault plans
 # ----------------------------------------------------------------------

@@ -229,3 +229,58 @@ def test_quant_pages_roundtrip_bit_equals_dense_quant(s):
                 np.asarray(cache["layers"][name][:, 0, int(pos)]),
                 name)
         tok = jnp.argmax(lg_d, axis=-1).astype(jnp.int32)
+
+
+def test_quant_prefix_cache_hit_roundtrips_bitwise():
+    """The cross-request prefix LRU serves quant layouts (int8 codes +
+    scale planes are position-independent, so retained pages are
+    directly reusable): a second probe wave over an identical prompt
+    hits the cache instead of re-prefilling, the retained code/scale
+    pages hold exactly the dense quant cache's bytes before and after
+    the hit (COW keeps them immutable), and the hit wave decodes to
+    the same tokens as the miss wave."""
+    cfg, prm = _model("quant")
+    s, m, n = 9, MAX_NEW, 2
+    ids = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(300), (1, s), 0, cfg.vocab_size), np.int32)
+    _, cache = T.prefill(cfg, prm, jnp.asarray(ids), cache_len=s + m)
+
+    srv = PagedKVServer(cfg, page_size=PAGE, prefix_cache_entries=4)
+    key = jax.random.PRNGKey(13)
+    out1, h1 = srv.probe_wave(prm, ids, n, max_new_tokens=m,
+                              temperature=0.0, key=key,
+                              eos_id=-1, pad_id=0)
+    h1.close()
+    assert srv.stats.prefill_tokens_reused_prefix == 0
+    entry = srv._prefix_lookup(ids[0].tobytes())
+    assert entry is not None
+
+    row_pages = list(entry.shared) + (
+        [entry.tail] if entry.tail is not None else [])
+
+    def _gathered(name):
+        leaf = srv.pages[name]
+        flat = np.asarray(leaf[:, np.asarray(row_pages)])
+        flat = flat.reshape((leaf.shape[0], len(row_pages) * PAGE)
+                            + flat.shape[3:])
+        return flat[:, :s]
+
+    names = ("k", "v", "k_scale", "v_scale")
+    for name in names:
+        np.testing.assert_array_equal(
+            _gathered(name),
+            np.asarray(cache["layers"][name][:, 0, :s]), name)
+    snap = {name: _gathered(name).copy() for name in names}
+
+    computed = srv.stats.prefill_tokens_computed
+    out2, h2 = srv.probe_wave(prm, ids, n, max_new_tokens=m,
+                              temperature=0.0, key=key,
+                              eos_id=-1, pad_id=0)
+    h2.close()
+    assert srv.stats.prefill_tokens_computed == computed
+    assert srv.stats.prefill_tokens_reused_prefix == s
+    np.testing.assert_array_equal(out1.tokens, out2.tokens)
+    np.testing.assert_array_equal(out1.logprobs, out2.logprobs)
+    for name in names:
+        np.testing.assert_array_equal(_gathered(name), snap[name],
+                                      name)

@@ -1,0 +1,148 @@
+"""PromCounters registry: kind safety, HELP landing, histograms.
+
+Regression coverage for the metric-kind clobbering bug (a name used by
+both ``inc`` and ``set_gauge`` silently flipped the rendered TYPE to
+gauge and dropped the counter semantics — now a ``ValueError``), plus
+the histogram exposition added for span latencies
+(``acar_span_duration{phase}``): cumulative ``_bucket`` series with a
+``+Inf`` bound, ``_sum``/``_count``, deterministic ordering, and
+fixed-per-name bucket bounds.
+"""
+import pytest
+
+from repro.serving.metrics import DEFAULT_BUCKETS, PromCounters
+
+
+# ----------------------------------------------------------------------
+# metric-kind registry
+# ----------------------------------------------------------------------
+def test_counter_then_gauge_same_name_raises():
+    m = PromCounters()
+    m.inc("acar_things_total")
+    with pytest.raises(ValueError, match="already registered"):
+        m.set_gauge("acar_things_total", 3.0)
+    # the counter series is intact after the rejected call
+    assert m.get("acar_things_total") == 1.0
+    assert "# TYPE acar_things_total counter" in m.render()
+
+
+def test_gauge_then_counter_same_name_raises():
+    m = PromCounters()
+    m.set_gauge("acar_depth", 7.0)
+    with pytest.raises(ValueError, match="already registered as gauge"):
+        m.inc("acar_depth")
+    assert m.get("acar_depth") == 7.0
+
+
+def test_histogram_cross_kind_raises_both_ways():
+    m = PromCounters()
+    m.observe("acar_lat", 0.1)
+    with pytest.raises(ValueError, match="histogram"):
+        m.inc("acar_lat")
+    m2 = PromCounters()
+    m2.inc("acar_lat")
+    with pytest.raises(ValueError, match="counter"):
+        m2.observe("acar_lat", 0.1)
+
+
+def test_same_kind_reuse_is_fine():
+    m = PromCounters()
+    m.inc("acar_ok_total", mode=0)
+    m.inc("acar_ok_total", 2.0, mode=1)
+    m.set_gauge("acar_fill", 0.5, bucket=4)
+    m.set_gauge("acar_fill", 0.9, bucket=4)
+    assert m.get("acar_ok_total", mode="1") == 2.0
+    assert m.get("acar_fill", bucket="4") == 0.9
+
+
+def test_late_help_lands_when_first_call_passed_none():
+    m = PromCounters()
+    m.inc("acar_late_total")                 # no help text yet
+    assert "# HELP acar_late_total" not in m.render()
+    m.inc("acar_late_total", help="counts late things")
+    assert "# HELP acar_late_total counts late things" in m.render()
+
+
+def test_first_nonempty_help_wins():
+    m = PromCounters()
+    m.inc("acar_h_total", help="first")
+    m.inc("acar_h_total", help="second")
+    assert "# HELP acar_h_total first" in m.render()
+    assert "second" not in m.render()
+
+
+# ----------------------------------------------------------------------
+# histograms
+# ----------------------------------------------------------------------
+def test_histogram_renders_cumulative_buckets_sum_count():
+    m = PromCounters()
+    b = (0.01, 0.1, 1.0)
+    for v in (0.005, 0.05, 0.5, 5.0):
+        m.observe("acar_span_duration", v, buckets=b, phase="judge",
+                  help="per-phase wall seconds")
+    text = m.render()
+    assert "# TYPE acar_span_duration histogram" in text
+    assert "# HELP acar_span_duration per-phase wall seconds" in text
+    # cumulative counts: 1 <= 0.01, 2 <= 0.1, 3 <= 1, all 4 <= +Inf
+    assert 'acar_span_duration_bucket{phase="judge",le="0.01"} 1' \
+        in text
+    assert 'acar_span_duration_bucket{phase="judge",le="0.1"} 2' \
+        in text
+    assert 'acar_span_duration_bucket{phase="judge",le="1"} 3' in text
+    assert 'acar_span_duration_bucket{phase="judge",le="+Inf"} 4' \
+        in text
+    assert 'acar_span_duration_sum{phase="judge"} 5.555' in text
+    assert 'acar_span_duration_count{phase="judge"} 4' in text
+
+
+def test_histogram_unlabelled_series_renders_bare_suffixes():
+    m = PromCounters()
+    m.observe("acar_d", 0.2, buckets=(1.0,))
+    text = m.render()
+    assert 'acar_d_bucket{le="1"} 1' in text
+    assert "acar_d_sum 0.2" in text
+    assert "acar_d_count 1" in text
+
+
+def test_histogram_bucket_bounds_are_fixed_per_name():
+    m = PromCounters()
+    m.observe("acar_lat", 0.1, buckets=(0.1, 1.0))
+    m.observe("acar_lat", 0.2, buckets=(0.1, 1.0))   # same: fine
+    with pytest.raises(ValueError, match="buckets"):
+        m.observe("acar_lat", 0.2, buckets=(0.5, 2.0))
+
+
+def test_get_histogram_sum_count():
+    m = PromCounters()
+    assert m.get_histogram("acar_missing") == (0.0, 0.0)
+    m.observe("acar_lat", 0.25, phase="route")
+    m.observe("acar_lat", 0.75, phase="route")
+    s, c = m.get_histogram("acar_lat", phase="route")
+    assert (s, c) == (1.0, 2.0)
+    # other label sets are independent series
+    assert m.get_histogram("acar_lat", phase="judge") == (0.0, 0.0)
+
+
+def test_default_buckets_cover_sub_ms_to_seconds():
+    assert DEFAULT_BUCKETS[0] <= 0.001
+    assert DEFAULT_BUCKETS[-1] >= 5.0
+    assert list(DEFAULT_BUCKETS) == sorted(DEFAULT_BUCKETS)
+
+
+def test_render_is_deterministic_across_insertion_order():
+    a, b = PromCounters(), PromCounters()
+    a.inc("acar_x_total", mode=1)
+    a.observe("acar_lat", 0.3, phase="judge")
+    a.observe("acar_lat", 0.01, phase="route")
+    a.inc("acar_x_total", mode=0)
+    b.observe("acar_lat", 0.01, phase="route")
+    b.inc("acar_x_total", mode=0)
+    b.inc("acar_x_total", mode=1)
+    b.observe("acar_lat", 0.3, phase="judge")
+    assert a.render() == b.render()
+
+
+def test_histogram_label_values_escaped():
+    m = PromCounters()
+    m.observe("acar_lat", 0.1, buckets=(1.0,), model='we"ird\nname')
+    assert 'model="we\\"ird\\nname"' in m.render()
